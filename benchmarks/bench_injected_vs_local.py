@@ -1,0 +1,87 @@
+"""Paper Fig. 7/8 — Injected vs Local function invocation vs payload size.
+
+Local:    frame = header + token payload; the expert FFN weights are
+          GOT-resident on the receiver (the Local Function shared library).
+Injected: frame additionally carries the expert weights in STATE (the
+          paper's 1408-byte code section, here d*f bf16 state bytes);
+          the receiver unpacks and runs them.
+
+Byte-faithful: both paths move real packed int32 frames through
+core.message / core.injection and execute the jam on the "receiver".
+
+derived: message bytes both modes + latency loss % of Injected vs Local.
+The paper's observation to reproduce: ~40% loss at small payloads,
+converging toward 0% once payload >> state (Fig. 7: Indirect Put converges
+at ~1024 ints; Server-Side Sum, smaller code, converges at ~64).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import injection
+from repro.core.message import FrameSpec, pack_frame, unpack_frame
+from benchmarks.common import Row, time_fn
+
+D_MODEL, D_FF = 32, 64                     # jam-sized expert (4 KiB state)
+PAYLOAD_TOKENS = (1, 8, 64, 256, 1024)
+
+
+def main() -> List[Row]:
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 4)
+    wg = jax.random.normal(ks[0], (D_MODEL, D_FF), jnp.bfloat16) * 0.1
+    wu = jax.random.normal(ks[1], (D_MODEL, D_FF), jnp.bfloat16) * 0.1
+    wd = jax.random.normal(ks[2], (D_FF, D_MODEL), jnp.bfloat16) * 0.1
+    state = injection.expert_state_words(wg, wu, wd)
+
+    def expert(wg_, wu_, wd_, x):
+        h = jax.nn.silu(x @ wg_) * (x @ wu_)
+        return h @ wd_
+
+    rows: List[Row] = []
+    for n_tok in PAYLOAD_TOKENS:
+        x = (jax.random.normal(ks[3], (n_tok, D_MODEL)) * 0.3).astype(jnp.bfloat16)
+        payload = injection.tokens_to_words(x)
+        pw = payload.shape[0]
+
+        spec_local = FrameSpec(got_slots=4, state_words=0, payload_words=pw)
+        spec_inj = injection.injected_frame_spec(D_MODEL, D_FF, n_tok)
+
+        @jax.jit
+        def local_roundtrip(payload):
+            # pack -> deliver -> execute with RECEIVER-resident weights
+            frame = pack_frame(spec_local, func_id=1, payload_words=payload)
+            f = unpack_frame(spec_local, frame)
+            xs = injection.words_to_tokens(f["usr"], n_tok, D_MODEL)
+            return expert(wg, wu, wd, xs)       # closure = GOT residency
+
+        @jax.jit
+        def injected_roundtrip(payload, state):
+            # pack (weights in STATE) -> deliver -> unpack weights -> execute
+            frame = pack_frame(spec_inj, func_id=1, flags=1,
+                               state_words=state, payload_words=payload)
+            f = unpack_frame(spec_inj, frame)
+            wg_, wu_, wd_ = injection.unpack_expert_state(
+                f["state"], D_MODEL, D_FF)
+            xs = injection.words_to_tokens(f["usr"], n_tok, D_MODEL)
+            return expert(wg_, wu_, wd_, xs)
+
+        t_local = time_fn(lambda: local_roundtrip(payload))
+        t_inj = time_fn(lambda: injected_roundtrip(payload, state))
+        loss_pct = 100.0 * (t_inj - t_local) / max(t_local, 1e-9)
+        rows.append(Row(
+            f"injected_vs_local/local/{n_tok}tok", t_local,
+            f"msg={spec_local.total_bytes}B"))
+        rows.append(Row(
+            f"injected_vs_local/injected/{n_tok}tok", t_inj,
+            f"msg={spec_inj.total_bytes}B state={4*spec_inj.state_words}B "
+            f"loss={loss_pct:+.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

@@ -1,0 +1,64 @@
+"""§Roofline — per-cell roofline terms from the compiled dry-run artifacts.
+
+Reads the JSON rows produced by ``launch/dryrun.py --all --out ...`` (the
+heavyweight 512-device lower+compile runs) and reports one row per cell:
+us_per_call = roofline step lower bound (max of the 3 terms), derived =
+the 3 terms + bottleneck + roofline fraction. If the JSON files are absent
+it says so rather than silently passing.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import List
+
+from benchmarks.common import Row
+
+FILES = ("dryrun_single.json", "dryrun_multi.json")
+
+
+def load_rows(path: str) -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    # keep the newest row per (arch, shape, mesh)
+    dedup = {}
+    for r in out:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    return list(dedup.values())
+
+
+def main() -> List[Row]:
+    rows: List[Row] = []
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for fname in FILES:
+        path = os.path.join(root, fname)
+        if not os.path.exists(path):
+            rows.append(Row(f"roofline/{fname}", 0.0,
+                            "MISSING - run launch/dryrun.py --all first"))
+            continue
+        for r in sorted(load_rows(path),
+                        key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+            name = f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}"
+            if r["status"] == "skipped":
+                rows.append(Row(name, 0.0, f"skipped: {r['reason']}"))
+            elif r["status"] == "failed":
+                rows.append(Row(name, 0.0, f"FAILED: {r['error'][:80]}"))
+            else:
+                rf = r["roofline"]
+                rows.append(Row(
+                    name, rf["step_s"] * 1e6,
+                    f"compute={rf['compute_s']*1e3:.2f}ms "
+                    f"memory={rf['memory_s']*1e3:.2f}ms "
+                    f"collective={rf['collective_s']*1e3:.2f}ms "
+                    f"bottleneck={rf['bottleneck']} "
+                    f"frac={rf['roofline_frac']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

@@ -1,0 +1,71 @@
+"""Paper Fig. 9/10 — cache stashing (VMEM-fused) vs DRAM path.
+
+TPU mapping (DESIGN.md §2): "stash" = the moe_jam Pallas kernel runs the
+whole gate/up/act/down chain on the VMEM-resident tile (arriving data is
+consumed in near memory); "non-stash" = the unfused chain materializes
+g/u/h intermediates to HBM between ops.
+
+derived: analytic HBM bytes per expert invocation for both paths and the
+ratio — the roofline-memory-term version of the paper's 31% latency /
+1.9x rate win. CPU µs is also reported (interpret-mode kernel, so the µs
+column is structural only for this one; the bytes column is the result).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_jam import moe_jam_ffn, moe_jam_ffn_ref
+from benchmarks.common import Row, time_fn
+
+SHAPES = (
+    # (E, C, D, F)
+    (4, 64, 128, 512),
+    (8, 128, 256, 1024),
+)
+
+
+def hbm_bytes(e, c, d, f, dtype_bytes=2):
+    """Per-invocation HBM traffic (reads + writes), both paths."""
+    w = 3 * d * f * dtype_bytes                    # weights read once/expert
+    x = c * d * dtype_bytes
+    y = c * d * dtype_bytes
+    inter = c * f * dtype_bytes                    # one intermediate tensor
+    # unfused: x->g (r x, w g), x->u (r x, w u), (g,u)->h (r 2, w 1),
+    #          h->y (r h, w y); weights read per op
+    unfused = e * (w + 2 * x + y + 6 * inter)
+    # fused kernel: read x once, weights once, write y once
+    fused = e * (w + x + y)
+    return fused, unfused
+
+
+def main() -> List[Row]:
+    rows: List[Row] = []
+    for (e, c, d, f) in SHAPES:
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        x = (jax.random.normal(ks[0], (e, c, d)) * 0.3).astype(jnp.bfloat16)
+        wg = (jax.random.normal(ks[1], (e, d, f)) * 0.05).astype(jnp.bfloat16)
+        wu = (jax.random.normal(ks[2], (e, d, f)) * 0.05).astype(jnp.bfloat16)
+        wd = (jax.random.normal(ks[3], (e, f, d)) * 0.05).astype(jnp.bfloat16)
+
+        t_stash = time_fn(
+            lambda: moe_jam_ffn(x, wg, wu, wd, block_c=64, block_f=256),
+            iters=5, max_s=6.0)
+        t_plain = time_fn(lambda: moe_jam_ffn_ref(x, wg, wu, wd), iters=5,
+                          max_s=6.0)
+        fused, unfused = hbm_bytes(e, c, d, f)
+        name = f"stashing/E{e}xC{c}xD{d}xF{f}"
+        rows.append(Row(f"{name}/nonstash_hbm", t_plain,
+                        f"hbm={unfused/2**20:.2f}MiB"))
+        rows.append(Row(
+            f"{name}/stash_vmem", t_stash,
+            f"hbm={fused/2**20:.2f}MiB saving={unfused/fused:.2f}x "
+            f"(memory-term reduction)"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

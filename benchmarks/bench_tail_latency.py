@@ -1,0 +1,69 @@
+"""Paper Fig. 11/12 — tail latency on a loaded system.
+
+stress-ng analogue: deterministic per-step jitter injected into the train
+loop (runtime.fault.FaultInjector.jitter_ms) models co-located memory/paging
+pressure. We train the smoke MoE model and report p50 / p99.9 / tail-spread
+(Eq. 1 of the paper) for a quiet system vs a loaded one, and loaded-with-
+mitigation (straggler-aware EWMA monitor flags the slow steps; at scale the
+flagged host is the re-mesh candidate — here flagging evidence is counted).
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+from typing import List
+
+import jax
+
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
+                                ShardingConfig)
+from repro.configs.registry import get_smoke
+from repro.runtime.fault import FaultInjector
+from repro.runtime.trainer import Trainer, TrainerConfig
+from benchmarks.common import Row
+
+STEPS = 60
+
+
+def _run(jitter_ms, tmp) -> "StepStats":
+    cfg = get_smoke("olmoe-1b-7b")
+    run = RunConfig(model=cfg, shape=ShapeConfig("tiny", 32, 4, "train"),
+                    sharding=ShardingConfig(fsdp_params=False),
+                    optimizer=OptimizerConfig(total_steps=STEPS,
+                                              warmup_steps=2),
+                    checkpoint_dir=tmp)
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    inj = FaultInjector(jitter_ms=jitter_ms) if jitter_ms else None
+    with mesh:
+        t = Trainer(cfg, run, mesh,
+                    tcfg=TrainerConfig(steps=STEPS, checkpoint_every=10**6,
+                                       log_every=10**6),
+                    injector=inj, log_fn=lambda s: None)
+        stats = t.train()
+    return stats
+
+
+def main() -> List[Row]:
+    rows: List[Row] = []
+    # every 10th step takes a large hit; half the steps take a small one —
+    # roughly what stress-ng --class vm does to a co-located process
+    loaded = tuple((25.0 if i % 10 == 9 else (2.0 if i % 2 else 0.0))
+                   for i in range(10))
+    for name, jitter in (("quiet", ()), ("loaded", loaded)):
+        tmp = tempfile.mkdtemp(prefix="bench_tail_")
+        try:
+            stats = _run(jitter, tmp)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+        rows.append(Row(
+            f"tail_latency/{name}/p50", stats.p50_s * 1e6,
+            f"p99.9={stats.p999_s*1e6:.0f}us "
+            f"tail_spread={100*stats.tail_spread:.0f}% "
+            f"stragglers_flagged={stats.stragglers}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

@@ -1,0 +1,80 @@
+"""Paper Fig. 13/14 — WFE (hardware wait) vs spin-polling cycle cost.
+
+TPU mapping: WFE = DMA-semaphore wait (``rdma.wait_recv()`` — zero spin
+iterations); Polling = ``lax.while_loop`` on the mailbox SIG word. The cycle
+proxy (no counters in interpret mode) = executed wait-loop iterations x ops
+per iteration, counted from the loop body jaxpr. Latency is CPU µs of the
+full wait+drain for both modes — the paper's result to reproduce is
+"large cycle reduction, ~0 latency cost".
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.got import GotTable
+from repro.core.mailbox import spin_wait_poll, wfe_wait
+from repro.core.message import FrameSpec, pack_frame
+from repro.core.registry import JamPackage
+from benchmarks.common import Row, time_fn
+
+PAYLOADS = (64, 1024, 8192)            # words: 256B, 4KB, 32KB frames
+
+
+def _ops_per_spin(spec: FrameSpec) -> int:
+    """Primitive ops in one poll iteration (cond + body jaxprs)."""
+    frames = jnp.zeros((1, spec.total_words), jnp.int32)
+    jaxpr = jax.make_jaxpr(
+        lambda f: spin_wait_poll(f, spec, max_spins=4))(frames)
+    [wl] = [e for e in jaxpr.jaxpr.eqns if e.primitive.name == "while"]
+    return (len(wl.params["cond_jaxpr"].jaxpr.eqns)
+            + len(wl.params["body_jaxpr"].jaxpr.eqns))
+
+
+def main() -> List[Row]:
+    rows: List[Row] = []
+    got = GotTable()
+    for pw in PAYLOADS:
+        spec = FrameSpec(got_slots=4, state_words=0, payload_words=pw)
+        pkg = JamPackage("bench", spec, result_words=16)
+
+        @pkg.register("sum")
+        def jam_sum(g, s, usr):
+            return jnp.broadcast_to(jnp.sum(usr)[None], (16,)).astype(jnp.int32)
+
+        dispatch = pkg.build_dispatcher(got)
+        frame = pkg.pack("sum", got,
+                         payload_words=jnp.arange(pw, dtype=jnp.int32))
+        frames = frame[None]
+
+        @jax.jit
+        def wait_poll_and_drain(frames):
+            spins, found = spin_wait_poll(frames, spec)
+            return spins, dispatch(frames[0])
+
+        @jax.jit
+        def wait_wfe_and_drain(frames):
+            spins, found = wfe_wait(frames, spec)
+            return spins, dispatch(frames[0])
+
+        t_poll = time_fn(lambda: wait_poll_and_drain(frames))
+        t_wfe = time_fn(lambda: wait_wfe_and_drain(frames))
+        spins = int(wait_poll_and_drain(frames)[0])
+        ops = _ops_per_spin(spec)
+        cyc_poll = max(1, spins * ops)
+        cyc_wfe = 1                              # semaphore block: no spins
+        rows.append(Row(
+            f"wfe/poll/{4*pw}B", t_poll,
+            f"spin_ops={cyc_poll} ({spins} spins x {ops} ops)"))
+        rows.append(Row(
+            f"wfe/wfe/{4*pw}B", t_wfe,
+            f"spin_ops={cyc_wfe} reduction={cyc_poll/cyc_wfe:.1f}x "
+            f"lat_delta={100.0*(t_wfe-t_poll)/max(t_poll,1e-9):+.1f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+    emit(main())

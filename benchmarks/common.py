@@ -1,0 +1,46 @@
+"""Benchmark harness plumbing: timing + CSV row emission.
+
+Every bench_* module exposes ``main() -> list[Row]``; ``run.py`` aggregates.
+CPU wall-clock here is *rank-correlated* evidence (the real target is TPU —
+see DESIGN.md §2 assumption 3); byte/op-count "derived" columns are the
+hardware-independent reproduction of each paper figure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List
+
+import jax
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def time_fn(fn: Callable[[], object], *, warmup: int = 3, iters: int = 20,
+            max_s: float = 10.0) -> float:
+    """Median wall-clock microseconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    times = []
+    t_start = time.perf_counter()
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        times.append(time.perf_counter() - t0)
+        if time.perf_counter() - t_start > max_s:
+            break
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows: List[Row]) -> None:
+    for r in rows:
+        print(r.csv(), flush=True)

@@ -1,0 +1,61 @@
+"""Benchmark harness entry point — one bench module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--only substr]
+
+Prints ``name,us_per_call,derived`` CSV (stdout), one row per measurement.
+Paper figure -> module map (DESIGN.md §7):
+
+  Fig 5/6   bench_mailbox_overhead    AM put vs raw put, without-execution
+  Fig 7/8   bench_injected_vs_local   code-in-message vs resident function
+  Fig 9/10  bench_stashing            VMEM-fused vs HBM-roundtrip execution
+  Fig 11/12 bench_tail_latency        p50/p99.9/tail-spread under load
+  Fig 13/14 bench_wfe                 semaphore wait vs spin-poll cycles
+  §Roofline bench_roofline            3-term roofline per dry-run cell
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_injected_vs_local, bench_mailbox_overhead,
+                        bench_roofline, bench_stashing, bench_tail_latency,
+                        bench_wfe)
+
+MODULES = (
+    ("fig5_6", bench_mailbox_overhead),
+    ("fig7_8", bench_injected_vs_local),
+    ("fig9_10", bench_stashing),
+    ("fig11_12", bench_tail_latency),
+    ("fig13_14", bench_wfe),
+    ("roofline", bench_roofline),
+)
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--only", default=None,
+                   help="run only modules whose tag contains this substring")
+    args = p.parse_args()
+
+    print("name,us_per_call,derived")
+    failed = []
+    for tag, mod in MODULES:
+        if args.only and args.only not in tag:
+            continue
+        t0 = time.time()
+        try:
+            for row in mod.main():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001 - report, keep harness going
+            failed.append(tag)
+            print(f"{tag},0.00,ERROR {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+        print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~120M-param MoE LM for a few hundred steps.
+
+The model is a scaled-down OLMoE-family config (8 experts, top-2) with the
+Two-Chains jam transport as its MoE layer; training runs through the full
+production stack — data pipeline, AdamW, fault-tolerant trainer, async
+checkpointing — on whatever devices exist (CPU here, a pod in production).
+
+Run:  PYTHONPATH=src python examples/train_moe.py --steps 300
+(≈100M params is heavy for CPU; --d-model 128 --steps 50 for a fast pass.)
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, RunConfig, ShapeConfig,
+                                ShardingConfig)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def model_config(d_model: int, layers: int) -> ModelConfig:
+    return ModelConfig(
+        name="moe-demo",
+        family="moe",
+        num_layers=layers,
+        d_model=d_model,
+        d_ff=0,
+        vocab_size=16384,
+        attention=AttentionConfig(num_heads=8, num_kv_heads=4,
+                                  head_dim=d_model // 8),
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=2 * d_model,
+                      capacity_factor=1.5, transport="local"),
+        remat="none",
+    )
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--steps", type=int, default=300)
+    p.add_argument("--d-model", type=int, default=512)
+    p.add_argument("--layers", type=int, default=12)
+    p.add_argument("--batch", type=int, default=8)
+    p.add_argument("--seq", type=int, default=256)
+    p.add_argument("--ckpt", default="/tmp/repro_train_moe")
+    args = p.parse_args()
+
+    cfg = model_config(args.d_model, args.layers)
+    print(f"[train_moe] {cfg.param_count()/1e6:.1f}M params "
+          f"({cfg.active_param_count()/1e6:.1f}M active/token), "
+          f"{args.steps} steps @ batch={args.batch} seq={args.seq}")
+
+    run = RunConfig(
+        model=cfg,
+        shape=ShapeConfig("demo", args.seq, args.batch, "train"),
+        sharding=ShardingConfig(fsdp_params=False),
+        optimizer=OptimizerConfig(lr=6e-4, total_steps=args.steps,
+                                  warmup_steps=max(1, args.steps // 20)),
+        checkpoint_dir=args.ckpt)
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((1, n), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        trainer = Trainer(cfg, run, mesh,
+                          tcfg=TrainerConfig(steps=args.steps,
+                                             log_every=max(1, args.steps // 20),
+                                             checkpoint_every=100))
+        stats = trainer.train()
+    import math
+    print(f"[train_moe] done: loss {stats.final_metrics['loss']:.4f} "
+          f"(uniform would be {math.log(cfg.vocab_size):.2f}), "
+          f"p50 step {stats.p50_s*1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

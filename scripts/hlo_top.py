@@ -1,0 +1,97 @@
+"""Top cost contributors of a dumped dry-run HLO — the §Perf profiling lens.
+
+  PYTHONPATH=src python scripts/hlo_top.py /tmp/dryrun_hlo_<cell>.txt [N]
+
+Prints the N largest byte- and flop-contributing instructions with their
+computation, multiplicity, and shapes — what a TPU profiler's top-ops view
+would show, reconstructed from the compiled HLO (launch/hlo_cost.py).
+"""
+from __future__ import annotations
+
+import sys
+
+from repro.launch import hlo_cost as H
+
+
+def main() -> None:
+    path = sys.argv[1]
+    n = int(sys.argv[2]) if len(sys.argv) > 2 else 15
+    txt = open(path).read()
+    comps = H.parse_module(txt)
+    mult, trips = H._multiplicities(comps)
+    inline = H._inline_bodies(comps)
+    shape_of = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shape_of[f"{comp.name}/{ins.name}"] = ins.type_str
+            shape_of.setdefault(ins.name, ins.type_str)
+
+    def optype(comp, name):
+        return shape_of.get(f"{comp.name}/{name}", shape_of.get(name, ""))
+
+    byte_rows, flop_rows, coll_rows = [], [], []
+    for comp in comps.values():
+        m = mult.get(comp.name, 0)
+        if m <= 0:
+            continue
+        for ins in comp.instrs:
+            if ins.opcode == "dot":
+                out = H._first_shape(ins.type_str)
+                ops = ins.operands()
+                lhs = H._first_shape(optype(comp, ops[0])) if ops else None
+                mm = H._CONTRACT_RE.search(ins.rest)
+                contract = 1
+                if mm and mm.group(1) and lhs:
+                    for d in mm.group(1).split(","):
+                        if d and int(d) < len(lhs[1]):
+                            contract *= lhs[1][int(d)]
+                import math
+                fl = 2 * math.prod(out[1] or (1,)) * contract if out else 0
+                flop_rows.append((m * fl, fl, m, comp.name, ins.name,
+                                  ins.type_str[:44]))
+            base = ins.opcode
+            for sfx in ("-start", "-done"):
+                if base.endswith(sfx):
+                    base = base[:-len(sfx)]
+            if base in H.COLLECTIVE_OPS and not ins.opcode.endswith("-done"):
+                b = sum(H._type_bytes(optype(comp, o))
+                        for o in ins.operands()) or H._type_bytes(ins.type_str)
+                coll_rows.append((m * b, b, m, comp.name,
+                                  f"{base}:{ins.name}", ins.type_str[:44]))
+            if (ins.opcode in H._NO_BYTES or comp.name in inline
+                    or ins.opcode.endswith("-done")):
+                continue
+            if ins.opcode in ("dynamic-slice", "gather", "slice"):
+                b = 2 * H._type_bytes(ins.type_str)
+            elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                ops = ins.operands()
+                upd = (H._type_bytes(optype(comp, ops[1]))
+                       if len(ops) > 1 else 0)
+                b = H._type_bytes(ins.type_str) + 2 * upd
+            elif ins.opcode == "fusion":
+                called = None
+                for _, cn in H._CALL_KIND_RE.findall(ins.rest):
+                    called = comps.get(cn)
+                    break
+                opt = [optype(comp, o) for o in ins.operands()]
+                b = (H._fusion_io_bytes(called, opt, ins.type_str)
+                     if called else 0)
+            else:
+                b = H._type_bytes(ins.type_str) + sum(
+                    H._type_bytes(optype(comp, o)) for o in ins.operands())
+            byte_rows.append((m * b, b, m, comp.name, ins.opcode + ":" + ins.name,
+                              ins.type_str[:44]))
+
+    for title, rows, unit in (("BYTES", byte_rows, 1e9),
+                              ("FLOPS", flop_rows, 1e12),
+                              ("COLLECTIVE BYTES", coll_rows, 1e9)):
+        rows.sort(reverse=True)
+        total = sum(r[0] for r in rows)
+        print(f"\n==== {title}: total {total:.3e} ====")
+        for r in rows[:n]:
+            print(f"{r[0]:.2e} | per {r[1]:.2e} | m {r[2]:6.0f} | "
+                  f"{r[3][:34]:34s} | {r[4][:40]:40s} | {r[5]}")
+
+
+if __name__ == "__main__":
+    main()

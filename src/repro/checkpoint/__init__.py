@@ -1,0 +1,4 @@
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore
+from repro.checkpoint.elastic import reshard_restore
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "reshard_restore"]

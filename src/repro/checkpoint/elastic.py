@@ -1,0 +1,48 @@
+"""Elastic restore: resume a checkpoint on a DIFFERENT mesh.
+
+A checkpoint stores unsharded (global) arrays, so elasticity is a placement
+problem, not a data problem: build the sharding rules for the *new* mesh,
+resolve a fresh NamedSharding tree against the same logical axes, and
+device_put each leaf. Shrinking the ``data`` axis after a host failure, or
+growing it when capacity returns, both reduce to this (the paper's ried
+re-installation on a changed set of processes).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import latest_step, restore
+from repro.configs.base import ModelConfig, RunConfig
+from repro.runtime import mesh_util
+
+PyTree = Any
+
+
+def reshard_restore(ckpt_dir: str, cfg: ModelConfig, run: RunConfig,
+                    new_mesh: Mesh, *, step: Optional[int] = None
+                    ) -> Tuple[int, PyTree, PyTree]:
+    """Restore (params, opt_state) onto ``new_mesh``.
+
+    Returns (step, params, opt_state). Raises FileNotFoundError when no
+    committed checkpoint exists.
+    """
+    from repro.runtime.steps import (abstract_opt_state, abstract_params,
+                                     opt_shardings)
+
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+
+    rules = mesh_util.make_rules(run.sharding, new_mesh)
+    params_shapes, axes = abstract_params(cfg)
+    pshard = mesh_util.param_shardings(axes, params_shapes, rules, new_mesh)
+    oshard = opt_shardings(pshard, new_mesh)
+
+    params = restore(ckpt_dir, step, {"params": params_shapes},
+                     {"params": pshard})["params"]
+    opt = restore(ckpt_dir, step, {"opt": abstract_opt_state(params_shapes)},
+                  {"opt": oshard})["opt"]
+    return step, params, opt

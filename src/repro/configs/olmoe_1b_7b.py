@@ -1,0 +1,45 @@
+"""olmoe-1b-7b: MoE, 16L d_model=2048 16H (MHA kv=16) d_ff=1024(expert) vocab=50304.
+
+64 experts, top-8 routing, no shared experts. [arXiv:2409.02060; hf]
+
+This is the flagship Two-Chains arch: each expert is (3*2048*1024)*2B ≈ 12.6 MB
+in bf16 — genuinely jam-sized, so injected-mode (weight-shipping) dispatch is
+profitable for large token batches. ``transport="auto"`` lets core.costmodel
+pick per step (the paper's auto-switch future work).
+"""
+from repro.configs.base import AttentionConfig, ModelConfig, MoEConfig
+
+ARCH_ID = "olmoe-1b-7b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="moe",
+        num_layers=16,
+        d_model=2048,
+        d_ff=0,
+        vocab_size=50304,
+        attention=AttentionConfig(
+            kind="gqa", num_heads=16, num_kv_heads=16, head_dim=128,
+            rope_theta=10000.0,
+        ),
+        moe=MoEConfig(
+            num_experts=64, top_k=8, expert_ff=1024, num_shared=0,
+            transport="auto",
+        ),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="moe",
+        num_layers=2,
+        d_model=64,
+        d_ff=0,
+        vocab_size=256,
+        attention=AttentionConfig(kind="gqa", num_heads=4, num_kv_heads=4, head_dim=16),
+        moe=MoEConfig(num_experts=8, top_k=2, expert_ff=32, transport="auto"),
+        remat="none",
+    )

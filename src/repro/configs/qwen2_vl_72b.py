@@ -1,0 +1,47 @@
+"""qwen2-vl-72b: VLM backbone, 80L d_model=8192 64H (GQA kv=8) d_ff=29568 vocab=152064.
+
+M-RoPE (3-D t/h/w rotary), dynamic resolution. [arXiv:2409.12191; hf]
+
+The vision tower is a STUB per the assignment: ``input_specs()`` provides
+precomputed merged patch embeddings (batch, n_img_tokens, 8192) plus 3-D
+M-RoPE position ids; the backbone splices the image tokens in at fixed
+positions. Backbone only.
+"""
+from repro.configs.base import AttentionConfig, FrontendConfig, ModelConfig
+
+ARCH_ID = "qwen2-vl-72b"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="vlm",
+        num_layers=80,
+        d_model=8192,
+        d_ff=29568,
+        vocab_size=152064,
+        attention=AttentionConfig(
+            kind="gqa", num_heads=64, num_kv_heads=8, head_dim=128,
+            rope_theta=1_000_000.0, mrope=True, mrope_sections=(16, 24, 24),
+        ),
+        frontend=FrontendConfig(kind="vision_patches", feature_dim=8192,
+                                num_patch_tokens=256),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="vlm",
+        num_layers=2,
+        d_model=64,
+        d_ff=128,
+        vocab_size=256,
+        attention=AttentionConfig(
+            kind="gqa", num_heads=4, num_kv_heads=2, head_dim=16,
+            mrope=True, mrope_sections=(2, 3, 3),
+        ),
+        frontend=FrontendConfig(kind="vision_patches", feature_dim=64,
+                                num_patch_tokens=8),
+        remat="none",
+    )

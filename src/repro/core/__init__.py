@@ -1,0 +1,6 @@
+"""Two-Chains core: active-message frames, jam/ried registries, GOT symbol
+binding, reactive mailboxes, and the MoE jam transports (Local / Injected /
+auto) — the paper's primary contribution as a composable JAX module."""
+from repro.core.got import GotTable  # noqa: F401
+from repro.core.message import FrameSpec  # noqa: F401
+from repro.core.registry import JamPackage, RiedPackage  # noqa: F401

@@ -1,0 +1,77 @@
+"""Byte-crossover cost model: Local vs Injected function transport.
+
+This is the paper's Fig. 7/8 trade-off generalized (DESIGN.md §2): a Local
+message ships only payload (tokens); an Injected message additionally ships
+function state (expert weights). Injected wins when the state bytes amortize
+over enough payload — the paper observed convergence at ~64-1024 ints of
+payload for 1408 B of code; for MoE the same crossover appears when
+    tokens_bytes_moved(local) > weights_bytes_moved(injected).
+
+All estimates are per-device per-layer-invocation bytes over the tp axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import MoEConfig
+from repro.models.moe import expert_capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class TransportEstimate:
+    local_bytes: int          # a2a out + back
+    injected_bytes: int       # weight all-gather
+    common_bytes: int         # result all-gather (same both modes)
+    chosen: str
+    n_tokens_per_tp_rank: int
+    capacity: int
+
+    def describe(self) -> str:
+        return (f"local={self.local_bytes/2**20:.2f}MiB "
+                f"injected={self.injected_bytes/2**20:.2f}MiB "
+                f"common={self.common_bytes/2**20:.2f}MiB -> {self.chosen}")
+
+
+def estimate_transport(m: MoEConfig, *, d_model: int,
+                       n_tokens_per_dp_shard: int, tp: int,
+                       dtype_bytes: int = 2,
+                       weight_reuse: int = 1) -> TransportEstimate:
+    """Napkin math for one MoE layer invocation on one device.
+
+    local:    2 x (E*C*d) bucket bytes cross the wire (send + return), of
+              which (tp-1)/tp is actually remote.
+    injected: each rank all-gathers the (E - E_loc) non-resident experts'
+              3 matrices, amortized over ``weight_reuse`` invocations
+              (e.g. gradient-accumulation microbatches reuse the gather).
+    """
+    n_loc = max(1, n_tokens_per_dp_shard // tp)
+    cap = expert_capacity(n_loc, m)
+    e = m.num_experts
+    e_loc = max(1, e // tp)
+    remote_frac = (tp - 1) / tp
+
+    bucket_bytes = e * cap * d_model * dtype_bytes
+    local = int(2 * bucket_bytes * remote_frac)
+
+    expert_bytes = 3 * d_model * m.expert_ff * dtype_bytes
+    injected = int((e - e_loc) * expert_bytes / max(1, weight_reuse))
+
+    common = int(n_loc * d_model * dtype_bytes * remote_frac)  # y all-gather
+
+    chosen = "local" if local <= injected else "injected"
+    return TransportEstimate(local, injected, common, chosen, n_loc, cap)
+
+
+def crossover_tokens(m: MoEConfig, d_model: int, tp: int,
+                     dtype_bytes: int = 2) -> int:
+    """Smallest per-rank token count where Injected beats Local — the
+    Fig. 7/8 crossover point, solved by scanning powers of two."""
+    n = 8
+    while n < 1 << 24:
+        est = estimate_transport(m, d_model=d_model,
+                                 n_tokens_per_dp_shard=n * tp, tp=tp,
+                                 dtype_bytes=dtype_bytes)
+        if est.chosen == "injected":
+            return n
+        n *= 2
+    return -1

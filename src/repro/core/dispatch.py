@@ -1,0 +1,246 @@
+"""Jam transports for MoE expert dispatch — the paper's Local vs Injected
+function invocation, mapped onto expert parallelism (DESIGN.md §3).
+
+  * ``local``    — paper's Local Function: ship *tokens* (payload) to the
+                   resident experts via capacity-bucketed ``all_to_all`` over
+                   the tensor/expert axis. The active message is
+                   (func_id = expert id, USR = token vectors).
+  * ``injected`` — paper's Injected Function: ship *expert weights* (the
+                   function state) to the tokens via ``all_gather``; tokens
+                   never move. Profitable when token bytes >> weight bytes.
+  * ``tp``       — degenerate fallback (no token split possible, e.g. 1
+                   token): every rank computes its local experts' share over
+                   the full token set; combine with ``psum``.
+  * ``auto``     — pick local/injected per shape from ``core.costmodel``
+                   (the paper's future-work auto-switch, §VIII).
+
+All transports produce results numerically identical to
+``models.moe.moe_ffn_oracle`` modulo capacity-drop boundaries (validated in
+tests on a multi-device subprocess).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import MoEConfig
+from repro.core import costmodel
+from repro.models.common import act_fn
+from repro.models.moe import build_dispatch, expert_capacity, expert_ffn, route_topk
+
+
+def _shared_expert(params, xf, act):
+    g = jnp.einsum("nd,df->nf", xf, params["ws_gate"])
+    u = jnp.einsum("nd,df->nf", xf, params["ws_up"])
+    return jnp.einsum("nf,fd->nd", act_fn(act)(g) * u, params["ws_down"])
+
+
+def _combine(out_rows: jax.Array, slot: jax.Array, keep: jax.Array,
+             gates: jax.Array, dtype) -> jax.Array:
+    """Gather expert outputs back to token order and mix with gates."""
+    n, k = slot.shape
+    d = out_rows.shape[-1]
+    padded = jnp.concatenate([out_rows, jnp.zeros((1, d), out_rows.dtype)], 0)
+    gathered = padded[slot.reshape(-1)].reshape(n, k, d)
+    w = (gates * keep).astype(dtype)
+    return jnp.einsum("nkd,nk->nd", gathered, w)
+
+
+def _scatter_buckets(xf, slot, n_slots):
+    """Scatter token rows into capacity buckets; row n_slots is the drop bin."""
+    n, d = xf.shape
+    k = slot.shape[1]
+    buf = jnp.zeros((n_slots + 1, d), xf.dtype)
+    buf = buf.at[slot.reshape(-1)].set(
+        jnp.repeat(xf, k, axis=0), mode="drop")
+    return buf[:-1]
+
+
+# ---------------------------------------------------------------------------
+# per-shard bodies (run inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _sp_slice(xf: jax.Array, tp_axis: str) -> Tuple[jax.Array, int]:
+    """Sequence/token-parallel slice of the (replicated) token block."""
+    tp = jax.lax.axis_size(tp_axis)
+    rank = jax.lax.axis_index(tp_axis)
+    n = xf.shape[0]
+    n_loc = n // tp
+    return jax.lax.dynamic_slice_in_dim(xf, rank * n_loc, n_loc, 0), n_loc
+
+
+def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
+                tp_axis: str, dp_axes: Tuple[str, ...]):
+    """Local Function mode: token all-to-all to resident experts."""
+    tp = jax.lax.axis_size(tp_axis)
+    e_loc = wg.shape[0]                       # experts resident on this rank
+    e = m.num_experts
+    xloc, n_loc = _sp_slice(xf, tp_axis)
+
+    r = route_topk(xloc, router, m)
+    cap = expert_capacity(n_loc, m)
+    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
+    buf = _scatter_buckets(xloc, slot, e * cap)             # (E*cap, d)
+
+    # ship token buckets to expert owners (the jam put)
+    d = xf.shape[-1]
+    send = buf.reshape(tp, e_loc, cap, d)
+    recv = jax.lax.all_to_all(send, tp_axis, 0, 0, tiled=False)  # (tp, e_loc, cap, d)
+    work = jnp.moveaxis(recv, 0, 1).reshape(e_loc, tp * cap, d)
+
+    out = expert_ffn(wg, wu, wd, work, act)                 # (e_loc, tp*cap, d)
+
+    # return results to token owners (the jam response)
+    back = jnp.moveaxis(out.reshape(e_loc, tp, cap, d), 1, 0)
+    ret = jax.lax.all_to_all(back, tp_axis, 0, 0, tiled=False)
+    rows = ret.reshape(e * cap, d)
+
+    y_loc = _combine(rows, slot, keep, r.gates, xf.dtype)
+    if shared is not None:
+        y_loc = y_loc + _shared_expert(shared, xloc, act)
+
+    y = jax.lax.all_gather(y_loc, tp_axis, axis=0, tiled=True)  # (N, d)
+    aux = r.aux_loss + r.z_loss
+    aux = jax.lax.pmean(aux, tp_axis)
+    for ax in dp_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return y, aux
+
+
+def _injected_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
+                   tp_axis: str, dp_axes: Tuple[str, ...]):
+    """Injected Function mode: all-gather expert weights; tokens stay put."""
+    e = m.num_experts
+    xloc, n_loc = _sp_slice(xf, tp_axis)
+
+    # inject the function state (expert weights) to every token owner
+    wg_full = jax.lax.all_gather(wg, tp_axis, axis=0, tiled=True)   # (E,d,f)
+    wu_full = jax.lax.all_gather(wu, tp_axis, axis=0, tiled=True)
+    wd_full = jax.lax.all_gather(wd, tp_axis, axis=0, tiled=True)
+
+    r = route_topk(xloc, router, m)
+    cap = expert_capacity(n_loc, m)
+    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
+    buf = _scatter_buckets(xloc, slot, e * cap).reshape(e, cap, -1)
+
+    out = expert_ffn(wg_full, wu_full, wd_full, buf, act)   # (E, cap, d)
+    rows = out.reshape(e * cap, -1)
+
+    y_loc = _combine(rows, slot, keep, r.gates, xf.dtype)
+    if shared is not None:
+        y_loc = y_loc + _shared_expert(shared, xloc, act)
+
+    y = jax.lax.all_gather(y_loc, tp_axis, axis=0, tiled=True)
+    aux = jax.lax.pmean(r.aux_loss + r.z_loss, tp_axis)
+    for ax in dp_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return y, aux
+
+
+def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
+             tp_axis: str, dp_axes: Tuple[str, ...]):
+    """Fallback: full token set everywhere; each rank serves only its
+    resident experts; partial results combined with psum."""
+    tp = jax.lax.axis_size(tp_axis)
+    rank = jax.lax.axis_index(tp_axis)
+    e_loc = wg.shape[0]
+    e = m.num_experts
+    n = xf.shape[0]
+
+    r = route_topk(xf, router, m)
+    cap = expert_capacity(n, m)
+    # global slots, then mask to my expert range
+    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
+    owner = r.expert_ids // e_loc
+    mine = keep & (owner == rank)
+    slot_loc = jnp.where(mine, slot - rank * e_loc * cap, e_loc * cap)
+    buf = _scatter_buckets(xf, slot_loc, e_loc * cap).reshape(e_loc, cap, -1)
+    out = expert_ffn(wg, wu, wd, buf, act)
+    rows = out.reshape(e_loc * cap, -1)
+    y_part = _combine(rows, slot_loc, mine, r.gates, xf.dtype)
+    y = jax.lax.psum(y_part, tp_axis)
+    if shared is not None:
+        # shared weights + tokens are replicated over tp, so adding the
+        # shared-expert output on every rank keeps y replicated
+        y = y + _shared_expert(shared, xf, act)
+    aux = jax.lax.pmean(r.aux_loss + r.z_loss, tp_axis)
+    for ax in dp_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return y, aux
+
+
+_BODIES = {"local": _local_body, "injected": _injected_body, "tp": _tp_body}
+
+
+# ---------------------------------------------------------------------------
+# transport factory
+# ---------------------------------------------------------------------------
+
+def make_jam_transport(mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
+                       tp_axis: str = "model", mode: str = "local",
+                       log_choice: Optional[list] = None):
+    """Build a ``transport(params, x, moe_cfg, act)`` for models.moe.moe_ffn.
+
+    ``mode='auto'`` consults the cost model per call shape and records the
+    decision in ``log_choice`` (if given).
+    """
+    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+
+    def transport(params, x: jax.Array, m: MoEConfig, act: str):
+        b, s, d = x.shape
+        tp = mesh.shape[tp_axis]
+        n_tokens = b * s  # per-dp-shard token count enters the shard body
+
+        chosen = mode
+        if mode == "auto":
+            est = costmodel.estimate_transport(
+                m, d_model=d, n_tokens_per_dp_shard=n_tokens, tp=tp,
+                dtype_bytes=x.dtype.itemsize)
+            chosen = est.chosen
+            if log_choice is not None:
+                log_choice.append(est)
+        if chosen != "tp":
+            # token split must divide; otherwise degrade to tp mode
+            per_shard = n_tokens // max(1, _prod(mesh.shape[a] for a in dp_axes))
+            if per_shard % tp != 0 or per_shard < tp:
+                chosen = "tp"
+
+        body = partial(_BODIES[chosen], m=m, act=act, tp_axis=tp_axis,
+                       dp_axes=dp_axes)
+
+        has_shared = m.num_shared > 0
+        shared_keys = ("ws_gate", "ws_up", "ws_down")
+        shared = ({k: params[k] for k in shared_keys} if has_shared else None)
+
+        def wrapped(router, wg, wu, wd, shared_p, xb):
+            xf = xb.reshape(-1, d)
+            y, aux = body(router, wg, wu, wd, shared_p, xf)
+            return y.reshape(xb.shape), aux
+
+        w_spec = P(tp_axis, None, None)
+        sh_spec = (None if shared is None
+                   else {k: P(None, None) for k in shared_keys})
+        fn = shard_map(
+            wrapped, mesh=mesh,
+            in_specs=(P(None, None), w_spec, w_spec, w_spec, sh_spec,
+                      P(dp_spec, None, None)),
+            out_specs=(P(dp_spec, None, None), P()),
+            check_vma=False)
+        y, aux = fn(params["router"], params["w_gate"], params["w_up"],
+                    params["w_down"], shared, x)
+        return y, aux
+
+    return transport
+
+
+def _prod(it):
+    p = 1
+    for v in it:
+        p *= v
+    return p

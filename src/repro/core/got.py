@@ -1,0 +1,81 @@
+"""GOT (global offset table) analogue: per-process symbol binding.
+
+The paper rewrites compiled GOT accesses to indirect through a pointer at a
+known PC-relative slot, so injected code resolves *receiver-resident* symbols
+at whatever address it lands. Our trace-time equivalent: a ``GotTable`` maps
+symbolic names to indices; jam handlers receive a tuple of resolved values in
+index order as their first argument (the fixed "GOT pointer slot" of the jam
+ABI). Senders pack indices into the frame's GOTP section; receivers verify
+layout agreement via ``layout_hash`` (the paper's sender/receiver exchange).
+
+Different processes may bind different values — or different handler
+implementations — to the same name (the paper's per-process overloading).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class GotTable:
+    """Symbol name -> (index, resident value). Values are arbitrary pytrees."""
+
+    def __init__(self) -> None:
+        self._index: Dict[str, int] = {}
+        self._values: List[Any] = []
+
+    # -- ried installation ---------------------------------------------------
+    def bind(self, name: str, value: Any) -> int:
+        """Install/replace a resident symbol; returns its GOT index."""
+        if name in self._index:
+            self._values[self._index[name]] = value
+            return self._index[name]
+        idx = len(self._values)
+        self._index[name] = idx
+        self._values.append(value)
+        return idx
+
+    def index_of(self, name: str) -> int:
+        return self._index[name]
+
+    def value_of(self, name: str) -> Any:
+        return self._values[self._index[name]]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._index
+
+    @property
+    def symbols(self) -> Tuple[str, ...]:
+        return tuple(sorted(self._index, key=self._index.get))
+
+    # -- resolution (trace-time "remote linking") ----------------------------
+    def resolve(self, names: Sequence[str]) -> Tuple[Any, ...]:
+        missing = [n for n in names if n not in self._index]
+        if missing:
+            raise KeyError(f"unresolved GOT symbols {missing}; "
+                           f"resident: {self.symbols}")
+        return tuple(self._values[self._index[n]] for n in names)
+
+    def got_indices(self, names: Sequence[str], slots: int) -> jax.Array:
+        """GOTP section content for a frame (padded with -1)."""
+        idx = [self._index[n] for n in names]
+        idx += [-1] * (slots - len(idx))
+        return jnp.asarray(idx[:slots], jnp.int32)
+
+    # -- namespace synchronization --------------------------------------------
+    def layout_hash(self) -> int:
+        """Hash of the symbol->index layout; sender and receiver must agree
+        before GOTP indices are meaningful (the out-of-band RKEY-style
+        exchange of §V)."""
+        h = hashlib.sha256(";".join(
+            f"{n}={i}" for n, i in sorted(self._index.items())).encode())
+        return int.from_bytes(h.digest()[:4], "little")
+
+    def check_layout(self, other_hash: int) -> None:
+        if self.layout_hash() != other_hash:
+            raise RuntimeError(
+                "GOT layout mismatch between sender and receiver — run the "
+                "namespace exchange (install the same rieds) first.")

@@ -1,0 +1,60 @@
+"""Injected-function helpers: serialize function state (expert weights) into
+frame STATE sections and back — used by the mailbox benchmarks to ship an
+actual weights-in-message jam (paper Fig. 2), and by tests to prove the
+byte-level round trip.
+
+The production injected-mode MoE path (core.dispatch._injected_body) moves
+weights with a raw ``all_gather`` — frames elided exactly like the paper's
+fixed-size single-put fast path (§III-A) elides per-section puts. These
+helpers exist so the *semantics* (function state in the message) stay
+byte-faithful somewhere testable.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.message import FrameSpec, bf16_to_words, words_to_bf16
+
+
+def expert_state_words(w_gate: jax.Array, w_up: jax.Array,
+                       w_down: jax.Array) -> jax.Array:
+    """Serialize one expert's (d,f),(d,f),(f,d) bf16 weights into int32 words."""
+    return jnp.concatenate([
+        bf16_to_words(w_gate), bf16_to_words(w_up), bf16_to_words(w_down)])
+
+
+def expert_state_size_words(d_model: int, d_ff: int) -> int:
+    per = d_model * d_ff
+    return 3 * ((per + 1) // 2)
+
+
+def unpack_expert_state(words: jax.Array, d_model: int, d_ff: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    per = d_model * d_ff
+    w = (per + 1) // 2
+    wg = words_to_bf16(words[:w], per, (d_model, d_ff))
+    wu = words_to_bf16(words[w:2 * w], per, (d_model, d_ff))
+    wd = words_to_bf16(words[2 * w:3 * w], per, (d_ff, d_model))
+    return wg, wu, wd
+
+
+def injected_frame_spec(d_model: int, d_ff: int, payload_tokens: int,
+                        got_slots: int = 4) -> FrameSpec:
+    """FrameSpec for a weights-in-message expert jam: STATE carries the
+    expert, USR carries ``payload_tokens`` activation vectors (bf16)."""
+    return FrameSpec(
+        got_slots=got_slots,
+        state_words=expert_state_size_words(d_model, d_ff),
+        payload_words=((payload_tokens * d_model + 1) // 2),
+    )
+
+
+def tokens_to_words(x: jax.Array) -> jax.Array:
+    return bf16_to_words(x)
+
+
+def words_to_tokens(words: jax.Array, n: int, d: int) -> jax.Array:
+    return words_to_bf16(words, n * d, (n, d))

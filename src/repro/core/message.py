@@ -1,0 +1,167 @@
+"""Active-message frame format — paper Fig. 1, TPU-native.
+
+A frame is a flat int32 vector laid out exactly like the paper's mailbox
+message::
+
+    HDR (8 words) | GOTP (G words) | STATE (state_words) | USR (payload_words)
+    | SIG (2 words)  — padded to a multiple of 16 words (64 B, the paper's
+    frame alignment).
+
+HDR  = [MAGIC, func_id, elem_id, payload_words, state_words, src_rank,
+        seq_no, flags]
+GOTP = the "patched GOT": int32 symbol indices into the receiver's GotTable.
+STATE= bitcast function state (the code-bytes analogue; empty in Local mode).
+USR  = bitcast user payload.
+SIG  = [SIG_MAGIC, checksum(payload words)] — the arrival signal the mailbox
+       waits on (the final-byte wait of §III-A).
+
+All pack/unpack functions are jit-compatible (fixed sizes, pure jnp).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+MAGIC = jnp.int32(0x7C4A_11)        # "Two-Chains" header magic
+SIG_MAGIC = jnp.int32(0x516A_22)    # signal magic ("SIG MAG" of Fig. 1)
+HEADER_WORDS = 8
+SIG_WORDS = 2
+ALIGN_WORDS = 16                     # 64 B frames, as in the paper
+
+FLAG_INJECTED = 1                    # STATE section carries function state
+FLAG_READONLY_USR = 2                # security reconfig: payload read-only
+FLAG_RECV_GOT = 4                    # security reconfig: receiver sets GOT
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameSpec:
+    """Static frame geometry (agreed at package build time)."""
+
+    got_slots: int = 4
+    state_words: int = 0             # 0 => Local Function frames
+    payload_words: int = 16
+
+    @property
+    def body_words(self) -> int:
+        return (HEADER_WORDS + self.got_slots + self.state_words
+                + self.payload_words + SIG_WORDS)
+
+    @property
+    def total_words(self) -> int:
+        return -(-self.body_words // ALIGN_WORDS) * ALIGN_WORDS
+
+    @property
+    def total_bytes(self) -> int:
+        return 4 * self.total_words
+
+    def offsets(self) -> Dict[str, int]:
+        o_got = HEADER_WORDS
+        o_state = o_got + self.got_slots
+        o_usr = o_state + self.state_words
+        o_sig = o_usr + self.payload_words
+        return {"got": o_got, "state": o_state, "usr": o_usr, "sig": o_sig}
+
+
+# ---------------------------------------------------------------------------
+# bitcasting helpers (f32 / bf16 <-> int32 words)
+# ---------------------------------------------------------------------------
+
+def f32_to_words(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x.astype(jnp.float32).reshape(-1),
+                                        jnp.int32)
+
+
+def words_to_f32(w: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    return jax.lax.bitcast_convert_type(w, jnp.float32).reshape(shape)
+
+
+def bf16_to_words(x: jax.Array) -> jax.Array:
+    """Pack 2 bf16 per int32 word (paper ships raw bytes; so do we)."""
+    flat = x.astype(jnp.bfloat16).reshape(-1)
+    if flat.size % 2:
+        flat = jnp.concatenate([flat, jnp.zeros((1,), jnp.bfloat16)])
+    u16 = jax.lax.bitcast_convert_type(flat, jnp.uint16).reshape(-1, 2)
+    lo = u16[:, 0].astype(jnp.uint32)
+    hi = u16[:, 1].astype(jnp.uint32)
+    return (lo | (hi << 16)).astype(jnp.int32)
+
+
+def words_to_bf16(w: jax.Array, size: int, shape: Tuple[int, ...]) -> jax.Array:
+    u = w.astype(jnp.uint32)
+    lo = (u & 0xFFFF).astype(jnp.uint16)
+    hi = (u >> 16).astype(jnp.uint16)
+    flat = jnp.stack([lo, hi], axis=-1).reshape(-1)[:size]
+    return jax.lax.bitcast_convert_type(flat, jnp.bfloat16).reshape(shape)
+
+
+def checksum(words: jax.Array) -> jax.Array:
+    """Wrap-around int32 sum — the SIG integrity word."""
+    return jnp.sum(words.astype(jnp.int32), dtype=jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack
+# ---------------------------------------------------------------------------
+
+def pack_frame(spec: FrameSpec, *, func_id, elem_id=0, src_rank=0, seq_no=0,
+               flags=0, got: jax.Array | None = None,
+               state_words: jax.Array | None = None,
+               payload_words: jax.Array | None = None) -> jax.Array:
+    """Build one frame (int32[spec.total_words]). Inputs are word vectors."""
+    got = jnp.zeros((spec.got_slots,), jnp.int32) if got is None else got
+    state_words = (jnp.zeros((spec.state_words,), jnp.int32)
+                   if state_words is None else state_words)
+    payload_words = (jnp.zeros((spec.payload_words,), jnp.int32)
+                     if payload_words is None else payload_words)
+    assert got.shape == (spec.got_slots,)
+    assert state_words.shape == (spec.state_words,), (state_words.shape, spec)
+    assert payload_words.shape == (spec.payload_words,)
+    hdr = jnp.stack([
+        MAGIC,
+        jnp.asarray(func_id, jnp.int32),
+        jnp.asarray(elem_id, jnp.int32),
+        jnp.asarray(spec.payload_words, jnp.int32),
+        jnp.asarray(spec.state_words, jnp.int32),
+        jnp.asarray(src_rank, jnp.int32),
+        jnp.asarray(seq_no, jnp.int32),
+        jnp.asarray(flags, jnp.int32),
+    ])
+    sig = jnp.stack([SIG_MAGIC, checksum(payload_words)])
+    body = jnp.concatenate([hdr, got, state_words, payload_words, sig])
+    pad = spec.total_words - spec.body_words
+    if pad:
+        body = jnp.concatenate([body, jnp.zeros((pad,), jnp.int32)])
+    return body
+
+
+def unpack_frame(spec: FrameSpec, frame: jax.Array) -> Dict[str, jax.Array]:
+    o = spec.offsets()
+    return {
+        "magic": frame[0],
+        "func_id": frame[1],
+        "elem_id": frame[2],
+        "payload_words": frame[3],
+        "state_words": frame[4],
+        "src_rank": frame[5],
+        "seq_no": frame[6],
+        "flags": frame[7],
+        "got": jax.lax.dynamic_slice(frame, (o["got"],), (spec.got_slots,)),
+        "state": jax.lax.dynamic_slice(frame, (o["state"],),
+                                       (max(spec.state_words, 1),))[: spec.state_words]
+        if spec.state_words else jnp.zeros((0,), jnp.int32),
+        "usr": jax.lax.dynamic_slice(frame, (o["usr"],), (spec.payload_words,)),
+        "sig_magic": frame[o["sig"]],
+        "sig_checksum": frame[o["sig"] + 1],
+    }
+
+
+def frame_valid(spec: FrameSpec, frame: jax.Array) -> jax.Array:
+    """Signal + integrity check — what the mailbox wait loop tests."""
+    f = unpack_frame(spec, frame)
+    return ((f["magic"] == MAGIC)
+            & (f["sig_magic"] == SIG_MAGIC)
+            & (f["sig_checksum"] == checksum(f["usr"])))

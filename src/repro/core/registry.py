@@ -1,0 +1,153 @@
+"""Jam / ried registries — the paper's packages of "two types of
+cooperatively handled actively integrated natively shared-objects".
+
+*Rieds* (relocatable interface distributions) install resident symbols into a
+process's ``GotTable`` — model shards, tables, buffers, constants. Loading a
+ried ≙ ``dlopen`` of the interface library on the receiver.
+
+*Jams* are the mobile functions. A ``JamPackage`` assigns dense function IDs
+(the Local-Function "vector of function pointers" of §IV-B) and builds a
+``lax.switch`` dispatcher over all registered handlers — the AOT-compiled
+equivalent of calling the function the message names.
+
+Handler ABI (the GOT indirection contract of §III-B):
+    handler(got: tuple, state: jax.Array, payload: jax.Array) -> jax.Array
+``got`` holds resolved resident symbols (index order fixed at package build);
+``state`` is the STATE section (injected function state; empty in Local mode);
+the result is a fixed-width word vector (uniform across the package so the
+switch has one output shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.got import GotTable
+from repro.core.message import (
+    FLAG_INJECTED,
+    FrameSpec,
+    frame_valid,
+    pack_frame,
+    unpack_frame,
+)
+
+Handler = Callable[[Tuple[Any, ...], jax.Array, jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Jam:
+    name: str
+    func_id: int
+    handler: Handler
+    got_symbols: Tuple[str, ...]
+
+
+class JamPackage:
+    """A named package of jams sharing one FrameSpec + result width."""
+
+    def __init__(self, name: str, spec: FrameSpec, result_words: int):
+        self.name = name
+        self.spec = spec
+        self.result_words = result_words
+        self._jams: Dict[str, Jam] = {}
+        self._order: List[Jam] = []
+
+    # -- build time -----------------------------------------------------------
+    def register(self, name: str, got_symbols: Sequence[str] = ()):
+        def deco(fn: Handler) -> Handler:
+            if name in self._jams:
+                raise ValueError(f"jam {name!r} already registered in {self.name}")
+            jam = Jam(name, len(self._order), fn, tuple(got_symbols))
+            self._jams[name] = jam
+            self._order.append(jam)
+            return fn
+        return deco
+
+    def jam(self, name: str) -> Jam:
+        return self._jams[name]
+
+    def __len__(self) -> int:
+        return len(self._order)
+
+    # -- sender side -----------------------------------------------------------
+    def pack(self, name: str, got_table: GotTable, *,
+             payload_words: jax.Array,
+             state_words: Optional[jax.Array] = None,
+             src_rank=0, seq_no=0) -> jax.Array:
+        """Pack an active message for jam ``name`` (paper §IV message packing)."""
+        jam = self._jams[name]
+        flags = 0
+        if state_words is not None and self.spec.state_words:
+            flags |= FLAG_INJECTED
+        return pack_frame(
+            self.spec,
+            func_id=jam.func_id,
+            got=got_table.got_indices(jam.got_symbols, self.spec.got_slots),
+            state_words=state_words,
+            payload_words=payload_words,
+            src_rank=src_rank,
+            seq_no=seq_no,
+            flags=flags,
+        )
+
+    # -- receiver side ----------------------------------------------------------
+    def build_dispatcher(self, got_table: GotTable
+                         ) -> Callable[[jax.Array], jax.Array]:
+        """AOT dispatch: frame -> result (int32[result_words]).
+
+        Invalid frames (bad magic/checksum) return zeros — the mailbox skips
+        them. ``lax.switch`` over func_id is the Local-Function pointer
+        vector; each branch closes over its jam's resolved GOT symbols.
+        """
+        spec = self.spec
+        branches = []
+        for jam in self._order:
+            got = got_table.resolve(jam.got_symbols)
+
+            def branch(frame, jam=jam, got=got):
+                f = unpack_frame(spec, frame)
+                out = jam.handler(got, f["state"], f["usr"])
+                out = out.reshape(-1).astype(jnp.int32)
+                assert out.shape[0] == self.result_words, (
+                    f"jam {jam.name}: result {out.shape[0]} != "
+                    f"{self.result_words} words")
+                return out
+
+            branches.append(branch)
+
+        def dispatch(frame: jax.Array) -> jax.Array:
+            func_id = jnp.clip(frame[1], 0, len(branches) - 1)
+            ok = frame_valid(spec, frame)
+            result = jax.lax.switch(func_id, branches, frame)
+            return jnp.where(ok, result, jnp.zeros_like(result))
+
+        return dispatch
+
+
+class RiedPackage:
+    """Heavyweight interface distribution: named setup of resident symbols.
+
+    ``install`` runs every exported initializer against a GotTable — the
+    dynamic-library load + auto-init of §IV-A.
+    """
+
+    def __init__(self, name: str):
+        self.name = name
+        self._exports: List[Tuple[str, Callable[[], Any]]] = []
+
+    def export(self, symbol: str):
+        def deco(init_fn: Callable[[], Any]):
+            self._exports.append((symbol, init_fn))
+            return init_fn
+        return deco
+
+    def install(self, got: GotTable) -> None:
+        for symbol, init_fn in self._exports:
+            got.bind(symbol, init_fn())
+
+    @property
+    def symbols(self) -> Tuple[str, ...]:
+        return tuple(s for s, _ in self._exports)

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic synthetic LM batches + prefetching loader."""
+from repro.data.synthetic import synthetic_batch, batch_shapes  # noqa: F401
+from repro.data.pipeline import DataPipeline  # noqa: F401

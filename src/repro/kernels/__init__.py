@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  mailbox/          reactive mailbox: remote-DMA put + WFE/poll wait +
+                    stash-fused Server-Side Sum + Indirect Put (paper Figs.
+                    1, 4, 9-14)
+  moe_jam/          fused expert-FFN over dispatched capacity buckets (the
+                    VMEM-stash execution of injected/local jams)
+  flash_attention/  blockwise online-softmax attention (32k prefill)
+  ssm_scan/         chunked selective scan (hymba's Mamba path)
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper, interpret=True auto-selected on CPU), ref.py (pure-jnp oracle).
+"""

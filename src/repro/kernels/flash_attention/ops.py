@@ -1,0 +1,31 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import mha_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "scale",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, window: Optional[int] = None,
+                    q_offset: int = 0, scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """(B,Hq,S,D) x (B,Hkv,T,D) -> (B,Hq,S,D). interpret=None => auto."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interp)
+
+
+flash_attention_ref = mha_ref

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention Pallas kernel.
+
+Naive materialized-scores attention with GQA, causal, and sliding-window
+masking — numerically the ground truth the kernel sweeps against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def mha_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+            causal: bool = True, window: Optional[int] = None,
+            q_offset: int = 0, scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D). Hq % Hkv == 0 (GQA).
+
+    ``q_offset``: absolute position of q[0] (decode continuation).
+    """
+    b, hq, s, d = q.shape
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, kx,
+                        preferred_element_type=jnp.float32) * scale
+    q_pos = jnp.arange(s) + q_offset
+    k_pos = jnp.arange(t)
+    rel = q_pos[:, None] - k_pos[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(-1, keepdims=True))
+    probs = probs / jnp.maximum(probs.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhst,bhtd->bhsd", probs.astype(v.dtype), vx)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+from repro.kernels.mailbox.ops import am_indirect_put, am_server_sum, ring_am_put
+
+__all__ = ["am_indirect_put", "am_server_sum", "ring_am_put"]

@@ -1,0 +1,88 @@
+"""Jit'd public wrappers for the mailbox kernels.
+
+``ring_am_put`` builds the shard_map around ``mailbox_put_pallas`` for a
+1-D mesh axis — the usable "active message put" op. The standalone handlers
+(``am_server_sum``, ``am_indirect_put``) run on any device count.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.message import FrameSpec
+from repro.kernels.mailbox.kernel import (
+    indirect_put_pallas,
+    mailbox_put_pallas,
+    sum_drain_pallas,
+)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _geom(spec: FrameSpec):
+    o = spec.offsets()
+    return dict(sig_off=o["sig"], usr_off=o["usr"],
+                payload_words=spec.payload_words)
+
+
+def ring_am_put(frame_blocks: jax.Array, mesh: Mesh, axis_name: str, *,
+                spec: FrameSpec, shift: int = 1, wait: str = "wfe",
+                stash: bool = True, handler: Optional[str] = None,
+                interpret: bool | None = None
+                ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+    """One-sided ring put over ``axis_name``.
+
+    frame_blocks: (n_ranks, N, W) int32, sharded (axis, None, None).
+    Returns (arrivals (n_ranks, N, W), spins (n_ranks, 1, 1),
+    sums (n_ranks, N, 1) | None) with the same sharding.
+    """
+    interp = (not _on_tpu()) if interpret is None else interpret
+    g = _geom(spec)
+
+    def body(blk):
+        arr, spins, sums = mailbox_put_pallas(
+            blk[0], axis_name=axis_name, shift=shift, wait=wait, stash=stash,
+            handler=handler, interpret=interp, **g)
+        if sums is None:
+            sums = jnp.zeros((blk.shape[1], 1), jnp.int32)
+        return arr[None], spins[None], sums[None]
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=P(axis_name, None, None),
+        out_specs=(P(axis_name, None, None), P(axis_name, None, None),
+                   P(axis_name, None, None)),
+        check_vma=False)
+    arr, spins, sums = fn(frame_blocks)
+    return arr, spins, (sums if handler == "sum" else None)
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def am_server_sum(frames: jax.Array, spec: FrameSpec,
+                  interpret: bool | None = None) -> jax.Array:
+    """Server-Side Sum handler over (N, W) frames -> (N,) int32."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    g = _geom(spec)
+    return sum_drain_pallas(frames, usr_off=g["usr_off"],
+                            payload_words=g["payload_words"],
+                            interpret=interp)[:, 0]
+
+
+@partial(jax.jit, static_argnames=("spec", "interpret"))
+def am_indirect_put(frames: jax.Array, table: jax.Array, heap: jax.Array,
+                    got: jax.Array, spec: FrameSpec,
+                    interpret: bool | None = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Indirect Put handler: apply (N, W) frames to the server (table, heap)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    g = _geom(spec)
+    return indirect_put_pallas(frames, table, heap, got,
+                               usr_off=g["usr_off"],
+                               payload_words=g["payload_words"],
+                               interpret=interp)

@@ -1,0 +1,50 @@
+"""Pure-jnp oracle for the mailbox kernels.
+
+Frame geometry matches ``core.message.FrameSpec``:
+    HDR(8) | GOTP(G) | STATE(SW) | USR(PW) | SIG(2), padded to 16 words.
+
+The oracles model, per kernel:
+  ring_put_ref      — arrivals on each rank after a one-sided ring put
+  server_sum_ref    — the Server-Side Sum jam (paper §VI-B1)
+  indirect_put_ref  — the Indirect Put jam (paper §VI-B2): key -> hashed
+                      offset, payload copied into the server heap row
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def ring_put_ref(frame_blocks: jnp.ndarray, shift: int = 1) -> jnp.ndarray:
+    """frame_blocks: (n_ranks, N, W). Returns what LANDS on each rank."""
+    return jnp.roll(frame_blocks, shift, axis=0)
+
+
+def server_sum_ref(frames: jnp.ndarray, usr_off: int,
+                   payload_words: int) -> jnp.ndarray:
+    """frames: (N, W) int32 -> (N,) int32 payload sums."""
+    usr = frames[:, usr_off:usr_off + payload_words]
+    return jnp.sum(usr, axis=1, dtype=jnp.int32)
+
+
+def indirect_put_ref(frames: jnp.ndarray, table: jnp.ndarray,
+                     heap: jnp.ndarray, usr_off: int, payload_words: int,
+                     got_base: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Apply every frame's indirect put in order (N sequential updates).
+
+    frames: (N, W); table: (slots, 2) [key, offset]; heap: (slots, PW-1).
+    USR = [key, data...]; offset = key % slots + got_base (mod slots) — the
+    client-controlled hash of the paper, indirected through the receiver's
+    GOT-resolved heap base.
+    """
+    slots = table.shape[0]
+    n = frames.shape[0]
+    for i in range(n):
+        key = frames[i, usr_off]
+        idx = (key % slots + got_base) % slots
+        data = frames[i, usr_off + 1: usr_off + payload_words]
+        table = table.at[idx, 0].set(key)
+        table = table.at[idx, 1].set(idx)
+        heap = heap.at[idx, :].set(data)
+    return table, heap

@@ -1,0 +1,3 @@
+from repro.kernels.moe_jam.ops import moe_jam_ffn, moe_jam_ffn_ref
+
+__all__ = ["moe_jam_ffn", "moe_jam_ffn_ref"]

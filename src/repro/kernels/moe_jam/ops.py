@@ -1,0 +1,36 @@
+"""Jit'd public wrapper for the moe_jam fused expert-FFN kernel.
+
+``moe_jam_ffn`` picks TPU-aligned block shapes, falls back to interpret mode
+on CPU (this container), and exposes the same signature as the oracle
+``ref.expert_ffn_ref`` so the two are drop-in interchangeable in
+``models.moe.moe_ffn``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_jam.kernel import moe_jam_ffn_pallas
+from repro.kernels.moe_jam.ref import expert_ffn_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("act", "block_c", "block_f", "interpret"))
+def moe_jam_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                w_down: jax.Array, act: str = "silu",
+                block_c: int = 128, block_f: int = 512,
+                interpret: bool | None = None) -> jax.Array:
+    """Fused (E,C,D) expert FFN. interpret=None => auto (CPU interprets)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return moe_jam_ffn_pallas(x, w_gate, w_up, w_down, act=act,
+                              block_c=block_c, block_f=block_f,
+                              interpret=interp)
+
+
+def moe_jam_ffn_ref(x, w_gate, w_up, w_down, act: str = "silu") -> jax.Array:
+    return expert_ffn_ref(x, w_gate, w_up, w_down, act)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused moe_jam expert-FFN kernel.
+
+Identical math to ``models.moe.expert_ffn`` — kept dependency-free so the
+kernel test imports only this file.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def expert_ffn_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                   w_down: jax.Array, act: str = "silu") -> jax.Array:
+    """x: (E, C, d); weights (E, d, f) / (E, f, d). float32 accumulation."""
+    g = jnp.einsum("ecd,edf->ecf", x, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", x, w_up,
+                   preferred_element_type=jnp.float32)
+    h = act_fn(act)(g) * u
+    y = jnp.einsum("ecf,efd->ecd", h.astype(x.dtype), w_down,
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,26 @@
+"""Jit'd public wrapper for the chunked selective-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_pallas
+from repro.kernels.ssm_scan.ref import selective_scan_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(dt: jax.Array, b: jax.Array, c: jax.Array, x: jax.Array,
+             a: jax.Array, h0: jax.Array | None = None,
+             chunk: int = 256, interpret: bool | None = None):
+    """Chunked selective scan; interpret=None => auto (CPU interprets)."""
+    interp = (not _on_tpu()) if interpret is None else interpret
+    return ssm_scan_pallas(dt, b, c, x, a, h0, chunk=chunk, interpret=interp)
+
+
+ssm_scan_ref = selective_scan_ref

@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the chunked selective-scan Pallas kernel.
+
+Sequential recurrence identical to ``models.ssm.ssm_forward``'s inner scan:
+
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+    y_t = h_t . C_t
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(dt: jax.Array, b: jax.Array, c: jax.Array,
+                       x: jax.Array, a: jax.Array,
+                       h0: jax.Array | None = None
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """dt/x: (B, S, I); b/c: (B, S, N); a: (I, N); h0: (B, I, N) f32.
+
+    Returns (y (B, S, I) in x.dtype, h_last (B, I, N) f32).
+    """
+    B, S, I = x.shape
+    N = b.shape[-1]
+    h0 = jnp.zeros((B, I, N), jnp.float32) if h0 is None else h0
+    a = a.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp                    # (B,I),(B,N),(B,N),(B,I)
+        dt_f = dt_t.astype(jnp.float32)
+        da = jnp.exp(dt_f[:, :, None] * a[None])     # (B,I,N)
+        dbx = (dt_f * x_t.astype(jnp.float32))[:, :, None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = da * h + dbx
+        y_t = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b, 1, 0),
+          jnp.moveaxis(c, 1, 0), jnp.moveaxis(x, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_last

@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("DRYRUN_DEVICES", "512")
+                           + " " + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init). 512 host devices back both the single-pod 16x16 mesh
+(first 256) and the 2x16x16 multi-pod mesh.
+
+Per cell this driver:
+  1. builds the production mesh + sharding rules,
+  2. assembles the step function (train_step / prefill_step / serve_step)
+     with abstract (ShapeDtypeStruct) inputs — zero allocation,
+  3. ``jax.jit(...).lower(...).compile()`` — a sharding mismatch, compile
+     OOM, or unsupported collective here is a bug in our system,
+  4. records memory_analysis / cost_analysis / parsed collective bytes and
+     the three roofline terms into a JSON row (EXPERIMENTS.md reads these).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_results.json
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+"""
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import (OptimizerConfig, RunConfig, ShardingConfig,
+                                SHAPES, ModelConfig, ShapeConfig)
+from repro.configs.registry import ARCHS, cell_status, get_config
+from repro.launch import hlo_cost
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.runtime.steps import StepBundle, make_step
+
+
+def make_run_config(cfg: ModelConfig, shape: ShapeConfig,
+                    *, multi_pod: bool,
+                    overrides: Optional[Dict[str, Any]] = None) -> RunConfig:
+    """Baseline sharding policy per shape kind (see DESIGN.md §6).
+
+    train:   FSDP(+pod) x TP, full remat, f32 params.
+    prefill: TP weights (replicated over data), KV-cache seq-sharded on model.
+    decode:  same as prefill — the cache dominates memory at 32k-500k.
+    """
+    dp = ("pod", "data") if multi_pod else ("data",)
+    if shape.kind == "train":
+        sh = ShardingConfig(dp_axes=dp, tp_axis="model", fsdp_params=True)
+        # gradient accumulation keeps one microbatch of activations live
+        # (HBM feasibility at global_batch=256; §Perf feasibility
+        # iteration). Policy is per-arch, measured: deep/recurrent stacks
+        # (qwen2's 80-layer remat stash, hymba's per-timestep scan) need
+        # micro-batch 1 per chip; olmoe fits without accumulation and
+        # accumulating would only add collective traffic (§Perf A2).
+        accum = {"qwen2-vl-72b": 16, "hymba-1.5b": 16, "granite-20b": 16,
+                 "olmoe-1b-7b": 1}.get(cfg.name, 4)
+        opt = OptimizerConfig(accum_steps=accum)
+    else:
+        sh = ShardingConfig(dp_axes=dp, tp_axis="model", fsdp_params=False,
+                            seq_axis="model")
+        opt = OptimizerConfig()
+    rc = RunConfig(model=cfg, shape=shape, sharding=sh, optimizer=opt)
+    if overrides:
+        rc = dataclasses.replace(rc, **overrides)
+    return rc
+
+
+def _shard_factor(spec, mesh_sizes: Dict[str, int]) -> int:
+    f = 1
+    if spec is None:
+        return 1
+    for entry in spec:
+        if entry is None:
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        for a in axes:
+            f *= mesh_sizes.get(a, 1)
+    return f
+
+
+def _tree_bytes_per_chip(abstract, shardings, mesh) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    flat_a = jax.tree.leaves(abstract)
+    flat_s = jax.tree.leaves(
+        shardings, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding))
+    for a, s in zip(flat_a, flat_s):
+        nbytes = math.prod(a.shape) * np.dtype(a.dtype).itemsize
+        spec = s.spec if hasattr(s, "spec") else None
+        total += nbytes // _shard_factor(spec, sizes)
+    return total
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                overrides: Optional[Dict[str, Any]] = None,
+                keep_hlo: bool = False) -> Dict[str, Any]:
+    """Lower + compile one cell; return the JSON row."""
+    row: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+    }
+    ok, why = cell_status(arch, shape_name)
+    if not ok:
+        row.update(status="skipped", reason=why)
+        return row
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    run = make_run_config(cfg, shape, multi_pod=multi_pod, overrides=overrides)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = math.prod(mesh.devices.shape)
+    try:
+        t0 = time.time()
+        bundle: StepBundle = make_step(cfg, run, mesh)
+        # donate like the real callers do (trainer donates params+opt, the
+        # server donates the KV cache) — without donation the compiler must
+        # double-buffer the largest state and decode/train cells blow HBM
+        donate = {"train": (0, 1), "decode": (1,)}.get(
+            bundle.meta["kind"], ())
+        with mesh:
+            jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                             out_shardings=bundle.out_shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*bundle.abstract_inputs)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost_list = compiled.cost_analysis()
+        cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+        hlo = compiled.as_text()
+
+        # trip-count-aware accounting (hlo_cost) — plain cost_analysis counts
+        # scan bodies once and would under-report by ~n_layers x.
+        hc = hlo_cost.analyze_hlo(hlo)
+        coll = rl.CollectiveStats(hc.collectives.per_op_bytes,
+                                  hc.collectives.per_op_count, [])
+
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+        mf = rl.model_flops(cfg.active_param_count(), tokens, shape.kind)
+        static_in = _tree_bytes_per_chip(bundle.abstract_inputs,
+                                         bundle.in_shardings, mesh)
+        roof = rl.analyze({"flops": hc.flops,
+                           "bytes accessed": hc.bytes_accessed},
+                          coll, n_chips=n_chips,
+                          model_flops_total=mf, peak_bytes=static_in)
+        row.update(
+            status="ok",
+            lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+            params=cfg.param_count(), active_params=cfg.active_param_count(),
+            tokens_per_step=tokens,
+            static_in_bytes_per_chip=static_in,
+            memory_analysis=_mem_dict(mem),
+            scan_trip_counts=hc.trip_counts,
+            xla_cost_analysis_raw={
+                "flops": float((cost or {}).get("flops", 0.0)),
+                "bytes": float((cost or {}).get("bytes accessed", 0.0))},
+            roofline=roof.row(),
+        )
+        if keep_hlo:
+            row["hlo_path"] = _dump_hlo(arch, shape_name, row["mesh"], hlo)
+    except Exception as e:  # noqa: BLE001 — report the cell as failed
+        row.update(status="failed", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return row
+
+
+def _mem_dict(mem) -> Dict[str, Any]:
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _dump_hlo(arch: str, shape: str, mesh: str, hlo: str) -> str:
+    path = f"/tmp/dryrun_hlo_{arch}_{shape}_{mesh}.txt"
+    with open(path, "w") as f:
+        f.write(hlo)
+    return path
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    p.add_argument("--shape", choices=sorted(SHAPES), default=None)
+    p.add_argument("--multi-pod", action="store_true")
+    p.add_argument("--all", action="store_true",
+                   help="run the full 40-cell matrix on the chosen mesh")
+    p.add_argument("--out", default=None, help="append JSON rows to this file")
+    p.add_argument("--keep-hlo", action="store_true")
+    args = p.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in sorted(ARCHS):
+            for shape in SHAPES:
+                cells.append((arch, shape))
+    else:
+        if not args.arch or not args.shape:
+            p.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    rows = []
+    for arch, shape in cells:
+        row = dryrun_cell(arch, shape, multi_pod=args.multi_pod,
+                          keep_hlo=args.keep_hlo)
+        rows.append(row)
+        status = row["status"]
+        extra = ""
+        if status == "ok":
+            r = row["roofline"]
+            extra = (f" compute={r['compute_s']*1e3:.2f}ms"
+                     f" memory={r['memory_s']*1e3:.2f}ms"
+                     f" collective={r['collective_s']*1e3:.2f}ms"
+                     f" bottleneck={r['bottleneck']}"
+                     f" frac={r['roofline_frac']:.3f}"
+                     f" compile={row['compile_s']:.0f}s")
+        elif status == "failed":
+            extra = " " + row["error"][:200]
+        else:
+            extra = " " + row["reason"]
+        print(f"[{row['mesh']}] {arch} x {shape}: {status}{extra}", flush=True)
+        if args.out:
+            with open(args.out, "a") as f:
+                f.write(json.dumps(row) + "\n")
+
+    n_ok = sum(r["status"] == "ok" for r in rows)
+    n_skip = sum(r["status"] == "skipped" for r in rows)
+    n_fail = sum(r["status"] == "failed" for r in rows)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

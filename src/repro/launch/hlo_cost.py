@@ -1,0 +1,421 @@
+"""Computation-aware HLO cost accounting with loop trip-count multiplication.
+
+``compiled.cost_analysis()`` visits every computation ONCE — a ``lax.scan``
+over L layers (lowered to ``while``) under-reports flops/bytes/collectives
+by ~L x, which would poison every roofline term for scanned-layer models
+(see EXPERIMENTS.md §Roofline "methodology"). This module re-derives the
+three roofline inputs from ``compiled.as_text()`` (post-SPMD, per-device):
+
+  * parse the module into computations and instructions,
+  * build the call graph (fusion ``calls=``, ``to_apply=``, while
+    ``condition=/body=``, conditional branches) and propagate execution
+    multiplicity from ENTRY; a while body's multiplicity is its trip count,
+    recovered from the loop-bound ``constant(N)`` in the condition
+    computation (jax scans always lower to this form),
+  * FLOPs: 2 x prod(result_shape) x contraction size for every ``dot``
+    (+convolutions), times multiplicity — MXU work, the roofline numerator,
+  * bytes: operand + result buffer sizes of every top-level memory-touching
+    instruction (the XLA bytes-accessed convention: fused computations are
+    charged at the fusion boundary), times multiplicity,
+  * collectives: operand bytes per op kind, times multiplicity.
+
+Validated against ``cost_analysis`` on loop-free modules and against
+analytic 6·N·D on scanned models (tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(k for k in _DTYPE_BYTES if k != "token")
+    + r")\[([0-9,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR_HEAD_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"\s*([a-z][\w\-]*)\(")
+_TRIP_CFG_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*(\d+)')
+_CALLS_RE = re.compile(r"(?:calls|to_apply|condition|body)=%([\w.\-]+)")
+_CALL_KIND_RE = re.compile(r"(calls|to_apply|condition|body)=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TF_COMP_RE = re.compile(r"(?:true|false)_computation=%([\w.\-]+)")
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s*constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+# shells / zero-cost plumbing: charged inside their bodies or free
+_NO_BYTES = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+             "while", "conditional", "call", "after-all", "add-dependency",
+             "partition-id", "replica-id", "iota", "custom-call"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str                                  # text after the opcode '('
+    is_root: bool = False
+
+    def operands(self) -> List[str]:
+        # operand refs appear before the first attribute (", key=")
+        call = self.rest.split("), ")[0]
+        return _OPERAND_RE.findall(call)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    is_entry: bool = False
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: Dict[str, int]
+    per_op_count: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.per_op_bytes.values())
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    collectives: CollectiveStats
+    trip_counts: Dict[str, int]                 # while-body comp -> trips
+    n_computations: int = 0
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _first_shape(type_str: str) -> Optional[Tuple[str, Tuple[int, ...]]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = tuple(int(d) for d in m.group(2).split(",") if d) if m.group(2) \
+        else ()
+    return m.group(1), dims
+
+
+def _split_instr(ln: str) -> Optional[Instr]:
+    """Parse '[ROOT ]%name = TYPE opcode(rest' — TYPE may be a tuple with
+    nested parens and '/*index=N*/' comments, so it is scanned by paren
+    balance, not regex."""
+    m = _INSTR_HEAD_RE.match(ln)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = ln[m.end():]
+    if rest.startswith("("):
+        depth = 0
+        end = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    end = i + 1
+                    break
+        type_str, tail = rest[:end], rest[end:]
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        type_str, tail = rest[:sp], rest[sp:]
+    m2 = _OPCODE_RE.match(tail)
+    if not m2:
+        return None
+    return Instr(name, type_str, m2.group(1), tail[m2.end():],
+                 is_root=ln.lstrip().startswith("ROOT "))
+
+
+def parse_module(hlo_text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    for ln in hlo_text.splitlines():
+        if ln.rstrip().endswith("{") and not ln.startswith(" "):
+            hdr = _COMP_HDR_RE.match(ln)
+            if hdr:
+                current = Computation(hdr.group(2), [], bool(hdr.group(1)))
+                comps[current.name] = current
+                continue
+        if ln.startswith("}"):
+            current = None
+            continue
+        if current is None:
+            continue
+        ins = _split_instr(ln)
+        if ins:
+            current.instrs.append(ins)
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """jax scans lower to ``while(cond: i < constant(N))`` — take the largest
+    integer scalar constant in the condition computation as the bound.
+    Constants print as ``%c = s32[] constant(8)`` -> opcode 'constant',
+    type 's32[]', rest starting '8)'."""
+    best = 1
+    for ins in cond.instrs:
+        if (ins.opcode == "constant" and "[]" in ins.type_str
+                and ins.type_str.strip()[0] in "su"):
+            m = re.match(r"(\d+)\)", ins.rest.strip())
+            if m:
+                best = max(best, int(m.group(1)))
+    return max(1, min(best, 10_000_000))
+
+
+def _call_edges(comp: Computation, comps: Dict[str, Computation],
+                trips: Dict[str, int]) -> List[Tuple[str, float]]:
+    """(callee, per-invocation factor) edges out of ``comp``."""
+    edges: List[Tuple[str, float]] = []
+    for ins in comp.instrs:
+        if ins.opcode == "while":
+            kinds = dict(_CALL_KIND_RE.findall(ins.rest))
+            body, cond = kinds.get("body"), kinds.get("condition")
+            mcfg = _TRIP_CFG_RE.search(ins.rest)    # XLA's own analysis
+            if mcfg:
+                t = int(mcfg.group(1))
+            else:
+                t = _trip_count(comps[cond]) if cond in comps else 1
+            if body in comps:
+                trips[body] = t
+                edges.append((body, float(t)))
+            if cond in comps:
+                edges.append((cond, float(t + 1)))
+        elif ins.opcode == "conditional":
+            names = []
+            mb = _BRANCHES_RE.search(ins.rest)
+            if mb:
+                names = _OPERAND_RE.findall(mb.group(1))
+            names += _TF_COMP_RE.findall(ins.rest)
+            edges += [(n, 1.0) for n in names if n in comps]
+        else:
+            edges += [(name, 1.0)
+                      for _, name in _CALL_KIND_RE.findall(ins.rest)
+                      if name in comps]
+    return edges
+
+
+def _multiplicities(comps: Dict[str, Computation]
+                    ) -> Tuple[Dict[str, float], Dict[str, int]]:
+    """Execution count per computation, propagated from ENTRY through the
+    call DAG (iterated to fixpoint; nesting depth bounds the pass count)."""
+    trips: Dict[str, int] = {}
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {c: 1.0 for c in comps}, trips
+    mult = {c: (1.0 if comps[c].is_entry else 0.0) for c in comps}
+    for _ in range(64):                      # > max computation nesting depth
+        new_mult = {c: (1.0 if comps[c].is_entry else 0.0) for c in comps}
+        for comp in comps.values():
+            m_here = mult[comp.name]
+            if m_here <= 0.0:
+                continue
+            for callee, f in _call_edges(comp, comps, trips):
+                new_mult[callee] += m_here * f
+        if new_mult == mult:
+            break
+        mult = new_mult
+    return mult, trips
+
+
+def _fusion_io_bytes(called: Computation, operand_types: List[str],
+                     result_type: str) -> int:
+    """Effective memory traffic of one fusion call (XLA convention):
+
+    * an operand whose parameter is ONLY consumed by slicing ops inside the
+      fusion is charged at the sliced bytes, not the full buffer (the layer
+      scan's stacked-weight / saved-activation reads),
+    * a fusion whose ROOT is dynamic-update-slice writes in place: charge
+      2 x update bytes (read-modify-write of the region), not the buffer.
+    """
+    params: Dict[int, Instr] = {}
+    for ins in called.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)\)", ins.rest.strip())
+            if m:
+                params[int(m.group(1))] = ins
+
+    # pure-view alias map (bitcast chains): name -> root name
+    alias: Dict[str, str] = {}
+    for ins in called.instrs:
+        if ins.opcode == "bitcast":
+            ops = ins.operands()
+            if ops:
+                alias[ins.name] = alias.get(ops[0], ops[0])
+
+    def root_of(name: Optional[str]) -> Optional[str]:
+        return alias.get(name, name)
+
+    root = next((i for i in called.instrs if i.is_root),
+                called.instrs[-1] if called.instrs else None)
+    dus_dest = None                       # in-place updated buffer: free
+    if root is not None and root.opcode == "dynamic-update-slice":
+        dus_dest = root_of((root.operands() + [None])[0])
+    total = 0
+    for idx, t in enumerate(operand_types):
+        full = _type_bytes(t)
+        p = params.get(idx)
+        if p is not None:
+            views = {p.name} | {n for n, r in alias.items() if r == p.name}
+            if dus_dest in views:
+                continue                  # aliased destination, not traffic
+            uses = [i for i in called.instrs
+                    if views & set(i.operands()) and i.opcode != "bitcast"]
+            if uses and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                            for u in uses):
+                full = min(full, sum(_type_bytes(u.type_str) for u in uses))
+        total += full
+    if dus_dest is not None:
+        upd_name = root_of((root.operands() + [None, None])[1])
+        upd = next((i for i in called.instrs if i.name == upd_name), None)
+        upd_bytes = _type_bytes(upd.type_str) if upd else 0
+        if upd_bytes == 0 or upd_bytes > _type_bytes(root.type_str):
+            upd_bytes = _type_bytes(root.type_str)
+        total += 2 * upd_bytes
+    else:
+        total += _type_bytes(result_type)
+    return total
+
+
+def _inline_bodies(comps: Dict[str, Computation]) -> set:
+    """Computations inlined into a caller instruction (fusion bodies,
+    reduce/scatter appliers): their memory traffic is charged at the calling
+    instruction's boundary, so byte-accounting must skip their insides.
+    While/conditional bodies are real control flow and stay accountable."""
+    out = set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.opcode in ("while", "conditional"):
+                continue
+            for _, name in _CALL_KIND_RE.findall(ins.rest):
+                out.add(name)
+    return out
+
+
+def analyze_hlo(hlo_text: str) -> HloCost:
+    comps = parse_module(hlo_text)
+    mult, trips = _multiplicities(comps)
+    inline = _inline_bodies(comps)
+
+    # global result-shape map (instruction names are unique per computation;
+    # resolve locally first, then globally)
+    shape_of: Dict[str, str] = {}
+    for comp in comps.values():
+        for ins in comp.instrs:
+            shape_of[f"{comp.name}/{ins.name}"] = ins.type_str
+            shape_of.setdefault(ins.name, ins.type_str)
+
+    def operand_type(comp: Computation, name: str) -> str:
+        return shape_of.get(f"{comp.name}/{name}", shape_of.get(name, ""))
+
+    flops = 0.0
+    total_bytes = 0.0
+    coll_bytes = {k: 0 for k in COLLECTIVE_OPS}
+    coll_count = {k: 0 for k in COLLECTIVE_OPS}
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m <= 0.0:
+            continue
+        for ins in comp.instrs:
+            # ---- flops: dots (+ convolutions) --------------------------------
+            if ins.opcode == "dot":
+                out = _first_shape(ins.type_str)
+                ops = ins.operands()
+                lhs = _first_shape(operand_type(comp, ops[0])) if ops else None
+                if out and lhs:
+                    mm = _CONTRACT_RE.search(ins.rest)
+                    contract = 1
+                    if mm and mm.group(1):
+                        for d in mm.group(1).split(","):
+                            if d and int(d) < len(lhs[1]):
+                                contract *= lhs[1][int(d)]
+                    flops += m * 2.0 * math.prod(out[1] or (1,)) * contract
+            elif ins.opcode == "convolution":
+                out = _first_shape(ins.type_str)
+                ops = ins.operands()
+                ker = (_first_shape(operand_type(comp, ops[1]))
+                       if len(ops) > 1 else None)
+                if out and ker:
+                    out_elems = math.prod(out[1] or (1,))
+                    ker_elems = math.prod(ker[1] or (1,))
+                    out_ch = out[1][-1] if out[1] else 1
+                    flops += m * 2.0 * out_elems * ker_elems / max(1, out_ch)
+
+            # ---- bytes ------------------------------------------------------
+            base = ins.opcode
+            for suffix in ("-start", "-done"):
+                if base.endswith(suffix):
+                    base = base[: -len(suffix)]
+            if (ins.opcode not in _NO_BYTES
+                    and comp.name not in inline
+                    and not ins.opcode.endswith("-done")):
+                if ins.opcode in ("dynamic-slice", "gather", "slice"):
+                    # XLA convention: slicing reads only the sliced bytes
+                    b = 2 * _type_bytes(ins.type_str)
+                elif ins.opcode in ("dynamic-update-slice", "scatter"):
+                    ops = ins.operands()
+                    upd = (_type_bytes(operand_type(comp, ops[1]))
+                           if len(ops) > 1 else 0)
+                    b = _type_bytes(ins.type_str) + 2 * upd
+                elif ins.opcode == "fusion":
+                    called = None
+                    for _, cname in _CALL_KIND_RE.findall(ins.rest):
+                        called = comps.get(cname)
+                        break
+                    op_types = [operand_type(comp, o)
+                                for o in ins.operands()]
+                    if called is not None:
+                        b = _fusion_io_bytes(called, op_types, ins.type_str)
+                    else:
+                        b = (_type_bytes(ins.type_str)
+                             + sum(_type_bytes(t) for t in op_types))
+                else:
+                    b = _type_bytes(ins.type_str)
+                    for op_name in ins.operands():
+                        b += _type_bytes(operand_type(comp, op_name))
+                total_bytes += m * b
+
+            # ---- collectives --------------------------------------------------
+            if base in COLLECTIVE_OPS and not ins.opcode.endswith("-done"):
+                b = sum(_type_bytes(operand_type(comp, o))
+                        for o in ins.operands())
+                if b == 0:
+                    b = _type_bytes(ins.type_str)
+                coll_bytes[base] += int(m * b)
+                coll_count[base] += int(m)
+
+    return HloCost(
+        flops=flops,
+        bytes_accessed=total_bytes,
+        collectives=CollectiveStats(coll_bytes, coll_count),
+        trip_counts=trips,
+        n_computations=len(comps),
+    )

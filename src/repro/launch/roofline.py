@@ -1,0 +1,194 @@
+"""Roofline analysis from a compiled dry-run artifact.
+
+Three terms per (arch x shape x mesh) cell, all in seconds-per-step:
+
+    compute    = HLO_FLOPs_per_chip / PEAK_FLOPS
+    memory     = HLO_bytes_per_chip / HBM_BW
+    collective = collective_bytes_per_chip / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are NOT
+in cost_analysis: we parse the post-SPMD optimized HLO (``compiled.as_text()``
+— shapes there are already per-device) and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+# one shaped type like  bf16[128,4096]{1,0:T(8,128)}  or  f32[] or s32[4]
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+# an HLO instruction line:  %name = <type> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s+([a-z][\w\-]*)\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    per_op_bytes: Dict[str, int]                  # opcode -> total operand bytes
+    per_op_count: Dict[str, int]
+    instances: List[Tuple[str, int]]              # (opcode, bytes) per instr
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.per_op_bytes.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in post-optimization HLO.
+
+    Operand types are resolved through an instruction-name -> result-bytes map
+    (post-SPMD HLO prints operands as bare %names). `*-start`/`*-done` pairs
+    (async collectives) are counted once, on the -start op.
+    """
+    result_bytes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if m:
+            result_bytes[m.group(1)] = _type_bytes(m.group(2))
+
+    per_bytes: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    per_count: Dict[str, int] = {k: 0 for k in COLLECTIVE_OPS}
+    instances: List[Tuple[str, int]] = []
+    for ln in lines:
+        m = _INSTR_RE.match(ln)
+        if not m:
+            continue
+        opcode = m.group(3)
+        base = opcode
+        for suffix in ("-start", "-done"):
+            if base.endswith(suffix):
+                base = base[: -len(suffix)]
+        if base not in COLLECTIVE_OPS or opcode.endswith("-done"):
+            continue
+        # operand names: %refs inside the call parens of this line
+        call = ln[m.end(3):]
+        operands = re.findall(r"%[\w.\-]+", call)
+        b = sum(result_bytes.get(op, 0) for op in operands)
+        if b == 0:
+            # fallback: inline-typed operands or unresolvable — use result type
+            b = _type_bytes(m.group(2))
+        per_bytes[base] += b
+        per_count[base] += 1
+        instances.append((base, b))
+    return CollectiveStats(per_bytes, per_count, instances)
+
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops_per_chip: float
+    useful_flops_frac: float            # MODEL_FLOPS / HLO_FLOPs
+    collectives: Dict[str, int]
+    collective_counts: Dict[str, int]
+    peak_bytes_per_chip: Optional[float] = None
+
+    @property
+    def step_s(self) -> float:
+        """Lower-bound step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_frac(self) -> float:
+        """Useful-compute roofline fraction = MFU upper bound for this HLO:
+        (model flops / peak) / step_s."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops_per_chip / PEAK_FLOPS) / self.step_s
+
+    def row(self) -> Dict[str, Any]:
+        return {
+            "flops_per_chip": self.flops_per_chip,
+            "hbm_bytes_per_chip": self.hbm_bytes_per_chip,
+            "collective_bytes_per_chip": self.collective_bytes_per_chip,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "model_flops_per_chip": self.model_flops_per_chip,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "step_s": self.step_s,
+            "collectives": self.collectives,
+            "collective_counts": self.collective_counts,
+            "peak_bytes_per_chip": self.peak_bytes_per_chip,
+        }
+
+
+def model_flops(n_active_params: int, tokens_per_step: int,
+                kind: str) -> float:
+    """6·N·D for training (fwd+bwd), 2·N·D for inference forward."""
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * n_active_params * tokens_per_step
+
+
+def analyze(cost: Dict[str, float], collective: CollectiveStats,
+            *, n_chips: int, model_flops_total: float,
+            peak_bytes: Optional[float] = None) -> Roofline:
+    """Build the 3-term roofline from compiled cost_analysis + HLO parse.
+
+    ``cost_analysis`` of a post-SPMD module reports PER-DEVICE flops/bytes
+    (the module is the per-device program); collective bytes from
+    ``parse_collectives`` are per-device too.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll = float(collective.total_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    collective_s = coll / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf_chip = model_flops_total / n_chips
+    return Roofline(
+        flops_per_chip=flops,
+        hbm_bytes_per_chip=bytes_acc,
+        collective_bytes_per_chip=coll,
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        bottleneck=bottleneck,
+        model_flops_per_chip=mf_chip,
+        useful_flops_frac=(mf_chip / flops) if flops else 0.0,
+        collectives=dict(collective.per_op_bytes),
+        collective_counts=dict(collective.per_op_count),
+        peak_bytes_per_chip=peak_bytes,
+    )

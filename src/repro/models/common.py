@@ -1,0 +1,105 @@
+"""Shared model primitives: norms, inits, parameter builder with logical axes.
+
+Parameters are plain nested dicts of jnp arrays. Every parameter carries a
+tuple of *logical axis names* (e.g. ``("embed", "ff")``) in a parallel tree;
+``repro.runtime.mesh_util`` maps logical names to mesh axes per run, which is
+how one model definition serves every (shape x mesh) cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return jnp.tanh(x / cap) * cap
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+class ParamBuilder:
+    """Accumulates parameters + their logical axes under nested name scopes."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+        self._scope: list = []
+
+    def _split(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def scope(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder.__new__(ParamBuilder)
+        child._key = self._split()
+        child.dtype = self.dtype
+        d_p: Dict[str, Any] = {}
+        d_a: Dict[str, Any] = {}
+        self.params[name] = d_p
+        self.axes[name] = d_a
+        child.params = d_p
+        child.axes = d_a
+        child._scope = self._scope + [name]
+        return child
+
+    def param(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              init: str = "normal", fan_in: Optional[int] = None) -> jax.Array:
+        assert len(shape) == len(axes), (name, shape, axes)
+        if init == "zeros":
+            val = jnp.zeros(shape, self.dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.dtype)
+        else:
+            fi = fan_in if fan_in is not None else (shape[0] if len(shape) > 1 else shape[-1])
+            std = 1.0 / math.sqrt(max(1, fi))
+            val = (jax.random.normal(self._split(), shape, jnp.float32) * std).astype(self.dtype)
+        self.params[name] = val
+        self.axes[name] = axes
+        return val
+
+
+def stack_params(trees: list) -> PyTree:
+    """Stack a list of identically-structured param trees along a new axis 0."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def stack_axes(axes_tree: PyTree, name: str = "layer") -> PyTree:
+    """Prepend a stacking logical axis to every leaf of an axes tree."""
+    return jax.tree.map(
+        lambda a: (name,) + tuple(a),
+        axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def count_params(params: PyTree) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

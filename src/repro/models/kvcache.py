@@ -1,0 +1,81 @@
+"""KV-cache structures for decode. Registered as pytrees so they flow through jit.
+
+Two layouts:
+  * ``KVCache``  — standard GQA: k/v (B, S_max, K, D).
+  * ``MLACache`` — deepseek MLA: compressed c_kv (B, S_max, r) + shared rope
+    key (B, S_max, rope_dim); ~(2*K*D)/(r+rope) smaller than materialized k/v.
+
+Sliding-window layers may allocate ``S_max = window`` and write via ring
+indexing (``ring=True``) — the beyond-paper memory optimization for long
+contexts (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    k: jax.Array                     # (B, S_max, K, D)
+    v: jax.Array                     # (B, S_max, K, D)
+    length: jax.Array                # () int32 — tokens already in cache
+    ring: bool = dataclasses.field(default=False, metadata=dict(static=True))
+
+    @property
+    def max_len(self) -> int:
+        return self.k.shape[1]
+
+    @staticmethod
+    def init(batch: int, max_len: int, kv_heads: int, head_dim: int,
+             dtype=jnp.bfloat16, ring: bool = False) -> "KVCache":
+        shape = (batch, max_len, kv_heads, head_dim)
+        return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                       jnp.zeros((), jnp.int32), ring)
+
+    def append(self, k_new: jax.Array, v_new: jax.Array) -> "KVCache":
+        """Append S_new tokens (B, S_new, K, D) at position ``length``."""
+        pos = self.length % self.max_len if self.ring else self.length
+        k = jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), (0, pos, 0, 0))
+        return KVCache(k, v, self.length + k_new.shape[1], self.ring)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MLACache:
+    c_kv: jax.Array                  # (B, S_max, r)
+    k_rope: jax.Array                # (B, S_max, rope_dim)
+    length: jax.Array                # () int32
+
+    @property
+    def max_len(self) -> int:
+        return self.c_kv.shape[1]
+
+    @staticmethod
+    def init(batch: int, max_len: int, kv_lora_rank: int, rope_dim: int,
+             dtype=jnp.bfloat16) -> "MLACache":
+        return MLACache(
+            jnp.zeros((batch, max_len, kv_lora_rank), dtype),
+            jnp.zeros((batch, max_len, rope_dim), dtype),
+            jnp.zeros((), jnp.int32),
+        )
+
+    def append(self, c_new: jax.Array, kr_new: jax.Array) -> "MLACache":
+        c = jax.lax.dynamic_update_slice(self.c_kv, c_new.astype(self.c_kv.dtype), (0, self.length, 0))
+        kr = jax.lax.dynamic_update_slice(self.k_rope, kr_new.astype(self.k_rope.dtype), (0, self.length, 0))
+        return MLACache(c, kr, self.length + c_new.shape[1])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    """Recurrent state for mamba / xLSTM decode: O(1) in sequence length."""
+    conv: jax.Array                  # (B, conv_width-1, inner) rolling conv inputs
+    state: jax.Array                 # (B, ...) recurrent state
+    extra: Any                       # e.g. sLSTM normalizer / mLSTM (n, m) terms
+    length: jax.Array

@@ -1,0 +1,24 @@
+"""Dense FFN: gated (SwiGLU-style) and classic 2-matrix MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamBuilder, act_fn
+
+
+def init_mlp(b: ParamBuilder, d_model: int, d_ff: int, gated: bool = True) -> None:
+    if gated:
+        b.param("w_gate", (d_model, d_ff), ("embed", "ff"))
+    b.param("w_up", (d_model, d_ff), ("embed", "ff"))
+    b.param("w_down", (d_ff, d_model), ("ff", "embed"))
+
+
+def mlp(params, x: jax.Array, act: str = "silu", gated: bool = True) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+        h = act_fn(act)(gate) * up
+    else:
+        h = act_fn(act)(up)
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])

@@ -1,0 +1,77 @@
+"""Rotary position embeddings: standard, partial (stablelm), and M-RoPE (qwen2-vl)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float, rotary_pct: float = 1.0) -> jax.Array:
+    """Inverse frequencies for the rotated sub-dimension."""
+    rot_dim = int(head_dim * rotary_pct)
+    rot_dim -= rot_dim % 2
+    if rot_dim == 0:
+        return jnp.zeros((0,), jnp.float32)
+    exponent = jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim
+    return 1.0 / (theta ** exponent)
+
+
+def _rotate_half(x: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([-x2, x1], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               rotary_pct: float = 1.0) -> jax.Array:
+    """Apply RoPE. x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta, rotary_pct)
+    rot_dim = 2 * inv.shape[0]
+    if rot_dim == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, rot/2)
+    ang = jnp.concatenate([ang, ang], axis=-1)               # (..., S, rot)
+    cos = jnp.cos(ang)[..., :, None, :]                      # (..., S, 1, rot)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x_rot, x_pass = x[..., :rot_dim], x[..., rot_dim:]
+    x_f = x_rot.astype(jnp.float32)
+    out = x_f * cos + _rotate_half(x_f) * sin
+    return jnp.concatenate([out.astype(x.dtype), x_pass], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions_3d: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Multimodal RoPE (qwen2-vl): three position streams (t, h, w).
+
+    x: (B, S, H, D). positions_3d: (3, B, S). ``sections`` splits the D/2
+    frequency slots among (t, h, w); each slot's angle uses its stream's
+    position. For pure-text positions the three streams coincide and this
+    reduces to standard RoPE.
+    """
+    head_dim = x.shape[-1]
+    inv = rope_freqs(head_dim, theta, 1.0)                    # (D/2,)
+    half = inv.shape[0]
+    assert sum(sections) == half, (sections, half)
+    # stream index for every frequency slot
+    sect_ids = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)
+    ])                                                        # (D/2,)
+    pos = positions_3d.astype(jnp.float32)                    # (3, B, S)
+    pos_per_slot = pos[sect_ids, :, :]                        # (D/2, B, S)
+    ang = jnp.einsum("dbs,d->bsd", pos_per_slot, inv)         # (B, S, D/2)
+    ang = jnp.concatenate([ang, ang], axis=-1)                # (B, S, D)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x_f = x.astype(jnp.float32)
+    out = x_f * cos + _rotate_half(x_f) * sin
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(batch: int, seq: int,
+                         offset: Optional[jax.Array] = None) -> jax.Array:
+    """(3, B, S) position ids where all three streams share text positions."""
+    p = jnp.arange(seq, dtype=jnp.int32)[None, :].repeat(batch, axis=0)
+    if offset is not None:
+        p = p + offset[:, None].astype(jnp.int32)
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,102 @@
+"""Mamba-style selective SSM block (hymba's SSM heads).
+
+Train/prefill use a chunk-free ``lax.scan`` over time (small HLO; the Pallas
+``ssm_scan`` kernel is the TPU perf path). Decode carries ``SSMCache`` — the
+O(1)-state property that makes long_500k runnable for hybrid/ssm archs.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.common import ParamBuilder
+from repro.models.kvcache import SSMCache
+
+
+def init_ssm(b: ParamBuilder, d_model: int, s: SSMConfig) -> None:
+    inner = s.expand * d_model
+    dt_rank = s.dt_rank or -(-d_model // 16)
+    b.param("in_proj", (d_model, 2 * inner), ("embed", "ff"))
+    b.param("conv_w", (s.conv_width, inner), (None, "ff"))
+    b.param("conv_b", (inner,), ("ff",), init="zeros")
+    b.param("x_proj", (inner, dt_rank + 2 * s.state_dim), ("ff", None))
+    b.param("dt_proj", (dt_rank, inner), (None, "ff"), fan_in=dt_rank)
+    b.param("dt_bias", (inner,), ("ff",), init="zeros")
+    b.param("a_log", (inner, s.state_dim), ("ff", "state"), init="ones")
+    b.param("d_skip", (inner,), ("ff",), init="ones")
+    b.param("out_proj", (inner, d_model), ("ff", "embed"), fan_in=inner)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 history: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C). Returns (out, new_history)."""
+    width = w.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)            # (B, S+W-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
+    new_hist = xp[:, xp.shape[1] - (width - 1):, :]
+    return out, new_hist
+
+
+def ssm_forward(
+    params, x: jax.Array, s: SSMConfig, *,
+    cache: Optional[SSMCache] = None,
+) -> Tuple[jax.Array, Optional[SSMCache]]:
+    """x: (B, S, d) -> (B, S, d). cache!=None => recurrent decode continuation."""
+    B, S, d = x.shape
+    inner = s.expand * d
+    dt_rank = s.dt_rank or -(-d // 16)
+
+    xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"])
+    x_in, z = xz[..., :inner], xz[..., inner:]
+    hist = cache.conv if cache is not None else None
+    x_c, new_hist = _causal_conv(x_in, params["conv_w"], params["conv_b"], hist)
+    x_c = jax.nn.silu(x_c)
+
+    proj = jnp.einsum("bsi,ir->bsr", x_c, params["x_proj"])
+    dt_in = proj[..., :dt_rank]
+    b_in = proj[..., dt_rank:dt_rank + s.state_dim]             # (B,S,n)
+    c_in = proj[..., dt_rank + s.state_dim:]                    # (B,S,n)
+    dt = jax.nn.softplus(jnp.einsum("bsr,ri->bsi", dt_in, params["dt_proj"])
+                         + params["dt_bias"])                   # (B,S,i)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))           # (i,n)
+
+    h0 = (cache.state if cache is not None
+          else jnp.zeros((B, inner, s.state_dim), jnp.float32))
+
+    def step(h, inputs):
+        dt_t, b_t, c_t, x_t = inputs                            # (B,i),(B,n),(B,n),(B,i)
+        dt_f = dt_t.astype(jnp.float32)
+        da = jnp.exp(dt_f[:, :, None] * a[None])                # (B,i,n)
+        dbx = (dt_f * x_t.astype(jnp.float32))[:, :, None] * b_t.astype(jnp.float32)[:, None, :]
+        h = da * h + dbx
+        y_t = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_in, 1, 0),
+          jnp.moveaxis(c_in, 1, 0), jnp.moveaxis(x_c, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                  # (B,S,i)
+    y = y + x_c * params["d_skip"]
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(new_hist, h_last, cache.extra, cache.length + S)
+    return out, new_cache
+
+
+def ssm_init_cache(cfg_d_model: int, s: SSMConfig, batch: int,
+                   dtype=jnp.bfloat16) -> SSMCache:
+    inner = s.expand * cfg_d_model
+    return SSMCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, inner), dtype),
+        state=jnp.zeros((batch, inner, s.state_dim), jnp.float32),
+        extra=None,
+        length=jnp.zeros((), jnp.int32),
+    )

@@ -1,0 +1,323 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory, recurrent).
+
+Both use exponential gating with the max-stabilizer from the xLSTM paper
+(arXiv:2405.04517). q/k/v and the sLSTM recurrence use block-diagonal
+per-head projections. Sequential ``lax.scan`` is the reference path; the
+chunked-parallel mLSTM (linear-attention form) is the Pallas kernel target.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.common import ParamBuilder
+from repro.models.kvcache import SSMCache
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(b: ParamBuilder, d_model: int, x: XLSTMConfig) -> None:
+    inner = int(d_model * x.proj_factor_mlstm)
+    h = x.num_heads
+    dh = inner // h
+    b.param("up_proj", (d_model, 2 * inner), ("embed", "ff"))
+    b.param("conv_w", (x.conv_width, inner), (None, "ff"))
+    b.param("conv_b", (inner,), ("ff",), init="zeros")
+    for n in ("wq", "wk", "wv"):
+        b.param(n, (h, dh, dh), ("heads", "head_dim", "head_dim"), fan_in=dh)
+    b.param("w_gates", (inner, 2 * h), ("ff", None))   # i~, f~ per head
+    b.param("b_gates", (2 * h,), (None,), init="zeros")
+    b.param("out_norm", (inner,), ("ff",), init="zeros")
+    b.param("down_proj", (inner, d_model), ("ff", "embed"), fan_in=inner)
+
+
+def _mlstm_scan(q, k, v, i_raw, f_raw, state=None):
+    """Stabilized mLSTM recurrence.
+
+    q,k,v: (B,S,H,dh); i_raw,f_raw: (B,S,H). Returns (y (B,S,H,dh), state).
+    state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) all float32.
+    """
+    B, S, H, dh = q.shape
+    if state is None:
+        c0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def step(carry, inp):
+        c, n, m = carry
+        q_t, k_t, v_t, i_t, f_t = inp                       # (B,H,dh)x3,(B,H)x2
+        f_log = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
+        i_log = i_t.astype(jnp.float32)
+        m_new = jnp.maximum(f_log + m, i_log)
+        i_p = jnp.exp(i_log - m_new)                        # (B,H)
+        f_p = jnp.exp(f_log + m - m_new)
+        kf = k_t.astype(jnp.float32) * (dh ** -0.5)
+        vf = v_t.astype(jnp.float32)
+        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+            kf[..., :, None] * vf[..., None, :])            # (B,H,dh,dh)
+        n = f_p[..., None] * n + i_p[..., None] * kf
+        qf = q_t.astype(jnp.float32)
+        num = jnp.einsum("bhde,bhd->bhe", c, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)),
+                          jnp.exp(-m_new))[..., None]
+        y_t = num / den
+        return (c, n, m_new), y_t
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_raw, f_raw))
+    (c, n, m), ys = jax.lax.scan(step, (c0, n0, m0), xs)
+    return jnp.moveaxis(ys, 0, 1), (c, n, m)
+
+
+def _mlstm_chunked(q, k, v, i_raw, f_raw, state=None, chunk: int = 256):
+    """Chunk-parallel mLSTM — exact-math reformulation of ``_mlstm_scan``.
+
+    The sequential recurrence unrolls to (with F_t = Σ_{u<=t} log σ(f_u),
+    g_k = i_k - F_k, M*_j = max(m_in, cummax_{k<=j} g_k), m_j = F_j + M*_j):
+
+        C_stab_j = Σ_{k<=j} e^{g_k - M*_j} k̂_k v_kᵀ + e^{m_in - M*_j} C_in
+        y_j      = q_j·C_stab_j / max(|q_j·n_stab_j|, e^{-m_j})
+
+    so a chunk of ck steps is two MXU einsums (an intra-chunk masked
+    attention and one cross-chunk state contraction) instead of ck
+    elementwise (dh x dh) outer-product updates — the §Perf B1 change:
+    state trajectories are only materialized at chunk boundaries
+    (S/ck boundaries instead of S), and the O(S·dh²) work runs on the MXU.
+    Mathematically identical to the scan; numerically equal to ~1e-4
+    (different-but-valid stabilizer grouping). Validated vs the scan oracle
+    in tests/test_xlstm_chunked.py.
+    """
+    B, S, H, dh = q.shape
+    ck = min(chunk, S)
+    while S % ck:
+        ck -= 1
+    nc = S // ck
+
+    f_log = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))      # (B,S,H)
+    i_log = i_raw.astype(jnp.float32)
+    kf = k.astype(jnp.float32) * (dh ** -0.5)
+    qf = q.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(B, nc, ck, *t.shape[2:]), 1, 0)
+
+    q_c, k_c, v_c = to_chunks(qf), to_chunks(kf), to_chunks(vf)
+    f_c, i_c = to_chunks(f_log), to_chunks(i_log)
+
+    if state is None:
+        c0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -jnp.inf, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    causal = jnp.tril(jnp.ones((ck, ck), bool))                 # k<=j
+
+    def chunk_step(carry, inp):
+        c_in, n_in, m_in = carry
+        qb, kb, vb, fb, ib = inp                                # (B,ck,H,*)
+        F = jnp.cumsum(fb, axis=1)                              # (B,ck,H)
+        g = ib - F
+        mstar = jnp.maximum(jax.lax.cummax(g, axis=1),
+                            m_in[:, None, :])                   # (B,ck,H)
+        m = F + mstar
+
+        # intra-chunk: masked attention with decay weights
+        scores = jnp.einsum("bjhd,bkhd->bhjk", qb, kb)          # (B,H,ck,ck)
+        logw = (g[:, None, :, :].transpose(0, 3, 1, 2)          # g_k: (B,H,1,ck)
+                - mstar.transpose(0, 2, 1)[:, :, :, None])      # -M*_j
+        w = jnp.where(causal[None, None], jnp.exp(logw), 0.0)
+        num = jnp.einsum("bhjk,bkhd->bjhd", scores * w, vb)
+        n_intra = jnp.einsum("bhjk,bkhd->bjhd", w, kb)
+
+        # cross-chunk: carried state contribution
+        carry_w = jnp.exp(m_in[:, None, :] - mstar)             # (B,ck,H)
+        num = num + jnp.einsum("bjhd,bhde->bjhe", qb, c_in) * carry_w[..., None]
+        n_all = n_intra + n_in[:, None, :, :] * carry_w[..., None]
+
+        qn = jnp.einsum("bjhd,bjhd->bjh", qb, n_all)
+        den = jnp.maximum(jnp.abs(qn), jnp.exp(-m))
+        y = num / den[..., None]                                # (B,ck,H,dh)
+
+        # state carry to the next chunk (coefficients at j = ck)
+        F_tot = F[:, -1, :]                                     # (B,H)
+        ms_tot = mstar[:, -1, :]
+        kv_w = jnp.exp(g - ms_tot[:, None, :])                  # (B,ck,H)
+        c_out = (jnp.einsum("bkhd,bkhe,bkh->bhde", kb, vb, kv_w)
+                 + c_in * jnp.exp(m_in - ms_tot)[:, :, None, None])
+        n_out = (jnp.einsum("bkhd,bkh->bhd", kb, kv_w)
+                 + n_in * jnp.exp(m_in - ms_tot)[:, :, None])
+        m_out = F_tot + ms_tot
+        return (c_out, n_out, m_out), y
+
+    (c, n, m), ys = jax.lax.scan(chunk_step, (c0, n0, m0),
+                                 (q_c, k_c, v_c, f_c, i_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dh)
+    return y, (c, n, m)
+
+
+def _group_norm_heads(y: jax.Array, scale: jax.Array, heads: int) -> jax.Array:
+    """Per-head RMS norm of (B,S,inner) reshaped to heads."""
+    B, S, inner = y.shape
+    yh = y.reshape(B, S, heads, inner // heads).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yh), axis=-1, keepdims=True)
+    yh = yh * jax.lax.rsqrt(var + 1e-6)
+    return (yh.reshape(B, S, inner) * (1.0 + scale.astype(jnp.float32)))
+
+
+def mlstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
+                  cache: Optional[SSMCache] = None
+                  ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    B, S, d = x.shape
+    inner = int(d * xc.proj_factor_mlstm)
+    h = xc.num_heads
+    dh = inner // h
+
+    up = jnp.einsum("bsd,di->bsi", x, params["up_proj"])
+    x_in, z = up[..., :inner], up[..., inner:]
+    hist = cache.conv if cache is not None else jnp.zeros(
+        (B, xc.conv_width - 1, inner), x.dtype)
+    xp = jnp.concatenate([hist, x_in], axis=1)
+    x_c = sum(xp[:, i:i + S, :] * params["conv_w"][i]
+              for i in range(xc.conv_width)) + params["conv_b"]
+    x_c = jax.nn.silu(x_c)
+    new_hist = xp[:, xp.shape[1] - (xc.conv_width - 1):, :]
+
+    xh = x_c.reshape(B, S, h, dh)
+    q = jnp.einsum("bshd,hde->bshe", xh, params["wq"])
+    k = jnp.einsum("bshd,hde->bshe", xh, params["wk"])
+    v = jnp.einsum("bshd,hde->bshe", x_in.reshape(B, S, h, dh), params["wv"])
+    gates = jnp.einsum("bsi,ig->bsg", x_c, params["w_gates"]) + params["b_gates"]
+    i_raw, f_raw = gates[..., :h], gates[..., h:]
+
+    state = None
+    if cache is not None:
+        c_prev = cache.state
+        n_prev, m_prev = cache.extra
+        state = (c_prev, n_prev, m_prev)
+    if S >= 2 * xc.chunk:
+        # chunk-parallel form (§Perf B1): MXU einsums + O(S/chunk) state
+        # materialization instead of an O(S) elementwise recurrence
+        y, new_state = _mlstm_chunked(q, k, v, i_raw, f_raw, state,
+                                      chunk=xc.chunk)
+    else:
+        y, new_state = _mlstm_scan(q, k, v, i_raw, f_raw, state)
+
+    y = _group_norm_heads(y.reshape(B, S, inner), params["out_norm"], h)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bsi,id->bsd", y, params["down_proj"])
+
+    new_cache = None
+    if cache is not None:
+        c, n, m = new_state
+        new_cache = SSMCache(new_hist, c, (n, m), cache.length + S)
+    return out, new_cache
+
+
+def mlstm_init_cache(d_model: int, xc: XLSTMConfig, batch: int,
+                     dtype=jnp.bfloat16) -> SSMCache:
+    inner = int(d_model * xc.proj_factor_mlstm)
+    h, dh = xc.num_heads, inner // xc.num_heads
+    return SSMCache(
+        conv=jnp.zeros((batch, xc.conv_width - 1, inner), dtype),
+        state=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        extra=(jnp.zeros((batch, h, dh), jnp.float32),
+               jnp.full((batch, h), -jnp.inf, jnp.float32)),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_ff_half(d_model: int, x: XLSTMConfig) -> int:
+    """Gated-FF half width: proj_factor * d_model rounded up to 64 (TPU lane
+    alignment; also keeps the 2-way gate split exact for any d_model)."""
+    return -(-int(d_model * x.proj_factor_slstm) // 64) * 64
+
+
+def init_slstm(b: ParamBuilder, d_model: int, x: XLSTMConfig) -> None:
+    h = x.num_heads
+    dh = d_model // h
+    b.param("w_in", (d_model, 4 * d_model), ("embed", "ff"))
+    b.param("r_rec", (h, dh, 4 * dh), ("heads", "head_dim", None), fan_in=dh)
+    b.param("b_in", (4 * d_model,), (None,), init="zeros")
+    b.param("out_norm", (d_model,), ("embed",), init="zeros")
+    half = slstm_ff_half(d_model, x)
+    b.param("ff_up", (d_model, 2 * half), ("embed", "ff"))
+    b.param("ff_down", (half, d_model), ("ff", "embed"), fan_in=half)
+
+
+def slstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
+                  cache: Optional[SSMCache] = None
+                  ) -> Tuple[jax.Array, Optional[SSMCache]]:
+    B, S, d = x.shape
+    h = xc.num_heads
+    dh = d // h
+
+    w = jnp.einsum("bsd,dg->bsg", x, params["w_in"]) + params["b_in"]  # (B,S,4d)
+
+    if cache is not None:
+        h0 = cache.state                                    # (B,d)
+        c0, n0, m0 = cache.extra                            # (B,d),(B,d),(B,h)
+    else:
+        h0 = jnp.zeros((B, d), jnp.float32)
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        m0 = jnp.zeros((B, h), jnp.float32)
+
+    r_rec = params["r_rec"].astype(jnp.float32)
+
+    def step(carry, w_t):
+        h_prev, c, n, m = carry                             # (B,d) f32
+        hh = h_prev.reshape(B, h, dh)
+        rec = jnp.einsum("bhd,hdg->bhg", hh, r_rec).reshape(B, 4 * d)
+        raw = w_t.astype(jnp.float32) + rec
+        i_r, f_r, z_r, o_r = jnp.split(raw, 4, axis=-1)     # (B,d) each
+        # per-head stabilizer (max over head dims of the gate pre-acts)
+        i_h = i_r.reshape(B, h, dh)
+        f_h = jax.nn.log_sigmoid(f_r).reshape(B, h, dh)
+        m_new = jnp.maximum(jnp.max(f_h, -1) + m, jnp.max(i_h, -1))  # (B,h)
+        i_p = jnp.exp(i_h - m_new[..., None]).reshape(B, d)
+        f_p = jnp.exp(f_h + (m - m_new)[..., None]).reshape(B, d)
+        c = f_p * c + i_p * jnp.tanh(z_r)
+        n = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
+        return (h_new, c, n, m_new), h_new
+
+    (h_last, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),
+                                         jnp.moveaxis(w, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1)                              # (B,S,d) f32
+    var = jnp.mean(jnp.square(y.reshape(B, S, h, dh)), -1, keepdims=True)
+    y = (y.reshape(B, S, h, dh) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)
+    y = (y * (1.0 + params["out_norm"].astype(jnp.float32))).astype(x.dtype)
+    # gated FF (proj_factor 4/3, GeLU)
+    up = jnp.einsum("bsd,df->bsf", y, params["ff_up"])
+    u, g = jnp.split(up, 2, axis=-1)
+    out = jnp.einsum("bsf,fd->bsd", u * jax.nn.gelu(g), params["ff_down"])
+
+    new_cache = None
+    if cache is not None:
+        new_cache = SSMCache(cache.conv, h_last, (c, n, m), cache.length + S)
+    return out, new_cache
+
+
+def slstm_init_cache(d_model: int, xc: XLSTMConfig, batch: int,
+                     dtype=jnp.bfloat16) -> SSMCache:
+    h = xc.num_heads
+    return SSMCache(
+        conv=jnp.zeros((batch, 0, 0), dtype),
+        state=jnp.zeros((batch, d_model), jnp.float32),
+        extra=(jnp.zeros((batch, d_model), jnp.float32),
+               jnp.ones((batch, d_model), jnp.float32),
+               jnp.zeros((batch, h), jnp.float32)),
+        length=jnp.zeros((), jnp.int32),
+    )

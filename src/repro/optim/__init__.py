@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW, LR schedules, grad transforms/compression."""
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import warmup_cosine  # noqa: F401
+from repro.optim.grad import (  # noqa: F401
+    clip_by_global_norm,
+    compress_int8,
+    decompress_int8,
+    compressed_psum,
+    global_norm,
+)

@@ -1,0 +1,62 @@
+"""AdamW with decoupled weight decay.
+
+State (m, v) mirrors the parameter pytree, so whatever NamedSharding the
+params carry is inherited by the optimizer state — FSDP params give ZeRO-1
+optimizer sharding for free (DESIGN.md §6).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array          # () int32
+    m: PyTree                # first moment  (f32, like params)
+    v: PyTree                # second moment (f32)
+
+
+def adamw_init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads: PyTree, state: AdamWState, params: PyTree,
+                 lr: jax.Array, cfg: OptimizerConfig
+                 ) -> Tuple[PyTree, AdamWState]:
+    """One AdamW step. ``lr`` is the already-scheduled learning rate."""
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m2 = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mh = m2 / c1
+        vh = v2 / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        decay = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        p2 = p.astype(jnp.float32) - lr * (delta + decay)
+        return p2.astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)

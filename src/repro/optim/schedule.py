@@ -1,0 +1,20 @@
+"""Learning-rate schedules (pure jnp: jit-safe with traced step)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+
+def warmup_cosine(step: jax.Array, cfg: OptimizerConfig,
+                  min_frac: float = 0.1) -> jax.Array:
+    """Linear warmup to cfg.lr over warmup_steps, cosine decay to
+    min_frac*lr at total_steps, flat afterwards."""
+    s = step.astype(jnp.float32)
+    warm = jnp.maximum(1.0, float(cfg.warmup_steps))
+    total = jnp.maximum(warm + 1.0, float(cfg.total_steps))
+    warm_lr = cfg.lr * s / warm
+    prog = jnp.clip((s - warm) / (total - warm), 0.0, 1.0)
+    cos_lr = cfg.lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(s < warm, warm_lr, cos_lr)

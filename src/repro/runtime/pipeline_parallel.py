@@ -1,0 +1,138 @@
+"""GPipe-style pipeline parallelism over a ``pipe`` mesh axis.
+
+First-class option for scale-out beyond the assigned 2-axis meshes
+(DESIGN.md §6): stages hold contiguous layer groups; microbatches stream
+through stages with ``jax.lax.ppermute`` moving activations stage-to-stage —
+the Two-Chains push model applied to layer activations (each hop is a
+one-sided put of an activation "payload frame" to the next stage's mailbox).
+
+Implementation: ``shard_map`` over (``pipe``,). Stage-stacked params
+(leading dim = n_stages) shard over ``pipe``; the rotating-buffer schedule
+runs ``n_micro + n_stages - 1`` ticks, each tick = one block-stack forward
+on every stage + one ppermute. Bubble fraction = (S-1)/(M+S-1), reported by
+``pipeline_cost``.
+
+This module is self-contained (plain transformer blocks) — it is dry-run
+verified separately from the 40-cell matrix, which uses the 2-axis meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class PipeConfig:
+    n_stages: int
+    layers_per_stage: int
+    d_model: int
+    d_ff: int
+    n_micro: int                    # microbatches per step
+    micro_batch: int                # rows per microbatch
+    seq_len: int
+
+
+def init_stage_params(key: jax.Array, pc: PipeConfig) -> PyTree:
+    """(n_stages, layers_per_stage, ...) stacked MLP-block params."""
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        s1 = (pc.d_model ** -0.5)
+        return {
+            "w1": jax.random.normal(k1, (pc.layers_per_stage, pc.d_model,
+                                         pc.d_ff), jnp.float32) * s1,
+            "w2": jax.random.normal(k2, (pc.layers_per_stage, pc.d_ff,
+                                         pc.d_model), jnp.float32)
+            * (pc.d_ff ** -0.5),
+        }
+    keys = jax.random.split(key, pc.n_stages)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *[one(k) for k in keys])
+
+
+def _stage_forward(params: PyTree, x: jax.Array) -> jax.Array:
+    """One stage = scan over its layer stack of gelu-MLP residual blocks."""
+    def body(h, lp):
+        h = h + jnp.einsum("btf,fd->btd",
+                           jax.nn.gelu(jnp.einsum("btd,df->btf", h, lp["w1"])),
+                           lp["w2"])
+        return h, None
+    x, _ = jax.lax.scan(body, x, params)
+    return x
+
+
+def pipeline_forward(params: PyTree, x: jax.Array, pc: PipeConfig,
+                     mesh: Mesh) -> jax.Array:
+    """x: (n_micro, micro_batch, seq, d) -> same, pipelined over stages.
+
+    Schedule (rotating buffer): at tick t, stage s works on microbatch
+    t - s (when in range). Activations hop s -> s+1 via ppermute after
+    every tick; stage 0 feeds from the input queue, the last stage's
+    results collect into the output queue.
+    """
+    n_s, n_m = pc.n_stages, pc.n_micro
+    ticks = n_m + n_s - 1
+
+    def per_stage(stage_params, x_in):
+        # stage_params: (1, L, ...) block of this stage; x_in: full input
+        # queue replicated (simple reference schedule; a production variant
+        # feeds stage 0 only).
+        sp = jax.tree.map(lambda a: a[0], stage_params)
+        stage = jax.lax.axis_index("pipe")
+        buf = jnp.zeros_like(x_in[0])                     # live activation
+        out = jnp.zeros_like(x_in)                        # collected results
+
+        def tick(carry, t):
+            buf, out = carry
+            m_idx = t - stage                             # microbatch here
+            feed = jax.lax.dynamic_index_in_dim(
+                x_in, jnp.clip(t, 0, n_m - 1), 0, keepdims=False)
+            h = jnp.where(stage == 0, feed, buf)
+            h = _stage_forward(sp, h)
+            # collect from the last stage when its microbatch is valid
+            valid = (m_idx >= 0) & (m_idx < n_m)
+            out = jax.lax.cond(
+                valid & (stage == n_s - 1),
+                lambda o: jax.lax.dynamic_update_index_in_dim(
+                    o, h, jnp.clip(m_idx, 0, n_m - 1), 0),
+                lambda o: o, out)
+            # one-sided put of the activation frame to the next stage
+            h_next = jax.lax.ppermute(
+                h, "pipe", [(i, (i + 1) % n_s) for i in range(n_s)])
+            return (h_next, out), None
+
+        (_, out), _ = jax.lax.scan(tick, (buf, out), jnp.arange(ticks))
+        # every stage holds the full `out` zeros except the last; sum-gather
+        return jax.lax.psum(out, "pipe")
+
+    fn = jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P("pipe"), P()),
+        out_specs=P(),
+        check_vma=False)
+    return fn(params, x)
+
+
+def pipeline_reference(params: PyTree, x: jax.Array) -> jax.Array:
+    """Oracle: run every microbatch through all stages sequentially."""
+    def all_stages(h):
+        def body(h, sp):
+            return _stage_forward(sp, h), None
+        h, _ = jax.lax.scan(body, h, params)
+        return h
+    return jax.vmap(all_stages)(x)
+
+
+def pipeline_cost(pc: PipeConfig) -> Dict[str, float]:
+    bubble = (pc.n_stages - 1) / (pc.n_micro + pc.n_stages - 1)
+    flops_per_micro = (4.0 * pc.micro_batch * pc.seq_len * pc.d_model
+                      * pc.d_ff * pc.layers_per_stage)
+    return {"bubble_frac": bubble,
+            "per_stage_flops_per_micro": flops_per_micro,
+            "ticks": pc.n_micro + pc.n_stages - 1}

@@ -1,0 +1,150 @@
+"""Batched serving runtime: prefill + decode with a continuous batch.
+
+The serving analogue of the trainer: requests arrive with prompts, are
+prefilled into per-slot KV caches, then the decode step advances every
+active slot one token per tick (the paper's injection-rate shape: a steady
+stream of small active messages against resident state). Finished slots are
+refilled from the queue — continuous batching.
+
+The decode step is the jitted ``make_serve_step`` bundle; prefill uses a
+separate jitted forward per (padded) prompt-length bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as model_lib
+from repro.runtime.steps import make_serve_step, sharding_ctx
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (L,) int32
+    max_new_tokens: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Fixed-slot continuous-batching server over one mesh."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
+                 slots: int, max_len: int, eos_id: Optional[int] = None):
+        assert not cfg.is_encoder, "encoder-only arch has no decode path"
+        self.cfg, self.run, self.mesh = cfg, run, mesh
+        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+
+        run_decode = dataclasses.replace(
+            run, shape=dataclasses.replace(run.shape, kind="decode",
+                                           seq_len=max_len,
+                                           global_batch=slots))
+        self.bundle = make_serve_step(cfg, run_decode, mesh,
+                                      batch_override=slots)
+        self.decode = jax.jit(self.bundle.fn,
+                              in_shardings=self.bundle.in_shardings,
+                              out_shardings=self.bundle.out_shardings,
+                              donate_argnums=(1,))
+        _, self.params_shapes, _, _, self.pshard = sharding_ctx(
+            cfg, run_decode, mesh)
+        self.params: Optional[PyTree] = None
+        self.cache = None
+        self.slot_req: List[Optional[Request]] = [None] * slots
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+        self.ticks = 0
+
+    # -- state -------------------------------------------------------------------
+    def load_params(self, params: Optional[PyTree] = None) -> None:
+        """Install model weights (init randomly when none given)."""
+        if params is None:
+            init = jax.jit(lambda k: model_lib.init_params(self.cfg, k)[0],
+                           out_shardings=self.pshard)
+            params = init(jax.random.PRNGKey(self.run.seed))
+        self.params = params
+        self.cache = jax.jit(
+            lambda: model_lib.init_cache(self.cfg, self.slots, self.max_len))()
+
+    # -- request plumbing ----------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _prefill(self, slot: int, req: Request) -> None:
+        """Run the prompt through the model, writing this slot's cache rows.
+
+        Single-slot prefill: a (1, L) forward with a fresh length-``max_len``
+        cache, then scatter the slot row into the live batched cache.
+        """
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+        logits, filled, _ = model_lib.forward(self.cfg, self.params, prompt,
+                                              cache=one_cache)
+        next_tok = int(jnp.argmax(logits[0, -1, :]))
+        req.out_tokens.append(next_tok)
+
+        def scatter(live, one):
+            if live.ndim == 0 or live.shape[:1] != (self.slots,):
+                return live
+            return live.at[slot].set(one[0])
+
+        # lengths differ per slot; keep the max (cache length is per-batch
+        # scalar — decode masks by absolute position so overshoot is safe)
+        new_groups = jax.tree.map(scatter, self.cache["groups"],
+                                  filled["groups"])
+        self.cache = {"length": jnp.maximum(self.cache["length"],
+                                            filled["length"]),
+                      "groups": new_groups}
+        self.slot_req[slot] = req
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._prefill(slot, self.queue.pop(0))
+
+    # -- decode tick -----------------------------------------------------------------
+    def tick(self) -> int:
+        """Admit + one decode step for all active slots. Returns #active."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, r in enumerate(self.slot_req):
+            if r is not None:
+                tokens[i, 0] = r.out_tokens[-1]
+        args = [self.params, self.cache, jnp.asarray(tokens)]
+        if self.cfg.attention is not None and self.cfg.attention.mrope:
+            pos = np.broadcast_to(
+                np.asarray(self.cache["length"])[None, None],
+                (3, self.slots, 1)).astype(np.int32)
+            args.append(jnp.asarray(pos))
+        next_tok, self.cache = self.decode(*args)
+        next_np = np.asarray(next_tok)
+        for i in active:
+            r = self.slot_req[i]
+            tok = int(next_np[i, 0])
+            r.out_tokens.append(tok)
+            if (len(r.out_tokens) >= r.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                r.done = True
+                self.completed.append(r)
+                self.slot_req[i] = None
+        self.ticks += 1
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Serve until queue + slots drain; returns completed requests."""
+        while (self.queue or any(r is not None for r in self.slot_req)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        return self.completed

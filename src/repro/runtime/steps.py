@@ -1,0 +1,337 @@
+"""Jittable step functions: train_step / prefill_step / serve_step.
+
+One factory per step kind. Each returns ``(fn, in_shardings, out_shardings,
+abstract_inputs)`` so ``launch.dryrun`` can ``jax.jit(fn, in_shardings=...,
+out_shardings=...).lower(*abstract_inputs).compile()`` with zero allocation,
+and the trainer/server can call the same jitted function with real arrays.
+
+MoE architectures get the Two-Chains jam transport (core.dispatch) wired in
+when the mesh has a >1 tensor axis; otherwise the single-device oracle runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeConfig
+from repro.core.dispatch import make_jam_transport
+from repro.data.synthetic import batch_shapes
+from repro.models import model as model_lib
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.grad import clip_by_global_norm
+from repro.optim.schedule import warmup_cosine
+from repro.runtime import mesh_util
+
+PyTree = Any
+
+
+class StepBundle(NamedTuple):
+    fn: Callable                      # the pure step function
+    in_shardings: Tuple               # matching fn's positional args
+    out_shardings: Any
+    abstract_inputs: Tuple            # ShapeDtypeStructs for lower()
+    meta: Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+_ABS_CACHE: Dict[Tuple[str, str], Tuple[PyTree, PyTree]] = {}
+
+
+def abstract_params(cfg: ModelConfig, param_dtype=jnp.float32) -> Tuple[PyTree, PyTree]:
+    """(ShapeDtypeStruct params tree, logical axes tree) — no allocation.
+
+    ``init_params`` returns (params, axes) where axes leaves are string
+    tuples eval_shape cannot trace through, so axes are captured side-band.
+    """
+    key = (cfg.to_json(), str(param_dtype))
+    if key not in _ABS_CACHE:
+        holder: Dict[str, PyTree] = {}
+
+        def build():
+            p, a = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                         param_dtype=param_dtype)
+            holder["axes"] = a
+            return p
+
+        params_shapes = jax.eval_shape(build)
+        _ABS_CACHE[key] = (params_shapes, holder["axes"])
+    return _ABS_CACHE[key]
+
+
+def batch_abstract(cfg: ModelConfig, shape: ShapeConfig,
+                   batch_override: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in batch_shapes(cfg, shape, batch_override).items()}
+
+
+def sharding_ctx(cfg: ModelConfig, run: RunConfig, mesh: Mesh):
+    rules = mesh_util.make_rules(run.sharding, mesh)
+    # training keeps f32 master weights; serving deploys bf16 (half the
+    # HBM/ICI for weight reads — §Perf serving-feasibility iteration)
+    pdtype = jnp.float32 if run.shape.kind == "train" else jnp.bfloat16
+    params_shapes, axes = abstract_params(cfg, param_dtype=pdtype)
+    pspecs = mesh_util.param_specs(axes, params_shapes, rules, mesh)
+    pshard = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                          is_leaf=lambda x: isinstance(x, P))
+    return rules, params_shapes, axes, pspecs, pshard
+
+
+def _moe_transport(cfg: ModelConfig, mesh: Mesh, rules) -> Optional[Callable]:
+    if cfg.moe is None:
+        return None
+    if mesh.shape.get(rules.tp_axis, 1) <= 1:
+        return None   # single tensor shard: oracle path
+    return make_jam_transport(mesh, dp_axes=rules.dp_axes,
+                              tp_axis=rules.tp_axis, mode=cfg.moe.transport)
+
+
+def opt_shardings(pshard: PyTree, mesh: Mesh) -> AdamWState:
+    """Optimizer state shardings mirror the params (ZeRO-1 for free)."""
+    rep = NamedSharding(mesh, P())
+    return AdamWState(step=rep,
+                      m=jax.tree.map(lambda s: s, pshard),
+                      v=jax.tree.map(lambda s: s, pshard))
+
+
+def abstract_opt_state(params_shapes: PyTree) -> AdamWState:
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=jax.tree.map(f32, params_shapes),
+                      v=jax.tree.map(f32, params_shapes))
+
+
+
+def act_constrain(rules, mesh: Mesh, dp_ok: bool):
+    """Batch-dim sharding constraint for (B, S, d) activations.
+
+    Pins the batch axis to the dp mesh axes through the whole network —
+    without it GSPMD may replicate the batch once params are FSDP-sharded
+    (16x redundant compute; EXPERIMENTS.md §Perf iteration 1)."""
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else (
+        rules.dp_axes[0] if rules.dp_axes else None)
+    if not dp_ok:
+        dp = None
+    sh3 = NamedSharding(mesh, P(dp, None, None))
+
+    def constrain(x):
+        if getattr(x, "ndim", 0) == 3:
+            return jax.lax.with_sharding_constraint(x, sh3)
+        return x
+
+    return constrain
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                    batch_override: Optional[int] = None) -> StepBundle:
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+    transport = _moe_transport(cfg, mesh, rules)
+    ocfg = run.optimizer
+
+    accum = max(1, ocfg.accum_steps)
+
+    def grads_of(params, batch):
+        def loss_of(p):
+            return model_lib.loss_fn(cfg, p, batch, moe_transport=transport,
+                                     constrain=constrain)
+        return jax.value_and_grad(loss_of, has_aux=True)(params)
+
+    def train_step(params, opt: AdamWState, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # gradient accumulation: scan over microbatches so only one
+            # microbatch of activations is ever live (HBM feasibility at
+            # global_batch=256) while grads accumulate in f32
+            def split_micro(key, t):
+                if key == "mrope_positions":         # (3, B, S): batch dim 1
+                    return jnp.moveaxis(
+                        t.reshape(t.shape[0], accum, t.shape[1] // accum,
+                                  *t.shape[2:]), 1, 0)
+                return t.reshape(accum, t.shape[0] // accum, *t.shape[1:])
+
+            micro = {k: split_micro(k, v) for k, v in batch.items()}
+
+            def step_fn(carry, mb):
+                gsum, loss_sum, msum = carry
+                (loss, metrics), g = grads_of(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                msum = jax.tree.map(lambda a, b: a + b, msum, metrics)
+                return (gsum, loss_sum + loss, msum), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            mzero = {"ce": jnp.float32(0), "aux": jnp.float32(0),
+                     "tokens": jnp.float32(0)}
+            (gsum, loss_sum, msum), _ = jax.lax.scan(
+                step_fn, (gzero, jnp.float32(0), mzero), micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = loss_sum / accum
+            metrics = dict(msum, ce=msum["ce"] / accum, aux=msum["aux"] / accum)
+        grads, gnorm = clip_by_global_norm(grads, ocfg.grad_clip)
+        lr = warmup_cosine(opt.step, ocfg)
+        new_params, new_opt = adamw_update(grads, opt, params, lr, ocfg)
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_params, new_opt, metrics
+
+    batch_abs = batch_abstract(cfg, run.shape, batch_override)
+    dp_ok = batch_abs["tokens"].shape[0] % mesh_util.dp_extent(rules, mesh) == 0
+    constrain = act_constrain(rules, mesh, dp_ok)
+    bspecs = mesh_util.token_batch_specs(
+        rules, has_features="features" in batch_abs,
+        has_mrope="mrope_positions" in batch_abs, dp_ok=dp_ok)
+    bshard = {k: NamedSharding(mesh, bspecs[k]) for k in batch_abs}
+    oshard = opt_shardings(pshard, mesh)
+    rep = NamedSharding(mesh, P())
+    metric_keys = ("ce", "aux", "tokens", "loss", "grad_norm", "lr")
+
+    return StepBundle(
+        fn=train_step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, {k: rep for k in metric_keys}),
+        abstract_inputs=(params_shapes, abstract_opt_state(params_shapes),
+                         batch_abs),
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="train",
+                  batch=batch_abs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill step (inference: full-sequence forward, cache filled)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                      batch_override: Optional[int] = None) -> StepBundle:
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+    transport = _moe_transport(cfg, mesh, rules)
+    shape = run.shape
+    b = batch_override or shape.global_batch
+    seq_sharded = rules.seq_axis is not None
+
+    def prefill_step(params, batch):
+        cache = (None if cfg.is_encoder else
+                 model_lib.init_cache(cfg, b, shape.seq_len))
+        logits, new_cache, _ = model_lib.forward(
+            cfg, params, batch["tokens"],
+            frontend_feats=batch.get("features"),
+            mrope_positions=batch.get("mrope_positions"),
+            cache=cache, moe_transport=transport, constrain=constrain)
+        # serving returns only the last-position logits (next-token) + cache
+        last = logits[:, -1, :]
+        if cfg.is_encoder:
+            return logits, None
+        return last, new_cache
+
+    batch_abs = batch_abstract(cfg, shape, batch_override)
+    batch_abs.pop("labels")
+    dp_ok = b % mesh_util.dp_extent(rules, mesh) == 0
+    constrain = act_constrain(rules, mesh, dp_ok)
+    bspecs = mesh_util.token_batch_specs(
+        rules, has_features="features" in batch_abs,
+        has_mrope="mrope_positions" in batch_abs, seq_sharded=seq_sharded,
+        dp_ok=dp_ok)
+    bspecs.pop("labels", None)
+    bshard = {k: NamedSharding(mesh, bspecs[k]) for k in batch_abs}
+
+    cache_shapes = (None if cfg.is_encoder else jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, b, shape.seq_len)))
+    cache_shard = (None if cache_shapes is None else jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        mesh_util.cache_spec_tree(cache_shapes, rules, mesh, batch=b,
+                                  seq_sharded=seq_sharded),
+        is_leaf=lambda x: isinstance(x, P)))
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else (
+        rules.dp_axes[0] if rules.dp_axes else None)
+    if not dp_ok:
+        dp = None
+    vocab_tp = mesh_util.tp_vocab_axis(rules, mesh, cfg.vocab_size)
+    logit_shard = NamedSharding(
+        mesh, P(dp, vocab_tp) if not cfg.is_encoder
+        else P(dp, None, vocab_tp))
+
+    return StepBundle(
+        fn=prefill_step,
+        in_shardings=(pshard, bshard),
+        out_shardings=(logit_shard, cache_shard),
+        abstract_inputs=(params_shapes, batch_abs),
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="prefill",
+                  batch=batch_abs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode step (inference: one token, KV cache of seq_len)
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+                    batch_override: Optional[int] = None) -> StepBundle:
+    assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+    transport = _moe_transport(cfg, mesh, rules)
+    shape = run.shape
+    b = batch_override or shape.global_batch
+    constrain = act_constrain(
+        rules, mesh, b % mesh_util.dp_extent(rules, mesh) == 0)
+    # decode/long cells shard the KV-cache sequence dim over the tensor axis
+    # (flash-decode style): the cache dominates memory at 32k-500k.
+    seq_sharded = rules.seq_axis is not None
+
+    def serve_step(params, cache, token, mrope_positions=None):
+        logits, new_cache = model_lib.decode_step(
+            cfg, params, cache, token, moe_transport=transport,
+            mrope_positions=mrope_positions, constrain=constrain)
+        next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], new_cache
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, b, shape.seq_len))
+    cache_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        mesh_util.cache_spec_tree(cache_shapes, rules, mesh, batch=b,
+                                  seq_sharded=seq_sharded),
+        is_leaf=lambda x: isinstance(x, P))
+    dp = rules.dp_axes if len(rules.dp_axes) > 1 else (
+        rules.dp_axes[0] if rules.dp_axes else None)
+    if b % mesh_util.dp_extent(rules, mesh) != 0:
+        dp = None
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    tok_abs = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    abstract = [params_shapes, cache_shapes, tok_abs]
+    in_sh = [pshard, cache_shard, tok_shard]
+    if cfg.attention is not None and cfg.attention.mrope:
+        abstract.append(jax.ShapeDtypeStruct((3, b, 1), jnp.int32))
+        in_sh.append(NamedSharding(mesh, P(None, dp, None)))
+
+    return StepBundle(
+        fn=serve_step,
+        in_shardings=tuple(in_sh),
+        out_shardings=(tok_shard, cache_shard),
+        abstract_inputs=tuple(abstract),
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="decode",
+                  cache=cache_shapes),
+    )
+
+
+def make_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
+              batch_override: Optional[int] = None) -> StepBundle:
+    kind = run.shape.kind
+    if kind == "train":
+        return make_train_step(cfg, run, mesh, batch_override)
+    if kind == "prefill":
+        return make_prefill_step(cfg, run, mesh, batch_override)
+    if kind == "decode":
+        return make_serve_step(cfg, run, mesh, batch_override)
+    raise ValueError(kind)

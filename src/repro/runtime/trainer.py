@@ -1,0 +1,159 @@
+"""Fault-tolerant training loop.
+
+Wires together: StepBundle (runtime.steps) + DataPipeline (data.pipeline) +
+CheckpointManager (checkpoint.manager) + FaultInjector / StragglerMonitor /
+RestartPolicy (runtime.fault). The loop:
+
+  1. restore-or-init params/opt on the mesh,
+  2. per step: inject faults (tests), fetch prefetched batch, run the jitted
+     step, observe step time, periodically checkpoint asynchronously,
+  3. on failure: restore from the latest committed checkpoint and continue
+     (bounded by RestartPolicy) — the crash/restart drill of DESIGN.md §6.
+
+Works identically on the 1-device CPU container (smoke configs) and a real
+multi-host mesh: everything device-facing goes through NamedShardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import DataPipeline
+from repro.models import model as model_lib
+from repro.optim.adamw import adamw_init
+from repro.runtime import mesh_util
+from repro.runtime.fault import (FaultInjector, InjectedFault, RestartPolicy,
+                                 StepStats, StragglerMonitor)
+from repro.runtime.steps import StepBundle, make_train_step
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    keep_checkpoints: int = 3
+    restore: bool = True
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
+                 tcfg: Optional[TrainerConfig] = None,
+                 batch_override: Optional[int] = None,
+                 injector: Optional[FaultInjector] = None,
+                 log_fn: Callable[[str], None] = print):
+        self.cfg, self.run, self.mesh = cfg, run, mesh
+        self.tcfg = tcfg or TrainerConfig()
+        self.injector = injector
+        self.log = log_fn
+        self.bundle: StepBundle = make_train_step(cfg, run, mesh,
+                                                  batch_override)
+        self.jitted = jax.jit(self.bundle.fn,
+                              in_shardings=self.bundle.in_shardings,
+                              out_shardings=self.bundle.out_shardings,
+                              donate_argnums=(0, 1))
+        self.ckpt = CheckpointManager(run.checkpoint_dir,
+                                      keep=self.tcfg.keep_checkpoints)
+        self.monitor = StragglerMonitor()
+        self.policy = RestartPolicy()
+        self.batch_override = batch_override
+
+    # -- state ------------------------------------------------------------------
+    def init_state(self):
+        """Init params/opt sharded onto the mesh (restore if available)."""
+        pshard, oshard = self.bundle.in_shardings[0], self.bundle.in_shardings[1]
+        abstract_p, abstract_o = self.bundle.abstract_inputs[:2]
+        if self.tcfg.restore:
+            step, state = self.ckpt.restore_latest(
+                {"params": abstract_p, "opt": abstract_o},
+                {"params": pshard, "opt": oshard})
+            if step is not None:
+                self.log(f"[trainer] restored checkpoint step {step}")
+                return step, state["params"], state["opt"]
+
+        init = jax.jit(
+            lambda key: model_lib.init_params(self.cfg, key)[0],
+            out_shardings=pshard)
+        params = init(jax.random.PRNGKey(self.run.seed))
+        opt = jax.jit(adamw_init, out_shardings=oshard)(params)
+        return 0, params, opt
+
+    def _pipeline(self, start_step: int) -> DataPipeline:
+        rules = self.bundle.meta["rules"]
+        dp_ok = (self.bundle.meta["batch"]["tokens"].shape[0]
+                 % mesh_util.dp_extent(rules, self.mesh) == 0)
+        specs = mesh_util.token_batch_specs(
+            rules, has_features="features" in self.bundle.meta["batch"],
+            has_mrope="mrope_positions" in self.bundle.meta["batch"],
+            dp_ok=dp_ok)
+        return DataPipeline(self.cfg, self.run.shape, self.mesh, specs,
+                            seed=self.run.seed, start_step=start_step,
+                            batch_override=self.batch_override)
+
+    # -- loop ------------------------------------------------------------------
+    def train(self) -> StepStats:
+        stats = StepStats()
+        step, params, opt = self.init_state()
+        pipe = self._pipeline(step)
+        metrics: Dict[str, jax.Array] = {}
+        steps_since_start = 0          # first step after (re)start compiles
+        try:
+            while step < self.tcfg.steps:
+                try:
+                    batch = next(pipe)
+                    t0 = time.perf_counter()
+                    # jitter counts as step time: a loaded host slows the
+                    # step (paper §VII-C's at-capacity scenario); a failure
+                    # raises out of the timed region into the restart path.
+                    if self.injector is not None:
+                        self.injector.before_step(step)
+                    params, opt, metrics = self.jitted(params, opt, batch)
+                    jax.block_until_ready(metrics["loss"])
+                    dt = time.perf_counter() - t0
+                    steps_since_start += 1
+                    if steps_since_start > 1 and self.monitor.observe(step, dt):
+                        stats.stragglers += 1
+                        self.log(f"[trainer] straggler step {step}: "
+                                 f"{dt*1e3:.1f}ms vs ewma "
+                                 f"{self.monitor.ewma*1e3:.1f}ms")
+                    step += 1
+                    if step % self.tcfg.log_every == 0:
+                        self.log(f"[trainer] step {step}: "
+                                 f"loss={float(metrics['loss']):.4f} "
+                                 f"gnorm={float(metrics['grad_norm']):.3f} "
+                                 f"{dt*1e3:.0f}ms")
+                    if step % self.tcfg.checkpoint_every == 0:
+                        self.ckpt.save(step, {"params": params, "opt": opt},
+                                       meta={"config": self.cfg.to_json()})
+                except (InjectedFault, jax.errors.JaxRuntimeError) as e:
+                    self.log(f"[trainer] step {step} failed: {e}")
+                    if not self.policy.on_failure(e):
+                        raise
+                    stats.restarts += 1
+                    pipe.close()
+                    self.ckpt.wait()
+                    step, params, opt = self.init_state()
+                    pipe = self._pipeline(step)
+                    steps_since_start = 0
+                    self.log(f"[trainer] restarted from step {step} "
+                             f"(restart {self.policy.restarts})")
+        finally:
+            pipe.close()
+            self.ckpt.wait()
+
+        stats.steps = step
+        stats.p50_s = self.monitor.percentile(50.0)
+        stats.p999_s = self.monitor.percentile(99.9)
+        stats.tail_spread = self.monitor.tail_spread()
+        stats.final_metrics = {k: float(np.asarray(v))
+                               for k, v in metrics.items()}
+        return stats

@@ -1,0 +1,15 @@
+"""Shared test fixtures. NOTE: no XLA_FLAGS here — tests see 1 real device;
+multi-device tests go through tests/helpers.py subprocesses."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+@pytest.fixture(scope="session")
+def mesh11():
+    import jax
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

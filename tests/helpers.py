@@ -1,0 +1,33 @@
+"""Subprocess runner for multi-device tests.
+
+jax pins the device count at first init, so anything needing >1 CPU device
+runs in a fresh interpreter with ``--xla_force_host_platform_device_count``.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_multidev(code: str, n_devices: int = 4, timeout: int = 420) -> str:
+    """Run ``code`` in a subprocess with ``n_devices`` CPU devices.
+
+    The snippet should print its own assertions' evidence; a non-zero exit
+    (assertion/exception) fails the calling test with full output attached.
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n_devices} "
+                        + env.get("XLA_FLAGS", ""))
+    env["PYTHONPATH"] = os.path.abspath(SRC) + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("JAX_PLATFORMS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"multidev subprocess failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout}\n--- stderr ---\n{proc.stderr}")
+    return proc.stdout

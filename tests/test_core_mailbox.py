@@ -1,0 +1,104 @@
+"""core.mailbox reference-transport tests: banked credits, drain, waits, and
+the injected-function byte round-trip (core.injection)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import injection
+from repro.core.got import GotTable
+from repro.core.mailbox import (MailboxConfig, drain_frames, init_mailbox,
+                                post_local, spin_wait_poll, wfe_wait)
+from repro.core.message import FrameSpec, pack_frame
+from repro.core.registry import JamPackage
+
+SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=8)
+
+
+def _pkg_and_got():
+    got = GotTable()
+    got.bind("scale", jnp.int32(2))
+    pkg = JamPackage("t", SPEC, result_words=8)
+
+    @pkg.register("scale_payload", got_symbols=("scale",))
+    def jam(got_syms, state, usr):
+        return usr * got_syms[0]
+
+    return pkg, got
+
+
+def test_post_local_credits_and_head():
+    cfg = MailboxConfig(banks=2, frames_per_bank=4, spec=SPEC)
+    mb = init_mailbox(cfg)
+    frame = pack_frame(SPEC, func_id=0,
+                       payload_words=jnp.arange(8, dtype=jnp.int32))
+    mb = post_local(mb, jnp.int32(1), frame)
+    assert int(mb["credits"][1]) == 3
+    assert int(mb["credits"][0]) == 4
+    assert int(mb["head"][1]) == 1
+    np.testing.assert_array_equal(np.asarray(mb["frames"][1, 0]),
+                                  np.asarray(frame))
+
+
+def test_drain_executes_valid_skips_invalid():
+    pkg, got = _pkg_and_got()
+    dispatch = pkg.build_dispatcher(got)
+    good = pkg.pack("scale_payload", got,
+                    payload_words=jnp.arange(8, dtype=jnp.int32))
+    empty = jnp.zeros_like(good)                      # never delivered
+    frames = jnp.stack([good, empty])
+    out = drain_frames(frames, dispatch, 8)
+    np.testing.assert_array_equal(np.asarray(out[0]), np.arange(8) * 2)
+    np.testing.assert_array_equal(np.asarray(out[1]), np.zeros(8))
+
+
+def test_wait_modes_cycle_proxy():
+    """WFE consumes 0 spin iterations; polling consumes >=1 (Fig. 13/14)."""
+    pkg, got = _pkg_and_got()
+    frame = pkg.pack("scale_payload", got,
+                     payload_words=jnp.ones((8,), jnp.int32))
+    frames = frame[None]
+    spins_poll, found_poll = spin_wait_poll(frames, SPEC)
+    spins_wfe, found_wfe = wfe_wait(frames, SPEC)
+    assert bool(found_poll) and bool(found_wfe)
+    assert int(spins_poll) >= 1
+    assert int(spins_wfe) == 0
+
+
+def test_spin_wait_times_out_on_empty():
+    frames = jnp.zeros((1, SPEC.total_words), jnp.int32)
+    spins, found = spin_wait_poll(frames, SPEC, max_spins=64)
+    assert not bool(found)
+    assert int(spins) == 64
+
+
+def test_injected_expert_state_roundtrip():
+    """Weights-in-message (paper Fig. 2): bf16 expert weights survive the
+    frame STATE section byte-exactly."""
+    d, f = 8, 12
+    key = jax.random.PRNGKey(0)
+    wg = jax.random.normal(key, (d, f), jnp.bfloat16)
+    wu = jax.random.normal(jax.random.fold_in(key, 1), (d, f), jnp.bfloat16)
+    wd = jax.random.normal(jax.random.fold_in(key, 2), (f, d), jnp.bfloat16)
+    words = injection.expert_state_words(wg, wu, wd)
+    assert words.shape[0] == injection.expert_state_size_words(d, f)
+    wg2, wu2, wd2 = injection.unpack_expert_state(words, d, f)
+    for a, b in ((wg, wg2), (wu, wu2), (wd, wd2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_injected_frame_spec_sizes():
+    spec = injection.injected_frame_spec(d_model=64, d_ff=256,
+                                         payload_tokens=4)
+    assert spec.state_words == 3 * (64 * 256 // 2)
+    assert spec.payload_words == 4 * 64 // 2
+    assert spec.total_words % 16 == 0
+
+
+def test_token_payload_roundtrip():
+    x = jnp.arange(24, dtype=jnp.bfloat16).reshape(4, 6) / 8
+    words = injection.tokens_to_words(x)
+    y = injection.words_to_tokens(words, 4, 6)
+    np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                  np.asarray(y, np.float32))

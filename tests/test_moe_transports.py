@@ -1,0 +1,113 @@
+"""Jam-transport MoE equivalence: local / injected / tp / auto vs oracle.
+
+The distributed transports (all_to_all over the tensor axis) need >1 device
+-> subprocess with 4 CPU devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from tests.helpers import run_multidev
+
+from repro.configs.base import MoEConfig
+from repro.core import costmodel
+from repro.models import moe as moe_lib
+
+
+def test_oracle_capacity_drops_are_deterministic():
+    m = MoEConfig(num_experts=4, top_k=2, expert_ff=32, capacity_factor=1.0)
+    key = jax.random.PRNGKey(0)
+    d = 16
+    params = {
+        "router": jax.random.normal(key, (d, m.num_experts)) * 0.1,
+        "w_gate": jax.random.normal(key, (m.num_experts, d, m.expert_ff)) * 0.1,
+        "w_up": jax.random.normal(key, (m.num_experts, d, m.expert_ff)) * 0.1,
+        "w_down": jax.random.normal(key, (m.num_experts, m.expert_ff, d)) * 0.1,
+    }
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, d))
+    y1, a1 = moe_lib.moe_ffn_oracle(params, x, m)
+    y2, a2 = moe_lib.moe_ffn_oracle(params, x, m)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_dispatch_respects_capacity():
+    ids = jnp.asarray([[0], [0], [0], [1]], jnp.int32)
+    gates = jnp.ones((4, 1))
+    slot, keep, rank = moe_lib.build_dispatch(ids, gates, n_experts=2,
+                                              capacity=2)
+    # third token to expert 0 must drop (rank 2 >= capacity 2)
+    assert bool(keep[0, 0]) and bool(keep[1, 0]) and not bool(keep[2, 0])
+    assert int(slot[2, 0]) == 2 * 2                   # the drop slot
+    assert bool(keep[3, 0])
+
+
+def test_costmodel_crossover_monotonic():
+    """Local bytes grow with tokens; injected (weight shipping) is a fixed
+    cost -> ``chosen`` flips exactly once, local->injected as the payload
+    amortizes the state bytes. That is the paper's Fig. 7/8 observation:
+    "once the payload is large enough, the overhead of moving code becomes
+    negligible"."""
+    m = MoEConfig(num_experts=8, top_k=2, expert_ff=512)
+    d, tp = 256, 4
+    prev = None
+    flips = 0
+    for n in (16, 64, 256, 1024, 4096, 16384, 65536):
+        est = costmodel.estimate_transport(m, d_model=d,
+                                           n_tokens_per_dp_shard=n, tp=tp)
+        if prev is not None and est.chosen != prev:
+            flips += 1
+            assert (prev, est.chosen) == ("local", "injected"), \
+                "crossover must go local->injected as tokens grow"
+        prev = est.chosen
+    assert flips == 1
+    x = costmodel.crossover_tokens(m, d, tp)
+    assert 1024 < x * tp <= 65536          # the flip seen above
+
+
+_TRANSPORTS = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+from repro.configs.base import MoEConfig
+from repro.core.dispatch import make_jam_transport
+from repro.models import moe as moe_lib
+
+mesh = Mesh(np.array(jax.devices()).reshape(1, 4), ("data", "model"))
+m = MoEConfig(num_experts=8, top_k=2, expert_ff=32, capacity_factor=2.0,
+              num_shared=1, shared_ff=16)
+d, b, s = 16, 2, 16
+key = jax.random.PRNGKey(0)
+ks = jax.random.split(key, 8)
+params = {
+    "router": jax.random.normal(ks[0], (d, m.num_experts)) * 0.5,
+    "w_gate": jax.random.normal(ks[1], (m.num_experts, d, m.expert_ff)) * 0.1,
+    "w_up":   jax.random.normal(ks[2], (m.num_experts, d, m.expert_ff)) * 0.1,
+    "w_down": jax.random.normal(ks[3], (m.num_experts, m.expert_ff, d)) * 0.1,
+    "ws_gate": jax.random.normal(ks[4], (d, 16)) * 0.1,
+    "ws_up":   jax.random.normal(ks[5], (d, 16)) * 0.1,
+    "ws_down": jax.random.normal(ks[6], (16, d)) * 0.1,
+}
+x = jax.random.normal(ks[7], (b, s, d))
+
+# oracle with the per-shard capacity the transports use (n_tokens/tp per shard)
+n_loc = (b * s) // 4
+cap = moe_lib.expert_capacity(n_loc, m)
+y_ref, aux_ref = moe_lib.moe_ffn_oracle(params, x, m, capacity=None)
+
+with mesh:
+    for mode in ("local", "injected", "tp", "auto"):
+        tr = make_jam_transport(mesh, dp_axes=("data",), tp_axis="model", mode=mode)
+        y, aux = tr(params, x, m, "silu")
+        # capacity boundaries differ between global oracle (cap over b*s) and
+        # sharded transports (cap over per-rank slices); with capacity_factor
+        # 2.0 nothing drops, so results must match to fp tolerance.
+        err = float(jnp.abs(y - y_ref).max())
+        assert err < 5e-4, (mode, err)
+        print(mode, "ok", err)
+print("TRANSPORTS_OK")
+"""
+
+
+def test_jam_transports_match_oracle_multidev():
+    out = run_multidev(_TRANSPORTS, n_devices=4)
+    assert "TRANSPORTS_OK" in out

@@ -1,0 +1,87 @@
+"""Optimizer, schedule, and gradient-compression tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import OptimizerConfig
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.grad import (clip_by_global_norm, compress_int8,
+                              decompress_int8, global_norm)
+from repro.optim.schedule import warmup_cosine
+
+
+def test_adamw_converges_on_quadratic():
+    cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                          weight_decay=0.0)
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    opt = adamw_init(params)
+    target = jnp.asarray([1.0, 2.0])
+
+    @jax.jit
+    def step(params, opt):
+        g = jax.grad(lambda p: jnp.sum((p["w"] - target) ** 2))(params)
+        return adamw_update(g, opt, params, jnp.float32(0.1), cfg)
+
+    for _ in range(200):
+        params, opt = step(params, opt)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_weight_decay_only_on_matrices():
+    cfg = OptimizerConfig(weight_decay=0.5)
+    params = {"w": jnp.ones((2, 2)), "b": jnp.ones((2,))}
+    opt = adamw_init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    new_p, _ = adamw_update(zeros, opt, params, jnp.float32(0.1), cfg)
+    assert float(new_p["w"][0, 0]) < 1.0       # decayed
+    assert float(new_p["b"][0]) == 1.0          # biases/norms not decayed
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.1, 10.0))
+def test_clip_never_exceeds(max_norm):
+    g = {"a": jnp.asarray([30.0, 40.0])}       # norm 50
+    clipped, norm = clip_by_global_norm(g, max_norm)
+    assert abs(float(norm) - 50.0) < 1e-3
+    assert float(global_norm(clipped)) <= max_norm * 1.001
+
+
+def test_warmup_cosine_shape():
+    cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(warmup_cosine(jnp.int32(s), cfg)) for s in range(100)]
+    assert lrs[0] < lrs[5] < lrs[10]            # warming up
+    assert abs(lrs[10] - 1.0) < 0.11            # peak ~lr
+    assert abs(lrs[99] - 0.1) < 0.02            # decayed to min_frac*lr
+    assert all(l >= 0 for l in lrs)
+    assert all(a >= b - 1e-6 for a, b in zip(lrs[10:], lrs[11:]))  # monotone decay
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 200), st.floats(0.01, 100.0))
+def test_int8_compression_bounded_error(n, scale):
+    x = jnp.sin(jnp.arange(n, dtype=jnp.float32)) * scale
+    q, s = compress_int8(x)
+    y = decompress_int8(q, s)
+    assert q.dtype == jnp.int8
+    # max quantization error <= scale/2 per element (symmetric rounding)
+    max_err = float(jnp.abs(x - y).max())
+    assert max_err <= float(s) * 0.5 + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """With error feedback, the *cumulative* transmitted signal tracks the
+    cumulative true gradient (residual stays bounded)."""
+    x = jnp.asarray([0.004, -0.003, 0.002], jnp.float32)  # tiny grads
+    err = jnp.zeros_like(x)
+    sent_total = jnp.zeros_like(x)
+    for _ in range(64):
+        g = x + err
+        q, s = compress_int8(g)
+        sent = decompress_int8(q, s)
+        err = g - sent
+        sent_total = sent_total + sent
+    np.testing.assert_allclose(np.asarray(sent_total), np.asarray(x * 64),
+                               atol=float(jnp.abs(x).max()) * 2)

@@ -1,0 +1,66 @@
+"""Roofline HLO parsing + term math unit tests."""
+import pytest
+
+from repro.launch import roofline as rl
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS
+
+HLO = """
+HloModule test
+ENTRY %main (p0: bf16[128,4096]) -> bf16[128,4096] {
+  %p0 = bf16[128,4096]{1,0} parameter(0)
+  %ag = bf16[2048,4096]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %c = f32[128,128]{1,0} convert(%p0)
+  %ar-start = f32[128,128]{1,0} all-reduce-start(%c), to_apply=%add
+  %ar-done = f32[128,128]{1,0} all-reduce-done(%ar-start)
+  %rs = bf16[64,4096]{1,0} reduce-scatter(%p0), dimensions={0}
+  %a2a = bf16[128,4096]{1,0} all-to-all(%p0), dimensions={0}
+  %cp = bf16[128,4096]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %out = bf16[128,4096]{1,0} add(%p0, %p0)
+}
+"""
+
+
+def test_parse_collectives_counts_and_bytes():
+    stats = rl.parse_collectives(HLO)
+    p0_bytes = 128 * 4096 * 2
+    assert stats.per_op_count["all-gather"] == 1
+    assert stats.per_op_bytes["all-gather"] == p0_bytes
+    # async pair counted once, on -start; operand is the f32 convert
+    assert stats.per_op_count["all-reduce"] == 1
+    assert stats.per_op_bytes["all-reduce"] == 128 * 128 * 4
+    assert stats.per_op_count["reduce-scatter"] == 1
+    assert stats.per_op_count["all-to-all"] == 1
+    assert stats.per_op_count["collective-permute"] == 1
+    assert stats.total_bytes == p0_bytes * 4 + 128 * 128 * 4
+
+
+def test_parse_tuple_types():
+    assert rl._type_bytes("(bf16[8,8], f32[4])") == 8 * 8 * 2 + 4 * 4
+    assert rl._type_bytes("f32[]") == 4
+    assert rl._type_bytes("pred[16]") == 16
+
+
+def test_analyze_terms_and_bottleneck():
+    stats = rl.parse_collectives(HLO)
+    cost = {"flops": 1e12, "bytes accessed": 1e9}
+    roof = rl.analyze(cost, stats, n_chips=256,
+                      model_flops_total=0.8e12 * 256)
+    assert roof.compute_s == pytest.approx(1e12 / PEAK_FLOPS)
+    assert roof.memory_s == pytest.approx(1e9 / HBM_BW)
+    assert roof.collective_s == pytest.approx(stats.total_bytes / ICI_BW)
+    assert roof.bottleneck == "compute"
+    assert roof.useful_flops_frac == pytest.approx(0.8)
+    assert 0 < roof.roofline_frac <= 1.0
+
+
+def test_model_flops_train_vs_decode():
+    assert rl.model_flops(1e9, 1000, "train") == 6e12
+    assert rl.model_flops(1e9, 1000, "decode") == 2e12
+
+
+def test_roofline_frac_is_mfu_bound():
+    stats = rl.CollectiveStats({}, {}, [])
+    cost = {"flops": 1e12, "bytes accessed": 0.0}
+    roof = rl.analyze(cost, stats, n_chips=1, model_flops_total=1e12)
+    # all flops useful, compute-bound -> 100% of roofline
+    assert roof.roofline_frac == pytest.approx(1.0)

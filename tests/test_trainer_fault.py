@@ -1,0 +1,75 @@
+"""Fault-tolerant trainer: loss falls, faults restart from checkpoints,
+straggler monitor flags outliers, tail-spread math matches Eq. (1)."""
+import shutil
+
+import jax
+import pytest
+
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
+                                ShardingConfig)
+from repro.configs.registry import get_smoke
+from repro.runtime.fault import (FaultInjector, InjectedFault, RestartPolicy,
+                                 StragglerMonitor)
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _run(tmp_path, steps=10, injector=None, ckpt_every=4):
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=ShapeConfig("tiny", 32, 4, "train"),
+                    sharding=ShardingConfig(fsdp_params=False),
+                    optimizer=OptimizerConfig(total_steps=steps,
+                                              warmup_steps=2),
+                    checkpoint_dir=str(tmp_path / "ckpt"))
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    with mesh:
+        t = Trainer(cfg, run, mesh,
+                    tcfg=TrainerConfig(steps=steps, checkpoint_every=ckpt_every,
+                                       log_every=1000),
+                    injector=injector, log_fn=lambda s: None)
+        return t.train()
+
+
+def test_loss_decreases(tmp_path):
+    stats = _run(tmp_path, steps=30)
+    assert stats.steps == 30
+    assert stats.final_metrics["loss"] < 5.6      # < ~log(vocab) + slack
+
+
+def test_restart_from_checkpoint(tmp_path):
+    inj = FaultInjector(fail_steps=(6,))
+    stats = _run(tmp_path, steps=10, injector=inj, ckpt_every=4)
+    assert stats.steps == 10
+    assert stats.restarts == 1
+
+
+def test_restart_budget_exhausted(tmp_path):
+    # 5 distinct failures > max_restarts=3 -> the trainer re-raises
+    inj = FaultInjector(fail_steps=(2, 3, 4, 5, 6))
+    with pytest.raises(InjectedFault):
+        _run(tmp_path, steps=10, injector=inj)
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(alpha=0.5, threshold=2.0, warmup=2)
+    for i in range(8):
+        assert not mon.observe(i, 0.1)
+    assert mon.observe(8, 1.0)                      # 10x the EWMA
+    assert mon.flagged == [8]
+    assert not mon.observe(9, 0.1)                  # EWMA not poisoned
+
+
+def test_tail_spread_formula():
+    mon = StragglerMonitor()
+    for i in range(999):
+        mon.observe(i, 0.1)
+    mon.observe(999, 0.3)                           # one slow tail step
+    # (tail - median)/median = (0.3 - 0.1)/0.1 = 2.0
+    assert abs(mon.tail_spread(99.9) - 2.0) < 0.01
+
+
+def test_restart_policy_bounds():
+    pol = RestartPolicy(max_restarts=2)
+    assert pol.on_failure(RuntimeError())
+    assert pol.on_failure(RuntimeError())
+    assert not pol.on_failure(RuntimeError())

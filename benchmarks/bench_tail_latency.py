@@ -15,6 +15,7 @@ from typing import List
 
 import jax
 
+from repro import compat
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
                                 ShardingConfig)
 from repro.configs.registry import get_smoke
@@ -32,8 +33,7 @@ def _run(jitter_ms, tmp) -> "StepStats":
                     optimizer=OptimizerConfig(total_steps=STEPS,
                                               warmup_steps=2),
                     checkpoint_dir=tmp)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     inj = FaultInjector(jitter_ms=jitter_ms) if jitter_ms else None
     with mesh:
         t = Trainer(cfg, run, mesh,

@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
 from repro.runtime.server import Request, Server
@@ -20,8 +21,7 @@ def main() -> None:
     cfg = get_smoke("llama3.2-1b")
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
 
     rng = np.random.default_rng(0)
     with mesh:

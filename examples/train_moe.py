@@ -12,6 +12,7 @@ import argparse
 
 import jax
 
+from repro import compat
 from repro.configs.base import (AttentionConfig, ModelConfig, MoEConfig,
                                 OptimizerConfig, RunConfig, ShapeConfig,
                                 ShardingConfig)
@@ -58,8 +59,7 @@ def main() -> None:
         checkpoint_dir=args.ckpt)
 
     n = len(jax.devices())
-    mesh = jax.make_mesh((1, n), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, n), ("data", "model"))
     with mesh:
         trainer = Trainer(cfg, run, mesh,
                           tcfg=TrainerConfig(steps=args.steps,

@@ -25,11 +25,13 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 from jax.sharding import Mesh, PartitionSpec as P
-from jax import shard_map
 
 from repro.configs.base import MoEConfig
-from repro.core import costmodel
+from repro.core.transport import (WeightGatherCache, choose_transport_mode,
+                                  sharded_call)
 from repro.models.common import act_fn
 from repro.models.moe import build_dispatch, expert_capacity, expert_ffn, route_topk
 
@@ -67,7 +69,7 @@ def _scatter_buckets(xf, slot, n_slots):
 
 def _sp_slice(xf: jax.Array, tp_axis: str) -> Tuple[jax.Array, int]:
     """Sequence/token-parallel slice of the (replicated) token block."""
-    tp = jax.lax.axis_size(tp_axis)
+    tp = compat.axis_size(tp_axis)
     rank = jax.lax.axis_index(tp_axis)
     n = xf.shape[0]
     n_loc = n // tp
@@ -77,7 +79,7 @@ def _sp_slice(xf: jax.Array, tp_axis: str) -> Tuple[jax.Array, int]:
 def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
                 tp_axis: str, dp_axes: Tuple[str, ...]):
     """Local Function mode: token all-to-all to resident experts."""
-    tp = jax.lax.axis_size(tp_axis)
+    tp = compat.axis_size(tp_axis)
     e_loc = wg.shape[0]                       # experts resident on this rank
     e = m.num_experts
     xloc, n_loc = _sp_slice(xf, tp_axis)
@@ -112,16 +114,14 @@ def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
     return y, aux
 
 
-def _injected_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
-                   tp_axis: str, dp_axes: Tuple[str, ...]):
-    """Injected Function mode: all-gather expert weights; tokens stay put."""
+def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
+                   m: MoEConfig, act: str, tp_axis: str,
+                   dp_axes: Tuple[str, ...]):
+    """Injected Function mode: expert weights arrive pre-gathered (the
+    function state was injected ahead of the call — see the weight-gather
+    cache in ``make_jam_transport``); tokens stay put."""
     e = m.num_experts
     xloc, n_loc = _sp_slice(xf, tp_axis)
-
-    # inject the function state (expert weights) to every token owner
-    wg_full = jax.lax.all_gather(wg, tp_axis, axis=0, tiled=True)   # (E,d,f)
-    wu_full = jax.lax.all_gather(wu, tp_axis, axis=0, tiled=True)
-    wd_full = jax.lax.all_gather(wd, tp_axis, axis=0, tiled=True)
 
     r = route_topk(xloc, router, m)
     cap = expert_capacity(n_loc, m)
@@ -146,7 +146,7 @@ def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
              tp_axis: str, dp_axes: Tuple[str, ...]):
     """Fallback: full token set everywhere; each rank serves only its
     resident experts; partial results combined with psum."""
-    tp = jax.lax.axis_size(tp_axis)
+    tp = compat.axis_size(tp_axis)
     rank = jax.lax.axis_index(tp_axis)
     e_loc = wg.shape[0]
     e = m.num_experts
@@ -183,33 +183,44 @@ _BODIES = {"local": _local_body, "injected": _injected_body, "tp": _tp_body}
 
 def make_jam_transport(mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
                        tp_axis: str = "model", mode: str = "local",
+                       weight_reuse: int = 1,
                        log_choice: Optional[list] = None):
     """Build a ``transport(params, x, moe_cfg, act)`` for models.moe.moe_ffn.
 
-    ``mode='auto'`` consults the cost model per call shape and records the
-    decision in ``log_choice`` (if given).
+    ``mode='auto'`` consults the cost model per call shape (per-dp-shard
+    token counts) and records the decision in ``log_choice`` (if given) and
+    the process-wide ``core.transport`` telemetry.
+
+    ``weight_reuse`` is the expected number of invocations per weight
+    version.  It amortizes the injected-mode gather in the cost model, and
+    the factory backs it with a gather cache: repeated calls on the same
+    weight arrays (eager loops, or multiple calls within one trace) reuse
+    the all-gathered full weights instead of re-gathering.  Only claim
+    reuse the runtime realizes: a transport traced *once* into a compiled
+    step re-executes its gather on every step execution, so jitted callers
+    should leave ``weight_reuse=1`` (see runtime.steps).
     """
     dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
     dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    w_spec = P(tp_axis, None, None)
+    w_full_spec = P(None, None, None)
+    gather_cache = WeightGatherCache()
+
+    def _gather_full(wg, wu, wd):
+        def body(g, u, dn):
+            return tuple(jax.lax.all_gather(w, tp_axis, axis=0, tiled=True)
+                         for w in (g, u, dn))
+        fn = sharded_call(body, mesh, in_specs=(w_spec,) * 3,
+                          out_specs=(w_full_spec,) * 3, label="jam.gather")
+        return fn(wg, wu, wd)
 
     def transport(params, x: jax.Array, m: MoEConfig, act: str):
         b, s, d = x.shape
-        tp = mesh.shape[tp_axis]
-        n_tokens = b * s  # per-dp-shard token count enters the shard body
-
-        chosen = mode
-        if mode == "auto":
-            est = costmodel.estimate_transport(
-                m, d_model=d, n_tokens_per_dp_shard=n_tokens, tp=tp,
-                dtype_bytes=x.dtype.itemsize)
-            chosen = est.chosen
-            if log_choice is not None:
-                log_choice.append(est)
-        if chosen != "tp":
-            # token split must divide; otherwise degrade to tp mode
-            per_shard = n_tokens // max(1, _prod(mesh.shape[a] for a in dp_axes))
-            if per_shard % tp != 0 or per_shard < tp:
-                chosen = "tp"
+        chosen, _ = choose_transport_mode(
+            m, d_model=d, batch=b, seq=s, mesh_shape=dict(mesh.shape),
+            dp_axes=dp_axes, tp_axis=tp_axis, mode=mode,
+            dtype_bytes=x.dtype.itemsize, weight_reuse=weight_reuse,
+            label="jam", log_choice=log_choice)
 
         body = partial(_BODIES[chosen], m=m, act=act, tp_axis=tp_axis,
                        dp_axes=dp_axes)
@@ -223,24 +234,24 @@ def make_jam_transport(mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
             y, aux = body(router, wg, wu, wd, shared_p, xf)
             return y.reshape(xb.shape), aux
 
-        w_spec = P(tp_axis, None, None)
+        weights = (params["w_gate"], params["w_up"], params["w_down"])
+        in_w_spec = w_spec
+        if chosen == "injected":
+            # inject the function state once per weight version; the shard
+            # body then sees pre-gathered full weights (replicated)
+            weights = gather_cache.get_or_gather(
+                weights, lambda: _gather_full(*weights))
+            in_w_spec = w_full_spec
+
         sh_spec = (None if shared is None
                    else {k: P(None, None) for k in shared_keys})
-        fn = shard_map(
-            wrapped, mesh=mesh,
-            in_specs=(P(None, None), w_spec, w_spec, w_spec, sh_spec,
-                      P(dp_spec, None, None)),
+        fn = sharded_call(
+            wrapped, mesh,
+            in_specs=(P(None, None), in_w_spec, in_w_spec, in_w_spec,
+                      sh_spec, P(dp_spec, None, None)),
             out_specs=(P(dp_spec, None, None), P()),
-            check_vma=False)
-        y, aux = fn(params["router"], params["w_gate"], params["w_up"],
-                    params["w_down"], shared, x)
+            label=f"jam.{chosen}")
+        y, aux = fn(params["router"], *weights, shared, x)
         return y, aux
 
     return transport
-
-
-def _prod(it):
-    p = 1
-    for v in it:
-        p *= v
-    return p

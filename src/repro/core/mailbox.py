@@ -22,6 +22,7 @@ from typing import Callable, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.core.message import FrameSpec
 
 
@@ -51,15 +52,23 @@ def init_mailbox(cfg: MailboxConfig) -> Dict[str, jax.Array]:
 
 def post_local(mb: Dict[str, jax.Array], bank: jax.Array,
                frame: jax.Array) -> Dict[str, jax.Array]:
-    """Loopback put of one frame into ``bank`` at its head slot."""
+    """Loopback put of one frame into ``bank`` at its head slot.
+
+    A full bank (zero credits) **drops** the frame, mirroring the wire
+    protocol where a sender without a credit may not put; without the mask,
+    ``dynamic_update_slice`` clamps the out-of-range slot index and silently
+    overwrites the bank's last frame while credits go negative.
+    """
     slot = mb["head"][bank]
-    frames = jax.lax.dynamic_update_slice(
+    has_credit = mb["credits"][bank] > 0
+    updated = jax.lax.dynamic_update_slice(
         mb["frames"], frame[None, None, :],
         (bank, slot, 0))
+    delta = has_credit.astype(jnp.int32)
     return {
-        "frames": frames,
-        "credits": mb["credits"].at[bank].add(-1),
-        "head": mb["head"].at[bank].add(1),
+        "frames": jnp.where(has_credit, updated, mb["frames"]),
+        "credits": mb["credits"].at[bank].add(-delta),
+        "head": mb["head"].at[bank].add(delta),
     }
 
 
@@ -69,7 +78,7 @@ def ring_put(frame_block: jax.Array, axis_name: str, shift: int = 1) -> jax.Arra
     Must run inside shard_map. frame_block: (..., W) frames this device
     sends; returns the frames that LANDED here from the neighbor.
     """
-    n = jax.lax.axis_size(axis_name)
+    n = compat.axis_size(axis_name)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(frame_block, axis_name, perm)
 

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.message import FrameSpec
+from repro.core.transport import sharded_call
 from repro.kernels.mailbox.kernel import (
     indirect_put_pallas,
     mailbox_put_pallas,
@@ -53,12 +54,12 @@ def ring_am_put(frame_blocks: jax.Array, mesh: Mesh, axis_name: str, *,
             sums = jnp.zeros((blk.shape[1], 1), jnp.int32)
         return arr[None], spins[None], sums[None]
 
-    fn = jax.shard_map(
-        body, mesh=mesh,
+    fn = sharded_call(
+        body, mesh,
         in_specs=P(axis_name, None, None),
         out_specs=(P(axis_name, None, None), P(axis_name, None, None),
                    P(axis_name, None, None)),
-        check_vma=False)
+        label="mailbox.ring_am_put")
     arr, spins, sums = fn(frame_blocks)
     return arr, spins, (sums if handler == "sum" else None)
 

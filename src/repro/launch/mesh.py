@@ -15,6 +15,8 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro import compat
+
 # Roofline hardware constants (TPU v5e-class, per assignment)
 PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
 HBM_BW = 819e9               # bytes/s per chip
@@ -32,8 +34,7 @@ def make_production_mesh(*, multi_pod: bool = False,
         raise RuntimeError(
             f"need {n} devices for mesh {shape}, have {len(devices)} — run "
             f"under launch/dryrun.py (sets xla_force_host_platform_device_count)")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=devices[:n])
 
 
 def make_test_mesh(shape: Tuple[int, ...] = (1, 1),
@@ -43,5 +44,4 @@ def make_test_mesh(shape: Tuple[int, ...] = (1, 1),
     devices = jax.devices()
     if len(devices) < n:
         raise RuntimeError(f"need {n} devices, have {len(devices)}")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=devices[:n])

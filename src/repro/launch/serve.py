@@ -11,6 +11,7 @@ import time
 import jax
 import numpy as np
 
+from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import ARCHS, get_config, get_smoke
 from repro.launch.mesh import make_production_mesh
@@ -32,8 +33,7 @@ def main() -> None:
     if cfg.is_encoder:
         raise SystemExit(f"{args.arch} is encoder-only: no decode path")
     if args.smoke:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
         sharding = ShardingConfig(fsdp_params=False, seq_axis=None)
     else:
         mesh = make_production_mesh()

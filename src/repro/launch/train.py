@@ -30,6 +30,7 @@ _tpu_overlap_flags()
 
 import jax  # noqa: E402
 
+from repro import compat  # noqa: E402
 from repro.configs.base import SHAPES, OptimizerConfig, RunConfig, ShardingConfig  # noqa: E402
 from repro.configs.registry import ARCHS, get_config, get_smoke  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
@@ -67,8 +68,7 @@ def main() -> None:
         shape = dataclasses.replace(shape, global_batch=args.batch)
 
     if args.smoke:
-        mesh = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((1, 1), ("data", "model"))
         sharding = ShardingConfig(dp_axes=("data",), fsdp_params=False)
     else:
         mesh = make_production_mesh(multi_pod=args.multi_pod)

@@ -16,6 +16,8 @@ from typing import Any, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
+
 PyTree = Any
 
 
@@ -65,7 +67,7 @@ def compressed_psum(grads: PyTree, axis: str | Tuple[str, ...],
     axes = (axis,) if isinstance(axis, str) else tuple(axis)
     n = 1
     for a in axes:
-        n *= jax.lax.axis_size(a)
+        n *= compat.axis_size(a)
 
     def one(g, e):
         gf = g.astype(jnp.float32) + (e if e is not None else 0.0)

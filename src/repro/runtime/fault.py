@@ -115,3 +115,5 @@ class StepStats:
     p999_s: float = 0.0
     tail_spread: float = 0.0
     final_metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # auto-mode TransportEstimate.describe() strings, one per traced MoE call
+    transport_decisions: List[str] = dataclasses.field(default_factory=list)

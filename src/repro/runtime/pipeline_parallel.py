@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core.transport import sharded_call
+
 PyTree = Any
 
 
@@ -111,11 +113,11 @@ def pipeline_forward(params: PyTree, x: jax.Array, pc: PipeConfig,
         # every stage holds the full `out` zeros except the last; sum-gather
         return jax.lax.psum(out, "pipe")
 
-    fn = jax.shard_map(
-        per_stage, mesh=mesh,
+    fn = sharded_call(
+        per_stage, mesh,
         in_specs=(P("pipe"), P()),
         out_specs=P(),
-        check_vma=False)
+        label="pipeline.forward")
     return fn(params, x)
 
 

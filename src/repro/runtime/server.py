@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import transport as transport_lib
 from repro.models import model as model_lib
 from repro.runtime.steps import make_serve_step, sharding_ctx
 
@@ -63,6 +64,23 @@ class Server:
         self.queue: List[Request] = []
         self.completed: List[Request] = []
         self.ticks = 0
+
+    @property
+    def transport_decisions(self):
+        """Auto-mode TransportEstimates recorded while tracing decode."""
+        return list(self.bundle.meta.get("transport_log", ()))
+
+    def metrics(self) -> Dict[str, Any]:
+        """Serving + transport telemetry snapshot (monitoring surface)."""
+        return {
+            "ticks": self.ticks,
+            "active_slots": sum(r is not None for r in self.slot_req),
+            "queued": len(self.queue),
+            "completed": len(self.completed),
+            "transport_decisions": [est.describe()
+                                    for est in self.transport_decisions],
+            "transport_telemetry": transport_lib.get_telemetry().summary(),
+        }
 
     # -- state -------------------------------------------------------------------
     def load_params(self, params: Optional[PyTree] = None) -> None:

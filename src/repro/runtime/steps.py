@@ -85,13 +85,17 @@ def sharding_ctx(cfg: ModelConfig, run: RunConfig, mesh: Mesh):
     return rules, params_shapes, axes, pspecs, pshard
 
 
-def _moe_transport(cfg: ModelConfig, mesh: Mesh, rules) -> Optional[Callable]:
+def _moe_transport(cfg: ModelConfig, mesh: Mesh, rules, *,
+                   weight_reuse: int = 1,
+                   log_choice: Optional[list] = None) -> Optional[Callable]:
     if cfg.moe is None:
         return None
     if mesh.shape.get(rules.tp_axis, 1) <= 1:
         return None   # single tensor shard: oracle path
     return make_jam_transport(mesh, dp_axes=rules.dp_axes,
-                              tp_axis=rules.tp_axis, mode=cfg.moe.transport)
+                              tp_axis=rules.tp_axis, mode=cfg.moe.transport,
+                              weight_reuse=weight_reuse,
+                              log_choice=log_choice)
 
 
 def opt_shardings(pshard: PyTree, mesh: Mesh) -> AdamWState:
@@ -137,10 +141,18 @@ def act_constrain(rules, mesh: Mesh, dp_ok: bool):
 def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
                     batch_override: Optional[int] = None) -> StepBundle:
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
-    transport = _moe_transport(cfg, mesh, rules)
     ocfg = run.optimizer
 
     accum = max(1, ocfg.accum_steps)
+    # auto-mode transport decisions land here at trace time (surfaced via
+    # bundle.meta["transport_log"] -> Trainer logs). weight_reuse stays 1:
+    # the transport is traced once inside the accum lax.scan body, so the
+    # gather executes per microbatch — pricing amortization the runtime
+    # doesn't realize would flip auto mode to 'injected' too early. (Eager
+    # callers that reuse weights across calls get the gather cache and may
+    # pass weight_reuse themselves.)
+    transport_log: list = []
+    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
 
     def grads_of(params, batch):
         def loss_of(p):
@@ -205,7 +217,7 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         abstract_inputs=(params_shapes, abstract_opt_state(params_shapes),
                          batch_abs),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="train",
-                  batch=batch_abs),
+                  batch=batch_abs, transport_log=transport_log),
     )
 
 
@@ -216,7 +228,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
 def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
                       batch_override: Optional[int] = None) -> StepBundle:
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
-    transport = _moe_transport(cfg, mesh, rules)
+    transport_log: list = []
+    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
     shape = run.shape
     b = batch_override or shape.global_batch
     seq_sharded = rules.seq_axis is not None
@@ -268,7 +281,7 @@ def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         out_shardings=(logit_shard, cache_shard),
         abstract_inputs=(params_shapes, batch_abs),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="prefill",
-                  batch=batch_abs),
+                  batch=batch_abs, transport_log=transport_log),
     )
 
 
@@ -280,7 +293,11 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
                     batch_override: Optional[int] = None) -> StepBundle:
     assert not cfg.is_encoder, "encoder-only arch has no decode step"
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
-    transport = _moe_transport(cfg, mesh, rules)
+    transport_log: list = []
+    # weight_reuse stays 1: the decode step is compiled once and every
+    # executed tick re-runs the gather inside it, so auto mode must price
+    # the full per-call cost (see make_train_step)
+    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
     shape = run.shape
     b = batch_override or shape.global_batch
     constrain = act_constrain(
@@ -321,7 +338,7 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         out_shardings=(tok_shard, cache_shard),
         abstract_inputs=tuple(abstract),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="decode",
-                  cache=cache_shapes),
+                  cache=cache_shapes, transport_log=transport_log),
     )
 
 

@@ -25,6 +25,7 @@ from jax.sharding import Mesh
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ModelConfig, RunConfig
+from repro.core import transport as transport_lib
 from repro.data.pipeline import DataPipeline
 from repro.models import model as model_lib
 from repro.optim.adamw import adamw_init
@@ -66,6 +67,12 @@ class Trainer:
         self.monitor = StragglerMonitor()
         self.policy = RestartPolicy()
         self.batch_override = batch_override
+        self._transport_logged = False
+
+    @property
+    def transport_decisions(self):
+        """Auto-mode TransportEstimates recorded while tracing the step."""
+        return list(self.bundle.meta.get("transport_log", ()))
 
     # -- state ------------------------------------------------------------------
     def init_state(self):
@@ -120,6 +127,12 @@ class Trainer:
                     jax.block_until_ready(metrics["loss"])
                     dt = time.perf_counter() - t0
                     steps_since_start += 1
+                    if not self._transport_logged:
+                        # the first executed step traced the model: auto-mode
+                        # decisions (if any) are in the bundle log now
+                        self._transport_logged = True
+                        for est in self.transport_decisions:
+                            self.log(f"[trainer] transport: {est.describe()}")
                     if steps_since_start > 1 and self.monitor.observe(step, dt):
                         stats.stragglers += 1
                         self.log(f"[trainer] straggler step {step}: "
@@ -156,4 +169,8 @@ class Trainer:
         stats.tail_spread = self.monitor.tail_spread()
         stats.final_metrics = {k: float(np.asarray(v))
                                for k, v in metrics.items()}
+        stats.transport_decisions = [est.describe()
+                                     for est in self.transport_decisions]
+        if stats.transport_decisions or transport_lib.get_telemetry().builds:
+            self.log(f"[trainer] {transport_lib.get_telemetry().summary()}")
         return stats

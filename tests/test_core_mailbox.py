@@ -40,6 +40,24 @@ def test_post_local_credits_and_head():
                                   np.asarray(frame))
 
 
+def test_post_local_drops_frame_when_bank_full():
+    """frames_per_bank + 1 posts: the overflow frame must be dropped, not
+    clamped into the last slot (the dynamic_update_slice clamp bug), and
+    credits must floor at 0 instead of going negative."""
+    cfg = MailboxConfig(banks=1, frames_per_bank=3, spec=SPEC)
+    mb = init_mailbox(cfg)
+    for i in range(cfg.frames_per_bank + 1):
+        frame = pack_frame(SPEC, func_id=0,
+                           payload_words=jnp.full((8,), i + 1, jnp.int32))
+        mb = post_local(mb, jnp.int32(0), frame)
+    assert int(mb["credits"][0]) == 0
+    assert int(mb["head"][0]) == cfg.frames_per_bank
+    # last slot still holds post #3, not the overflow post #4
+    usr = SPEC.offsets()["usr"]
+    np.testing.assert_array_equal(
+        np.asarray(mb["frames"][0, -1, usr:usr + 8]), np.full(8, 3))
+
+
 def test_drain_executes_valid_skips_invalid():
     pkg, got = _pkg_and_got()
     dispatch = pkg.build_dispatcher(got)

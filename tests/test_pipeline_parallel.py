@@ -1,8 +1,13 @@
 """Pipeline-parallel schedule: multi-device equivalence vs sequential oracle
-+ bubble-fraction cost math."""
-from tests.helpers import run_multidev
++ bubble-fraction cost math (in-process; see tests/conftest.py)."""
+import jax
+import jax.numpy as jnp
+import pytest
 
-from repro.runtime.pipeline_parallel import PipeConfig, pipeline_cost
+from repro import compat
+from repro.runtime.pipeline_parallel import (PipeConfig, init_stage_params,
+                                             pipeline_cost, pipeline_forward,
+                                             pipeline_reference)
 
 
 def test_bubble_fraction():
@@ -16,26 +21,16 @@ def test_bubble_fraction():
     assert pipeline_cost(pc2)["bubble_frac"] < c["bubble_frac"]
 
 
-_PIPE = r"""
-import jax, jax.numpy as jnp
-import numpy as np
-from repro.runtime.pipeline_parallel import (PipeConfig, init_stage_params,
-    pipeline_forward, pipeline_reference)
-pc = PipeConfig(n_stages=4, layers_per_stage=2, d_model=32, d_ff=64,
-                n_micro=6, micro_batch=2, seq_len=8)
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(jax.sharding.AxisType.Auto,))
-params = init_stage_params(jax.random.PRNGKey(0), pc)
-x = jax.random.normal(jax.random.PRNGKey(1),
-                      (pc.n_micro, pc.micro_batch, pc.seq_len, pc.d_model))
-with mesh:
-    y = pipeline_forward(params, x, pc, mesh)
-yr = pipeline_reference(params, x)
-err = float(jnp.abs(y - yr).max())
-assert err < 1e-4, err
-print("PIPE_OK", err)
-"""
-
-
+@pytest.mark.skipif(len(jax.devices()) < 4, reason="needs 4 devices")
 def test_pipeline_multidev_matches_reference():
-    out = run_multidev(_PIPE, n_devices=4)
-    assert "PIPE_OK" in out
+    pc = PipeConfig(n_stages=4, layers_per_stage=2, d_model=32, d_ff=64,
+                    n_micro=6, micro_batch=2, seq_len=8)
+    mesh = compat.make_mesh((4,), ("pipe",))
+    params = init_stage_params(jax.random.PRNGKey(0), pc)
+    x = jax.random.normal(jax.random.PRNGKey(1),
+                          (pc.n_micro, pc.micro_batch, pc.seq_len, pc.d_model))
+    with mesh:
+        y = pipeline_forward(params, x, pc, mesh)
+    yr = pipeline_reference(params, x)
+    err = float(jnp.abs(y - yr).max())
+    assert err < 1e-4, err

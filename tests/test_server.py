@@ -5,6 +5,7 @@ import jax
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
 from repro.models import model as model_lib
@@ -24,8 +25,7 @@ def server(mesh11_module):
 
 @pytest.fixture(scope="module")
 def mesh11_module():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_serves_all_requests(server):

@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro import compat
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
                                 ShardingConfig)
 from repro.configs.registry import get_smoke
@@ -38,8 +39,7 @@ def _run(accum, mesh):
 
 @pytest.fixture(scope="module")
 def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 def test_accum_matches_single_step(mesh):

@@ -5,6 +5,7 @@ import shutil
 import jax
 import pytest
 
+from repro import compat
 from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
                                 ShardingConfig)
 from repro.configs.registry import get_smoke
@@ -20,8 +21,7 @@ def _run(tmp_path, steps=10, injector=None, ckpt_every=4):
                     optimizer=OptimizerConfig(total_steps=steps,
                                               warmup_steps=2),
                     checkpoint_dir=str(tmp_path / "ckpt"))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
     with mesh:
         t = Trainer(cfg, run, mesh,
                     tcfg=TrainerConfig(steps=steps, checkpoint_every=ckpt_every,

@@ -1,0 +1,157 @@
+"""Serving throughput/latency — contiguous fixed-slot vs paged scheduler.
+
+Equal HBM budget on both sides: the contiguous server allocates
+``slots_contig * max_len`` KV rows up front; the paged server gets the SAME
+number of pool tokens (``num_blocks * block_size``) but allocates them at
+block granularity, so it sustains more concurrent requests whenever actual
+sequences are shorter than ``max_len`` (the common serving case).
+
+Reports tokens/s, p50/p99 time-to-first-token, and peak sustained
+concurrency for both servers, plus per-request output identity against the
+exact contiguous path (a slots=1 fixed-slot server, which has no batch
+position skew — docs/serving.md). Results also land in
+``serving_bench.json`` (ISSUE 2 acceptance: paged concurrency >= 2x at
+equal budget, outputs identical).
+
+  PYTHONPATH=src python -m benchmarks.bench_serving
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.runtime.server import PagedServer, Request, Server
+from benchmarks.common import Row
+
+N_REQUESTS = 16
+PROMPT_LEN = 8
+MAX_NEW = 8
+MAX_LEN = 96                      # per-request KV allocation (contiguous)
+SLOTS_CONTIG = 4
+BLOCK_SIZE = 8
+# equal budget: 4 slots * 96 rows = 384 pool tokens = 48 blocks
+NUM_BLOCKS = SLOTS_CONTIG * MAX_LEN // BLOCK_SIZE
+JSON_PATH = "serving_bench.json"
+
+
+def _requests(prompts) -> List[Request]:
+    """Fresh Request objects over one fixed prompt set (all servers must
+    see identical prompts for the output-identity comparison)."""
+    return [Request(rid, p, max_new_tokens=MAX_NEW)
+            for rid, p in enumerate(prompts)]
+
+
+def _drive(server, requests) -> Dict:
+    """Run to drain, recording per-request TTFT at tick granularity."""
+    for r in requests:
+        server.submit(r)
+    ttft: Dict[int, float] = {}
+    t0 = time.perf_counter()
+    while server.pending() and server.ticks < 10_000:
+        server.tick()
+        now = time.perf_counter()
+        for r in requests:
+            if r.out_tokens and r.rid not in ttft:
+                ttft[r.rid] = now - t0
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.out_tokens) for r in requests)
+    lat = sorted(ttft.values())
+    return {
+        "wall_s": dt,
+        "tokens": toks,
+        "tokens_per_s": toks / dt,
+        "ticks": server.ticks,
+        "ttft_p50_s": float(np.percentile(lat, 50)),
+        "ttft_p99_s": float(np.percentile(lat, 99)),
+        "outputs": {r.rid: list(r.out_tokens) for r in requests},
+    }
+
+
+def main() -> List[Row]:
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=(PROMPT_LEN,)).astype(np.int32)
+               for _ in range(N_REQUESTS)]
+
+    with mesh:
+        contig = Server(cfg, run, mesh, slots=SLOTS_CONTIG, max_len=MAX_LEN)
+        contig.load_params()
+        params = contig.params
+        res_c = _drive(contig, _requests(prompts))
+
+        paged = PagedServer(cfg, run, mesh, slots=N_REQUESTS, max_len=MAX_LEN,
+                            num_blocks=NUM_BLOCKS, block_size=BLOCK_SIZE,
+                            chunk=BLOCK_SIZE)
+        paged.load_params(params)
+        res_p = _drive(paged, _requests(prompts))
+        pm = paged.metrics()
+
+        # exact contiguous reference: one request at a time, no batch skew
+        ref = Server(cfg, run, mesh, slots=1, max_len=MAX_LEN)
+        ref_out = {}
+        for r in _requests(prompts):
+            ref.load_params(params)   # fresh cache: length scalar must reset
+            ref.submit(r)
+            ref.run_until_drained()
+            ref_out[r.rid] = list(r.out_tokens)
+
+    paged_exact = sum(res_p["outputs"][rid] == ref_out[rid]
+                      for rid in ref_out)
+    contig_exact = sum(res_c["outputs"][rid] == ref_out[rid]
+                       for rid in ref_out)
+    concurrency_c = min(SLOTS_CONTIG, N_REQUESTS)
+    concurrency_p = pm["peak_active_slots"]
+
+    report = {
+        "budget_pool_tokens": NUM_BLOCKS * BLOCK_SIZE,
+        "contig": {"slots": SLOTS_CONTIG, "max_len": MAX_LEN,
+                   "peak_concurrent": concurrency_c,
+                   "exact_vs_reference": f"{contig_exact}/{N_REQUESTS}",
+                   **{k: v for k, v in res_c.items() if k != "outputs"}},
+        "paged": {"slots": N_REQUESTS, "num_blocks": NUM_BLOCKS,
+                  "block_size": BLOCK_SIZE,
+                  "peak_concurrent": concurrency_p,
+                  "peak_used_blocks": pm["peak_used_blocks"],
+                  "preemptions": pm["preemptions"],
+                  "exact_vs_reference": f"{paged_exact}/{N_REQUESTS}",
+                  **{k: v for k, v in res_p.items() if k != "outputs"}},
+        "concurrency_ratio": concurrency_p / concurrency_c,
+        "outputs_match_reference": paged_exact == N_REQUESTS,
+    }
+    with open(JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+
+    assert report["concurrency_ratio"] >= 2.0, report["concurrency_ratio"]
+    assert report["outputs_match_reference"], \
+        f"paged outputs diverged from reference ({paged_exact}/{N_REQUESTS})"
+
+    return [
+        Row("serving_contig_tok_s", res_c["wall_s"] * 1e6 / max(1, res_c["tokens"]),
+            f"tok/s={res_c['tokens_per_s']:.1f} "
+            f"ttft_p50={res_c['ttft_p50_s']*1e3:.0f}ms "
+            f"ttft_p99={res_c['ttft_p99_s']*1e3:.0f}ms "
+            f"concurrent={concurrency_c}"),
+        Row("serving_paged_tok_s", res_p["wall_s"] * 1e6 / max(1, res_p["tokens"]),
+            f"tok/s={res_p['tokens_per_s']:.1f} "
+            f"ttft_p50={res_p['ttft_p50_s']*1e3:.0f}ms "
+            f"ttft_p99={res_p['ttft_p99_s']*1e3:.0f}ms "
+            f"concurrent={concurrency_p} "
+            f"x{report['concurrency_ratio']:.1f} vs contig, "
+            f"exact={paged_exact}/{N_REQUESTS}"),
+    ]
+
+
+if __name__ == "__main__":
+    for row in main():
+        print(row.csv())
+    print(f"# full report: {JSON_PATH}")

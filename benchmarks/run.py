@@ -20,8 +20,8 @@ import time
 import traceback
 
 from benchmarks import (bench_injected_vs_local, bench_mailbox_overhead,
-                        bench_roofline, bench_stashing, bench_tail_latency,
-                        bench_wfe)
+                        bench_roofline, bench_serving, bench_stashing,
+                        bench_tail_latency, bench_wfe)
 
 MODULES = (
     ("fig5_6", bench_mailbox_overhead),
@@ -30,6 +30,7 @@ MODULES = (
     ("fig11_12", bench_tail_latency),
     ("fig13_14", bench_wfe),
     ("roofline", bench_roofline),
+    ("serving", bench_serving),
 )
 
 

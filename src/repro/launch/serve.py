@@ -2,10 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 12 --slots 4 --max-new 16
+
+  # paged scheduler (block-pool KV cache + chunked prefill):
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --paged --slots 12 --blocks 48 --block-size 8 --chunk 8
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -15,7 +20,7 @@ from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import ARCHS, get_config, get_smoke
 from repro.launch.mesh import make_production_mesh
-from repro.runtime.server import Request, Server
+from repro.runtime.server import PagedServer, Request, Server
 
 
 def main() -> None:
@@ -27,6 +32,17 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--paged", action="store_true",
+                   help="use the paged (block-pool) scheduler")
+    p.add_argument("--blocks", type=int, default=0,
+                   help="paged: pool size in blocks (0 => slots*max_len/2 "
+                        "worth of tokens — half the contiguous budget)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="paged: tokens per block")
+    p.add_argument("--chunk", type=int, default=8,
+                   help="paged: prefill tokens per request per tick")
+    p.add_argument("--metrics-json", action="store_true",
+                   help="print the final Server.metrics() dict as JSON")
     args = p.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -42,8 +58,19 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     with mesh:
-        server = Server(cfg, run, mesh, slots=args.slots,
-                        max_len=args.max_len)
+        if args.paged:
+            # default: half the contiguous budget, floored at one full
+            # max_len sequence (PagedServer rejects anything smaller)
+            max_blocks_per_seq = -(-args.max_len // args.block_size)
+            num_blocks = args.blocks or max(
+                max_blocks_per_seq,
+                (args.slots * args.max_len // 2) // args.block_size)
+            server = PagedServer(cfg, run, mesh, slots=args.slots,
+                                 max_len=args.max_len, num_blocks=num_blocks,
+                                 block_size=args.block_size, chunk=args.chunk)
+        else:
+            server = Server(cfg, run, mesh, slots=args.slots,
+                            max_len=args.max_len)
         server.load_params()
         t0 = time.perf_counter()
         for rid in range(args.requests):
@@ -54,11 +81,14 @@ def main() -> None:
         dt = time.perf_counter() - t0
 
     total_tokens = sum(len(r.out_tokens) for r in done)
-    print(f"[serve] {len(done)}/{args.requests} requests, "
+    kind = "paged" if args.paged else "contig"
+    print(f"[serve:{kind}] {len(done)}/{args.requests} requests, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {server.ticks} ticks)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+    if args.metrics_json:
+        print(json.dumps(server.metrics(), default=str, indent=2))
 
 
 if __name__ == "__main__":

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig
 from repro.models.common import ParamBuilder, rms_norm
-from repro.models.kvcache import KVCache, MLACache
+from repro.models.kvcache import KVCache, MLACache, PagedKVCache, PagedLayout
 from repro.models.rope import apply_mrope, apply_rope
 
 NEG_INF = -2.0 ** 30  # large-but-finite: keeps fully-masked rows NaN-free
@@ -241,12 +241,23 @@ def gqa_attention(
     new_cache = None
     if cache is not None and S > 1:
         # Prefill into a fresh cache: attend over the in-block k/v (identical
-        # result, avoids touching max_len empty slots), then append.
+        # result, avoids touching max_len empty slots), then append. Same
+        # chunking policy as the no-cache branch — short prefills use the
+        # plain softmax so cached and cacheless forward stay bitwise
+        # consistent (greedy serving depends on that identity).
         new_cache = cache.append(k, v)
-        out = _sdpa_chunked(qg, k.astype(x.dtype), v.astype(x.dtype),
-                            scale=scale, q_pos=positions,
-                            kv_pos=positions, causal=causal, window=window,
-                            canonical_positions=True)
+        if _use_chunked(S, S):
+            out = _sdpa_chunked(qg, k.astype(x.dtype), v.astype(x.dtype),
+                                scale=scale, q_pos=positions,
+                                kv_pos=positions, causal=causal,
+                                window=window, canonical_positions=True)
+        else:
+            mask = None
+            if causal or window is not None:
+                mask = make_mask(S, S, causal=causal,
+                                 window=window)[None, None, None]
+            out = _sdpa(qg, k.astype(x.dtype), v.astype(x.dtype), mask,
+                        scale)
     elif cache is not None:
         # Decode: dense scores over the cache (S==1: scores are (B,K,G,1,T)).
         new_cache = cache.append(k, v)
@@ -272,6 +283,66 @@ def gqa_attention(
         out = _sdpa(qg, k.astype(x.dtype), v.astype(x.dtype), mask, scale)
 
     out = out.reshape(B, S, H, D)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Paged GQA forward (serving: block-table cache, decode + chunked prefill)
+# ---------------------------------------------------------------------------
+
+def gqa_paged_attention(
+    params,
+    x: jax.Array,                          # (B, C, d): C-token chunk per slot
+    a: AttentionConfig,
+    *,
+    cache: PagedKVCache,
+    layout: PagedLayout,
+    window: Optional[int] = None,
+) -> Tuple[jax.Array, PagedKVCache]:
+    """One serving step through a paged cache.
+
+    Each batch row is one request slot advancing ``n_valid`` tokens whose
+    absolute positions start at ``starts`` — decode rows advance 1 token,
+    chunked-prefill rows up to C, idle rows 0. New k/v scatter into the
+    shared pool through the block table; scores run against the request's
+    gathered (M * block_size) logical view. Columns beyond ``n_valid``
+    produce garbage outputs that the caller discards (their cache writes
+    are dropped), which is what lets decode and prefill share one compiled
+    shape — the ISSUE's "decode-shaped step, no per-bucket prefill jits".
+    """
+    assert not a.mrope, "paged serving does not support mrope archs yet"
+    B, C, _ = x.shape
+    H, K, D = a.num_heads, a.num_kv_heads, a.head_dim
+    G = H // K
+    positions = layout.token_positions(C)                   # (B, C)
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if a.rotary_pct > 0:
+        q = apply_rope(q, positions, a.rope_theta, a.rotary_pct)
+        k = apply_rope(k, positions, a.rope_theta, a.rotary_pct)
+
+    new_cache = cache.write(k, v, layout)
+    k_all, v_all = new_cache.gather(layout.block_tables)    # (B, T, K, D)
+    T = k_all.shape[1]
+
+    kv_pos = jnp.arange(T, dtype=jnp.int32)
+    rel = positions[:, :, None] - kv_pos[None, None, :]     # (B, C, T)
+    mask = rel >= 0                                          # causal
+    if window is not None:
+        mask &= rel < window
+    # never read past the tokens resident after this step's writes (keeps
+    # stale pool rows from reused blocks out of even discarded columns)
+    seq_end = layout.starts + layout.n_valid
+    mask &= kv_pos[None, None, :] < seq_end[:, None, None]
+    mask = mask[:, None, None, :, :]                         # (B,1,1,C,T)
+
+    qg = q.reshape(B, C, K, G, D)
+    out = _sdpa(qg, k_all.astype(x.dtype), v_all.astype(x.dtype), mask,
+                1.0 / math.sqrt(D))
+    out = out.reshape(B, C, H, D)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
 

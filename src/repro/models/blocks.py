@@ -24,7 +24,8 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.common import ParamBuilder, rms_norm
-from repro.models.kvcache import KVCache, MLACache, SSMCache
+from repro.models.kvcache import (KVCache, MLACache, PagedKVCache,
+                                  PagedLayout, SSMCache)
 
 Cache = Optional[Dict[str, Any]]
 
@@ -85,6 +86,27 @@ def init_block_cache(bt: str, cfg: ModelConfig, batch: int, max_len: int,
 
 
 # ---------------------------------------------------------------------------
+# paged cache init (serving pool; GQA block types only)
+# ---------------------------------------------------------------------------
+
+# Block types whose cache is plain GQA k/v — the ones the paged serving
+# subsystem supports (ISSUE 2: GQA first; MLA/SSM/xLSTM archs stay on the
+# contiguous Server).
+PAGED_BLOCK_TYPES = ("attn_full", "attn_local", "attn_moe")
+
+
+def init_paged_block_cache(bt: str, cfg: ModelConfig, num_blocks: int,
+                           block_size: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    if bt not in PAGED_BLOCK_TYPES:
+        raise ValueError(
+            f"paged serving supports GQA block types {PAGED_BLOCK_TYPES}, "
+            f"got {bt!r} — use the contiguous Server for this arch")
+    a = cfg.attention
+    shape = (num_blocks, block_size, a.num_kv_heads, a.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
 # apply
 # ---------------------------------------------------------------------------
 
@@ -99,9 +121,14 @@ def apply_block(
     positions: Optional[jax.Array] = None,
     mrope_positions: Optional[jax.Array] = None,
     moe_transport=None,
+    paged: Optional[PagedLayout] = None,
 ) -> Tuple[jax.Array, Cache, jax.Array]:
     a = cfg.attention
     zero = jnp.zeros((), jnp.float32)
+
+    if paged is not None:
+        return _apply_block_paged(bt, params, x, cfg, cache, paged,
+                                  moe_transport)
 
     if bt == "mlstm":
         h = rms_norm(x, params["ln1"], cfg.norm_eps)
@@ -179,3 +206,35 @@ def apply_block(
     else:
         y_ffn = mlp_mod.mlp(params["mlp"], h2, cfg.act, cfg.mlp_gated)
     return x + y_ffn, new_cache, aux
+
+
+def _apply_block_paged(bt: str, params, x: jax.Array, cfg: ModelConfig,
+                       cache: Cache, paged: PagedLayout,
+                       moe_transport) -> Tuple[jax.Array, Cache, jax.Array]:
+    """Paged-serving variant: GQA attention through the block pool.
+
+    Same residual structure as the contiguous path; only the attention
+    sub-layer differs (pool scatter/gather instead of contiguous append).
+    """
+    if bt not in PAGED_BLOCK_TYPES:
+        raise ValueError(f"block type {bt!r} has no paged path")
+    a = cfg.attention
+    window = a.sliding_window if bt.endswith("_local") else None
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    pkv = PagedKVCache(cache["k"], cache["v"], paged.block_size)
+    y_attn, npkv = attn.gqa_paged_attention(params["attn"], h, a,
+                                            cache=pkv, layout=paged,
+                                            window=window)
+    x = x + y_attn
+    h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    if bt.endswith("_moe"):
+        # mask the padding columns out of routing so they cannot steal
+        # expert capacity from real tokens (honored by the oracle path;
+        # jam transports route everything — docs/serving.md caveat)
+        y_ffn, aux = moe_mod.moe_ffn(params["moe"], h2, cfg.moe, cfg.act,
+                                     transport=moe_transport,
+                                     token_mask=paged.token_valid(x.shape[1]))
+    else:
+        y_ffn = mlp_mod.mlp(params["mlp"], h2, cfg.act, cfg.mlp_gated)
+        aux = jnp.zeros((), jnp.float32)
+    return x + y_ffn, {"k": npkv.k_pool, "v": npkv.v_pool}, aux

@@ -1,9 +1,13 @@
 """KV-cache structures for decode. Registered as pytrees so they flow through jit.
 
-Two layouts:
-  * ``KVCache``  — standard GQA: k/v (B, S_max, K, D).
-  * ``MLACache`` — deepseek MLA: compressed c_kv (B, S_max, r) + shared rope
+Three layouts:
+  * ``KVCache``      — standard GQA: k/v (B, S_max, K, D), contiguous per row.
+  * ``MLACache``     — deepseek MLA: compressed c_kv (B, S_max, r) + shared rope
     key (B, S_max, rope_dim); ~(2*K*D)/(r+rope) smaller than materialized k/v.
+  * ``PagedKVCache`` — serving: one shared block pool (N_blocks, block_size,
+    K, D) per layer; requests own blocks through a per-request block table
+    so HBM is allocated at actual-sequence-length granularity instead of
+    ``slots * max_len`` (the receiver-resident-state pool of docs/serving.md).
 
 Sliding-window layers may allocate ``S_max = window`` and write via ring
 indexing (``ring=True``) — the beyond-paper memory optimization for long
@@ -12,7 +16,7 @@ contexts (EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,11 +42,36 @@ class KVCache:
                        jnp.zeros((), jnp.int32), ring)
 
     def append(self, k_new: jax.Array, v_new: jax.Array) -> "KVCache":
-        """Append S_new tokens (B, S_new, K, D) at position ``length``."""
+        """Append S_new tokens (B, S_new, K, D) at position ``length``.
+
+        Ring caches with a multi-token append must NOT use a single
+        ``dynamic_update_slice``: DUS clamps the start index so the slice
+        stays in bounds instead of wrapping, which silently shifts every
+        token written across the wrap boundary. Those appends scatter to
+        explicit ``(length + i) % max_len`` rows instead; a single-token
+        ring append can never cross the boundary and keeps the DUS fast
+        path.
+        """
+        s_new = k_new.shape[1]
+        new_len = self.length + s_new
+        if self.ring and s_new > 1:
+            if s_new >= self.max_len:
+                # only the last max_len tokens survive a full wrap — drop
+                # the overwritten prefix so scatter rows are unique
+                k_new = k_new[:, -self.max_len:]
+                v_new = v_new[:, -self.max_len:]
+                s_new = self.max_len
+            # surviving tokens occupy absolute positions [new_len - s_new,
+            # new_len); map each to its ring row
+            rows = (new_len - s_new
+                    + jnp.arange(s_new, dtype=jnp.int32)) % self.max_len
+            k = self.k.at[:, rows].set(k_new.astype(self.k.dtype))
+            v = self.v.at[:, rows].set(v_new.astype(self.v.dtype))
+            return KVCache(k, v, new_len, self.ring)
         pos = self.length % self.max_len if self.ring else self.length
         k = jax.lax.dynamic_update_slice(self.k, k_new.astype(self.k.dtype), (0, pos, 0, 0))
         v = jax.lax.dynamic_update_slice(self.v, v_new.astype(self.v.dtype), (0, pos, 0, 0))
-        return KVCache(k, v, self.length + k_new.shape[1], self.ring)
+        return KVCache(k, v, new_len, self.ring)
 
 
 @jax.tree_util.register_dataclass
@@ -69,6 +98,103 @@ class MLACache:
         c = jax.lax.dynamic_update_slice(self.c_kv, c_new.astype(self.c_kv.dtype), (0, self.length, 0))
         kr = jax.lax.dynamic_update_slice(self.k_rope, kr_new.astype(self.k_rope.dtype), (0, self.length, 0))
         return MLACache(c, kr, self.length + c_new.shape[1])
+
+
+class PagedLayout(NamedTuple):
+    """Per-step view of the paged pool, built inside the jitted step.
+
+    block_tables: (B, max_blocks) int32 — pool block ids per request, in
+        logical order; -1 marks unallocated slots.
+    starts: (B,) int32 — tokens already resident per request (the absolute
+        position of this step's first new token).
+    n_valid: (B,) int32 — how many of this step's ``chunk`` token columns
+        are real for each request (decode rows use 1, prefill rows up to
+        ``chunk``, idle rows 0).
+    block_size: static python int — tokens per pool block.
+    """
+
+    block_tables: jax.Array
+    starts: jax.Array
+    n_valid: jax.Array
+    block_size: int
+
+    def token_positions(self, chunk: int) -> jax.Array:
+        return (self.starts[:, None]
+                + jnp.arange(chunk, dtype=jnp.int32)[None, :])
+
+    def token_valid(self, chunk: int) -> jax.Array:
+        return (jnp.arange(chunk, dtype=jnp.int32)[None, :]
+                < self.n_valid[:, None])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-pool GQA cache: requests gather/scatter through a block table.
+
+    The pool is shared by every request; logical position ``p`` of request
+    ``b`` lives at ``(block_tables[b, p // block_size], p % block_size)``.
+    All ops are fixed-shape (jit-friendly): invalid writes scatter out of
+    bounds and are dropped, invalid reads are masked by the caller.
+    """
+
+    k_pool: jax.Array                # (N_blocks, block_size, K, D)
+    v_pool: jax.Array
+    block_size: int = dataclasses.field(default=16, metadata=dict(static=True))
+
+    @property
+    def num_blocks(self) -> int:
+        return self.k_pool.shape[0]
+
+    @staticmethod
+    def init(num_blocks: int, block_size: int, kv_heads: int, head_dim: int,
+             dtype=jnp.bfloat16) -> "PagedKVCache":
+        shape = (num_blocks, block_size, kv_heads, head_dim)
+        return PagedKVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                            block_size)
+
+    def _dest_rows(self, layout: PagedLayout, chunk: int) -> jax.Array:
+        """Flat pool-row index per (request, token column); OOB when invalid."""
+        bs = self.block_size
+        pos = layout.token_positions(chunk)                    # (B, C)
+        blk_idx = jnp.clip(pos // bs, 0, layout.block_tables.shape[1] - 1)
+        blk = jnp.take_along_axis(layout.block_tables, blk_idx, axis=1)
+        rows = blk * bs + pos % bs
+        oob = self.num_blocks * bs                             # dropped by .at
+        return jnp.where(layout.token_valid(chunk) & (blk >= 0), rows, oob)
+
+    def write(self, k_new: jax.Array, v_new: jax.Array,
+              layout: PagedLayout) -> "PagedKVCache":
+        """Scatter (B, C, K, D) new tokens into the pool at their logical
+        positions; invalid columns (beyond ``n_valid``) are dropped."""
+        chunk = k_new.shape[1]
+        rows = self._dest_rows(layout, chunk).reshape(-1)
+        tail = self.k_pool.shape[2:]
+        flat_k = self.k_pool.reshape(-1, *tail)
+        flat_v = self.v_pool.reshape(-1, *tail)
+        flat_k = flat_k.at[rows].set(
+            k_new.reshape(-1, *tail).astype(flat_k.dtype), mode="drop")
+        flat_v = flat_v.at[rows].set(
+            v_new.reshape(-1, *tail).astype(flat_v.dtype), mode="drop")
+        return PagedKVCache(flat_k.reshape(self.k_pool.shape),
+                            flat_v.reshape(self.v_pool.shape),
+                            self.block_size)
+
+    def gather(self, block_tables: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Materialize each request's logical (T, K, D) view, T = M * bs.
+
+        Unallocated table slots (-1) read block 0 — callers mask positions
+        ``>= length`` so the garbage never reaches the softmax unmasked.
+        """
+        bs = self.block_size
+        B, M = block_tables.shape
+        rows = (jnp.clip(block_tables, 0)[:, :, None] * bs
+                + jnp.arange(bs, dtype=jnp.int32)[None, None, :])
+        rows = rows.reshape(B, M * bs)
+        tail = self.k_pool.shape[2:]
+        flat_k = self.k_pool.reshape(-1, *tail)
+        flat_v = self.v_pool.reshape(-1, *tail)
+        return flat_k[rows], flat_v[rows]
 
 
 @jax.tree_util.register_dataclass

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import blocks as blocks_mod
 from repro.models.common import ParamBuilder, rms_norm, softcap, stack_axes
+from repro.models.kvcache import PagedLayout
 
 PyTree = Any
 
@@ -157,6 +158,28 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
     return {"length": jnp.zeros((), jnp.int32), "groups": groups}
 
 
+def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
+                     dtype=jnp.bfloat16) -> PyTree:
+    """Paged serving cache: one (num_blocks, block_size, K, D) k/v pool per
+    layer, mirroring the group structure. One *logical* block id indexes the
+    same slot in every layer's pool, so the scheduler tracks a single block
+    table per request. No length scalar: per-request lengths live host-side
+    in the scheduler (``PagedServer``). Raises for non-GQA architectures.
+    """
+    groups = []
+    for pattern, repeats in layer_plan(cfg):
+        pat = []
+        for bt in pattern:
+            one = blocks_mod.init_paged_block_cache(bt, cfg, num_blocks,
+                                                    block_size, dtype)
+            if repeats > 1:
+                one = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x[None], (repeats,) + x.shape), one)
+            pat.append(one)
+        groups.append(pat)
+    return {"groups": groups}
+
+
 # ---------------------------------------------------------------------------
 # forward
 # ---------------------------------------------------------------------------
@@ -173,6 +196,7 @@ def forward(
     moe_transport=None,
     compute_dtype=jnp.bfloat16,
     constrain=None,                          # activation sharding constraint
+    paged: Optional[PagedLayout] = None,     # serving: block-table cache view
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     # ``constrain(x)`` pins (B, S, d) activations to the batch sharding at
     # the embedding, between layer groups, and inside the scanned body —
@@ -196,10 +220,16 @@ def forward(
 
     x = constrain(x)
     B, S = x.shape[0], x.shape[1]
-    length = cache["length"] if cache is not None else None
-    if positions is None:
-        off = length if cache is not None else jnp.int32(0)
-        positions = jnp.arange(S, dtype=jnp.int32)[None, :] + off
+    if paged is not None:
+        # paged cache carries no global length scalar — positions are
+        # per-request (starts) and lengths live in the scheduler
+        length = None
+        positions = paged.token_positions(S)
+    else:
+        length = cache["length"] if cache is not None else None
+        if positions is None:
+            off = length if cache is not None else jnp.int32(0)
+            positions = jnp.arange(S, dtype=jnp.int32)[None, :] + off
 
     plan = layer_plan(cfg)
     new_groups: List[Any] = []
@@ -226,7 +256,7 @@ def forward(
                     bt, lp[p_idx],
                     x_c, cfg, cache=c_in, length=length,
                     positions=positions, mrope_positions=mrope_positions,
-                    moe_transport=moe_transport)
+                    moe_transport=moe_transport, paged=paged)
                 x_c = constrain(x_c)
                 new_lc.append(c_out)
             return (x_c, aux_c + aux), new_lc
@@ -234,8 +264,10 @@ def forward(
         # Decode (S==1) unrolls the layer loop: a scanned cache is xs->ys,
         # which double-buffers the FULL per-layer KV cache every step
         # (~170 GiB temps at 32k x B128). Unrolled, each layer's update is
-        # DUS(DS(stacked)) — in place on the donated cache buffer.
-        unroll = cache is not None and S == 1
+        # DUS(DS(stacked)) — in place on the donated cache buffer. Paged
+        # steps always unroll for the same reason: the pool is the dominant
+        # buffer and must update in place on the donated argument.
+        unroll = cache is not None and (S == 1 or paged is not None)
         if repeats > 1 and unroll:
             new_pat_cache = pat_cache
             for r in range(repeats):
@@ -265,7 +297,10 @@ def forward(
 
     new_cache = None
     if cache is not None:
-        new_cache = {"length": length + S, "groups": new_groups}
+        if paged is not None:
+            new_cache = {"groups": new_groups}
+        else:
+            new_cache = {"length": length + S, "groups": new_groups}
     return logits, new_cache, aux_total
 
 

@@ -90,19 +90,34 @@ def build_dispatch(ids: jax.Array, gates: jax.Array, n_experts: int,
 
 
 def moe_ffn_oracle(params, x: jax.Array, m: MoEConfig, act: str = "silu",
-                   capacity: Optional[int] = None) -> Tuple[jax.Array, jax.Array]:
+                   capacity: Optional[int] = None,
+                   token_mask: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, jax.Array]:
     """Reference MoE: capacity-bucketed single-device execution.
 
     x: (B, S, d). Returns (out, aux_losses_sum). This is the oracle for the
     jam transports; it performs the same capacity/drop math so distributed
     results match it exactly.
+
+    ``token_mask`` (B, S) bool marks real tokens: masked-out tokens (paged
+    serving's padding columns) route to the drop slot with zero gates, so
+    they consume no expert capacity and contribute nothing — without it a
+    padding column can steal a capacity slot from a real token and change
+    its output.
     """
     b, s, d = x.shape
     xf = x.reshape(-1, d)
     n = xf.shape[0]
     r = route_topk(xf, params["router"], m)
+    ids, gates = r.expert_ids, r.gates
+    if token_mask is not None:
+        tm = token_mask.reshape(-1)
+        # out-of-range expert id => all-zero one_hot in build_dispatch =>
+        # rank 0 and slot == the drop slot: no capacity consumed
+        ids = jnp.where(tm[:, None], ids, jnp.int32(m.num_experts))
+        gates = gates * tm[:, None]
     c = capacity or expert_capacity(n, m)
-    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, m.num_experts, c)
+    slot, keep, _ = build_dispatch(ids, gates, m.num_experts, c)
     buf = jnp.zeros((m.num_experts * c + 1, d), x.dtype)
     buf = buf.at[slot.reshape(-1)].set(jnp.repeat(xf, m.top_k, axis=0),
                                        mode="drop")
@@ -112,7 +127,7 @@ def moe_ffn_oracle(params, x: jax.Array, m: MoEConfig, act: str = "silu",
     out_buf = jnp.concatenate([out_buf.reshape(-1, d),
                                jnp.zeros((1, d), x.dtype)], axis=0)
     gathered = out_buf[slot.reshape(-1)].reshape(n, m.top_k, d)
-    w = (r.gates * keep).astype(x.dtype)
+    w = (gates * keep).astype(x.dtype)
     y = jnp.einsum("nkd,nk->nd", gathered, w)
     if m.num_shared > 0:
         g = jnp.einsum("nd,df->nf", xf, params["ws_gate"])
@@ -125,8 +140,20 @@ MoETransport = Callable[..., Tuple[jax.Array, jax.Array]]
 
 
 def moe_ffn(params, x: jax.Array, m: MoEConfig, act: str = "silu",
-            transport: Optional[MoETransport] = None) -> Tuple[jax.Array, jax.Array]:
-    """MoE FFN with pluggable jam transport (None => single-device oracle)."""
+            transport: Optional[MoETransport] = None,
+            token_mask: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """MoE FFN with pluggable jam transport (None => single-device oracle).
+
+    ``token_mask`` is honored by the oracle path only; the jam transports
+    route every token (all tokens are real in training). Combining a mask
+    with a transport is refused — silently dropping the mask would let
+    padding tokens steal expert capacity (docs/serving.md).
+    """
     if transport is None:
-        return moe_ffn_oracle(params, x, m, act)
+        return moe_ffn_oracle(params, x, m, act, token_mask=token_mask)
+    if token_mask is not None:
+        raise NotImplementedError(
+            "jam transports are not token-mask-aware; serve MoE paged on a "
+            "single tensor shard (docs/serving.md)")
     return transport(params, x, m, act)

@@ -173,6 +173,31 @@ def token_batch_specs(rules: Rules, has_features: bool = False,
     return out
 
 
+def paged_cache_spec_tree(cache_shapes: PyTree, rules: Rules,
+                          mesh: Mesh) -> PyTree:
+    """Paged-pool specs: kv-heads over tp when divisible, else replicated.
+
+    Pool leaves are (num_blocks, block_size, K, D), optionally with a
+    leading layer-stack dim — K is always dim -2. There is no batch dim to
+    put on the dp axes (the pool is shared by every request), so head
+    sharding is the only axis: decode attention then stays collective-free
+    per step, exactly like the contiguous cache's kv-head sharding.
+    """
+    sizes = _axis_sizes(mesh)
+    tp = rules.tp_axis
+
+    def one(x) -> P:
+        shape = x.shape
+        if len(shape) < 4:
+            return P(*([None] * len(shape)))
+        entries: list = [None] * len(shape)
+        if tp in sizes and sizes[tp] > 1 and shape[-2] % sizes[tp] == 0:
+            entries[-2] = tp
+        return P(*entries)
+
+    return jax.tree.map(one, cache_shapes)
+
+
 def cache_spec_tree(cache_shapes: PyTree, rules: Rules, mesh: Mesh,
                     *, batch: int, seq_sharded: bool = False) -> PyTree:
     """KV-cache specs: batch over dp, kv-heads over tp, seq as fallback.

@@ -23,6 +23,7 @@ from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeCon
 from repro.core.dispatch import make_jam_transport
 from repro.data.synthetic import batch_shapes
 from repro.models import model as model_lib
+from repro.models.kvcache import PagedLayout
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.grad import clip_by_global_norm
 from repro.optim.schedule import warmup_cosine
@@ -339,6 +340,82 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         abstract_inputs=tuple(abstract),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="decode",
                   cache=cache_shapes, transport_log=transport_log),
+    )
+
+
+# ---------------------------------------------------------------------------
+# paged serve step (serving: block-pool cache, decode + chunked prefill in
+# one compiled shape — no per-bucket prefill jits)
+# ---------------------------------------------------------------------------
+
+def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
+                          slots: int, chunk: int, num_blocks: int,
+                          block_size: int,
+                          max_blocks_per_seq: int) -> StepBundle:
+    """One step through the paged pool for ``slots`` request rows.
+
+    fn(params, cache, tokens (slots, chunk), block_tables
+    (slots, max_blocks_per_seq), starts (slots,), n_valid (slots,)) ->
+    (next_token (slots,), new_cache). ``next_token`` is the greedy argmax at
+    each row's last *valid* column; rows mid-prefill get a token the
+    scheduler ignores. The same compiled fn serves decode rows (n_valid=1),
+    chunked-prefill rows (n_valid up to chunk), and idle rows (n_valid=0).
+    """
+    assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+    transport_log: list = []
+    # weight_reuse stays 1 for the same reason as make_serve_step: the step
+    # is compiled once and every executed tick re-runs the traced gather
+    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
+    if transport is not None:
+        # the jam transports route every token — padding columns would
+        # silently steal expert capacity from real tokens, breaking the
+        # scheduler's output-identity guarantee. Refuse rather than serve
+        # wrong answers; threading the token mask through core.dispatch is
+        # the ROADMAP follow-up (docs/serving.md).
+        raise NotImplementedError(
+            "paged MoE serving on a multi-shard tensor axis needs "
+            "token-mask-aware jam transports; use the contiguous Server "
+            "or a tp=1 mesh (docs/serving.md)")
+    constrain = act_constrain(
+        rules, mesh, slots % mesh_util.dp_extent(rules, mesh) == 0)
+
+    def paged_step(params, cache, tokens, block_tables, starts, n_valid):
+        layout = PagedLayout(block_tables, starts, n_valid, block_size)
+        logits, new_cache, _ = model_lib.forward(
+            cfg, params, tokens, cache=cache, paged=layout,
+            moe_transport=transport, constrain=constrain)
+        last = jnp.maximum(n_valid - 1, 0)
+        last_logits = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1)[:, 0]        # (slots, V)
+        next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_paged_cache(cfg, num_blocks, block_size))
+    cache_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        mesh_util.paged_cache_spec_tree(cache_shapes, rules, mesh),
+        is_leaf=lambda x: isinstance(x, P))
+    rep = NamedSharding(mesh, P())
+    # scheduler-side arrays stay replicated: slots is small and often not
+    # divisible by the dp extent; the pool itself carries the memory
+    abstract = (params_shapes, cache_shapes,
+                jax.ShapeDtypeStruct((slots, chunk), jnp.int32),
+                jax.ShapeDtypeStruct((slots, max_blocks_per_seq), jnp.int32),
+                jax.ShapeDtypeStruct((slots,), jnp.int32),
+                jax.ShapeDtypeStruct((slots,), jnp.int32))
+    in_sh = (pshard, cache_shard, rep, rep, rep, rep)
+
+    return StepBundle(
+        fn=paged_step,
+        in_shardings=in_sh,
+        out_shardings=(rep, cache_shard),
+        abstract_inputs=abstract,
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="paged_decode",
+                  cache=cache_shapes, transport_log=transport_log,
+                  block_size=block_size, num_blocks=num_blocks,
+                  chunk=chunk, slots=slots),
     )
 
 

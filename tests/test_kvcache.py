@@ -1,0 +1,122 @@
+"""KV-cache unit tests: ring-wrap regression + paged pool primitives."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.kvcache import KVCache, PagedKVCache, PagedLayout
+
+
+# ---------------------------------------------------------------------------
+# ring-wrap regression (ISSUE 2 satellite): a multi-token append crossing the
+# wrap boundary must wrap, not clamp — dynamic_update_slice clamps the start
+# index, silently shifting every wrapped token
+# ---------------------------------------------------------------------------
+
+def _tok(vals):
+    a = jnp.asarray(vals, jnp.float32)
+    return a.reshape(1, -1, 1, 1)
+
+
+def test_ring_append_crosses_wrap_boundary():
+    c = KVCache.init(1, 8, 1, 1, dtype=jnp.float32, ring=True)
+    c = c.append(_tok(range(10, 16)), _tok(range(10, 16)))     # rows 0..5
+    c = c.append(_tok([100, 101, 102]), _tok([100, 101, 102])) # rows 6,7,0
+    k = np.asarray(c.k)[0, :, 0, 0]
+    assert k[6] == 100 and k[7] == 101
+    assert k[0] == 102, f"wrapped token clamped instead of wrapping: {k}"
+    assert k[1] == 11, "untouched row corrupted"
+    assert int(c.length) == 9
+
+
+def test_ring_append_under_jit_matches_eager():
+    def run(c, new):
+        return c.append(new, new)
+
+    c0 = KVCache.init(1, 4, 1, 1, dtype=jnp.float32, ring=True)
+    c0 = c0.append(_tok([1, 2, 3]), _tok([1, 2, 3]))
+    new = _tok([7, 8])                                          # rows 3, 0
+    eager = run(c0, new)
+    jitted = jax.jit(run)(c0, new)
+    np.testing.assert_array_equal(np.asarray(eager.k), np.asarray(jitted.k))
+    assert np.asarray(eager.k)[0, :, 0, 0].tolist() == [8, 2, 3, 7]
+
+
+def test_ring_append_longer_than_window_keeps_tail():
+    c = KVCache.init(1, 4, 1, 1, dtype=jnp.float32, ring=True)
+    c = c.append(_tok(range(10)), _tok(range(10)))
+    k = np.asarray(c.k)[0, :, 0, 0]
+    # positions 6..9 land on rows 2,3,0,1
+    assert k.tolist() == [8, 9, 6, 7]
+    assert int(c.length) == 10
+
+
+def test_single_token_ring_append_never_crosses():
+    c = KVCache.init(1, 4, 1, 1, dtype=jnp.float32, ring=True)
+    for i in range(7):
+        c = c.append(_tok([i]), _tok([i]))
+    k = np.asarray(c.k)[0, :, 0, 0]
+    assert k.tolist() == [4, 5, 6, 3]
+
+
+def test_non_ring_append_unchanged():
+    c = KVCache.init(2, 8, 2, 4, dtype=jnp.float32)
+    k_new = jnp.ones((2, 3, 2, 4), jnp.float32)
+    c = c.append(k_new, k_new)
+    assert int(c.length) == 3
+    assert np.asarray(c.k)[:, :3].sum() == 2 * 3 * 2 * 4
+
+
+# ---------------------------------------------------------------------------
+# paged pool primitives
+# ---------------------------------------------------------------------------
+
+def _layout(tables, starts, nv, bs):
+    return PagedLayout(jnp.asarray(tables, jnp.int32),
+                       jnp.asarray(starts, jnp.int32),
+                       jnp.asarray(nv, jnp.int32), bs)
+
+
+def test_paged_write_gather_roundtrip():
+    bs = 4
+    pool = PagedKVCache.init(6, bs, 1, 2, dtype=jnp.float32)
+    # request 0 owns blocks [5, 1], request 1 owns [0]
+    tables = np.asarray([[5, 1, -1], [0, -1, -1]], np.int32)
+    k_new = jnp.arange(2 * 3 * 1 * 2, dtype=jnp.float32).reshape(2, 3, 1, 2)
+    # req 0 writes 3 tokens at positions 2,3,4 (crosses its block boundary);
+    # req 1 writes 2 valid tokens at 0,1 (third column invalid)
+    layout = _layout(tables, [2, 0], [3, 2], bs)
+    pool = pool.write(k_new, k_new, layout)
+
+    k_all, v_all = pool.gather(jnp.asarray(tables))
+    k0 = np.asarray(k_all)[0]                     # logical view of req 0
+    np.testing.assert_array_equal(k0[2], np.asarray(k_new)[0, 0])
+    np.testing.assert_array_equal(k0[3], np.asarray(k_new)[0, 1])
+    np.testing.assert_array_equal(k0[4], np.asarray(k_new)[0, 2])
+    k1 = np.asarray(k_all)[1]
+    np.testing.assert_array_equal(k1[0], np.asarray(k_new)[1, 0])
+    np.testing.assert_array_equal(k1[1], np.asarray(k_new)[1, 1])
+    # invalid third token must have been dropped
+    assert np.asarray(pool.k_pool)[0, 2].sum() == 0
+
+
+def test_paged_write_isolation_between_requests():
+    """Writes through one request's table never touch another's blocks."""
+    bs = 2
+    pool = PagedKVCache.init(4, bs, 1, 1, dtype=jnp.float32)
+    tables = np.asarray([[0, 1], [2, 3]], np.int32)
+    k_new = jnp.ones((2, 2, 1, 1), jnp.float32)
+    layout = _layout(tables, [0, 0], [2, 0], bs)   # only req 0 writes
+    pool = pool.write(k_new, k_new, layout)
+    p = np.asarray(pool.k_pool)
+    assert p[0].sum() == 2 and p[2].sum() == 0 and p[3].sum() == 0
+
+
+def test_paged_idle_row_writes_nothing():
+    bs = 2
+    pool = PagedKVCache.init(2, bs, 1, 1, dtype=jnp.float32)
+    tables = np.asarray([[-1, -1]], np.int32)      # no blocks allocated
+    k_new = jnp.ones((1, 2, 1, 1), jnp.float32)
+    layout = _layout(tables, [0], [0], bs)         # n_valid = 0
+    pool = pool.write(k_new, k_new, layout)
+    assert np.asarray(pool.k_pool).sum() == 0

@@ -1,0 +1,135 @@
+"""Property tests (ISSUE 2 satellite): message/injection round-trips over
+odd sizes, and GotTable layout-hash agreement/mismatch detection."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.got import GotTable
+from repro.core.injection import (expert_state_size_words, expert_state_words,
+                                  unpack_expert_state)
+from repro.core.message import bf16_to_words, words_to_bf16
+
+
+def _rand_bf16(rng: np.random.Generator, shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.bfloat16)
+
+
+# ---------------------------------------------------------------------------
+# bf16 <-> int32 word packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 33), st.integers(0, 2**32 - 1))
+def test_bf16_words_roundtrip_any_size(size, seed):
+    """Round trip for every size, odd sizes included (the pad word must
+    never leak back)."""
+    rng = np.random.default_rng(seed)
+    x = _rand_bf16(rng, (size,))
+    w = bf16_to_words(x)
+    assert w.shape == ((size + 1) // 2,)
+    back = words_to_bf16(w, size, (size,))
+    np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                  np.asarray(x, np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 7), st.integers(0, 2**32 - 1))
+def test_bf16_words_roundtrip_2d(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand_bf16(rng, (rows, cols))
+    back = words_to_bf16(bf16_to_words(x), rows * cols, (rows, cols))
+    np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                  np.asarray(x, np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 9), st.integers(1, 9), st.integers(0, 2**32 - 1))
+def test_expert_state_roundtrip_odd_sizes(d_model, d_ff, seed):
+    """expert_state_words / unpack_expert_state over arbitrary (odd) dims:
+    each of the three sections pads independently, so boundaries must not
+    shift even when d_model * d_ff is odd."""
+    rng = np.random.default_rng(seed)
+    wg = _rand_bf16(rng, (d_model, d_ff))
+    wu = _rand_bf16(rng, (d_model, d_ff))
+    wd = _rand_bf16(rng, (d_ff, d_model))
+    words = expert_state_words(wg, wu, wd)
+    assert words.shape == (expert_state_size_words(d_model, d_ff),)
+    bg, bu, bd = unpack_expert_state(words, d_model, d_ff)
+    for orig, back in ((wg, bg), (wu, bu), (wd, bd)):
+        np.testing.assert_array_equal(np.asarray(back, np.float32),
+                                      np.asarray(orig, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# GotTable layout hash (the out-of-band sender/receiver exchange of §V)
+# ---------------------------------------------------------------------------
+
+NAMES = st.lists(st.text(st.characters(min_codepoint=97, max_codepoint=122),
+                         min_size=1, max_size=8),
+                 min_size=1, max_size=6, unique=True)
+
+
+@settings(max_examples=40, deadline=None)
+@given(NAMES)
+def test_layout_hash_sender_receiver_agree(names):
+    """Same bind order (with different resident values!) => same layout:
+    the hash covers the namespace, not the per-process values."""
+    sender, receiver = GotTable(), GotTable()
+    for i, n in enumerate(names):
+        sender.bind(n, i)
+        receiver.bind(n, i * 1000)          # per-process overloading
+    assert sender.layout_hash() == receiver.layout_hash()
+    receiver.check_layout(sender.layout_hash())   # must not raise
+
+
+@settings(max_examples=40, deadline=None)
+@given(NAMES, st.data())
+def test_layout_hash_detects_mismatch(names, data):
+    """Any divergence in the name->index map must change the hash: an extra
+    symbol, a dropped symbol, or a permuted bind order (>=2 names)."""
+    sender = GotTable()
+    for i, n in enumerate(names):
+        sender.bind(n, i)
+
+    kind = data.draw(st.sampled_from(
+        ["extra", "dropped", "permuted"] if len(names) > 1
+        else ["extra", "dropped"]))
+    receiver = GotTable()
+    if kind == "extra":
+        for n in names:
+            receiver.bind(n, 0)
+        receiver.bind("zzextra", 0)
+    elif kind == "dropped":
+        for n in names[:-1]:
+            receiver.bind(n, 0)
+    else:
+        perm = data.draw(st.permutations(names).filter(
+            lambda p: list(p) != list(names)))
+        for n in perm:
+            receiver.bind(n, 0)
+
+    assert sender.layout_hash() != receiver.layout_hash()
+    with pytest.raises(RuntimeError, match="GOT layout mismatch"):
+        receiver.check_layout(sender.layout_hash())
+
+
+@settings(max_examples=30, deadline=None)
+@given(NAMES)
+def test_rebind_preserves_layout(names):
+    """Re-binding a value to an existing symbol must not move its index
+    (GOT slots are stable across hot-swaps)."""
+    t = GotTable()
+    for i, n in enumerate(names):
+        t.bind(n, i)
+    h0 = t.layout_hash()
+    idx_before = [t.index_of(n) for n in names]
+    for n in names:
+        t.bind(n, object())
+    assert t.layout_hash() == h0
+    assert [t.index_of(n) for n in names] == idx_before

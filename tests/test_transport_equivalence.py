@@ -1,0 +1,134 @@
+"""Differential transport-equivalence suite (ISSUE 2 satellite).
+
+For each MoE smoke config, the injected / local / auto jam transports must
+produce numerically matching MoE layer outputs AND matching losses after 2
+train steps on the conftest 4-device mesh, parameterized over dp/ep mesh
+layouts. This is the paper's core interchangeability claim (an Injected
+Function and a Local Function compute the same thing; only the bytes moved
+differ) enforced end-to-end through the training stack.
+
+Capacity factor is pinned at 2.0 for the tiny shapes here so per-rank vs
+global capacity boundaries cannot make drops diverge between transports
+(the same convention as tests/test_moe_transports.py).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import compat
+from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
+                                ShardingConfig)
+from repro.configs.registry import get_smoke
+from repro.core.dispatch import make_jam_transport
+from repro.data.synthetic import synthetic_batch
+from repro.models import model as model_lib
+from repro.models import moe as moe_lib
+from repro.optim.adamw import adamw_init
+from repro.runtime.steps import make_train_step
+
+needs4 = pytest.mark.skipif(len(jax.devices()) < 4,
+                            reason="needs 4 simulated devices (conftest)")
+
+MOE_SMOKES = ("olmoe-1b-7b", "deepseek-v2-lite-16b")
+# (dp, ep/tp) layouts over the 4 conftest devices; tp must be > 1 for the
+# jam transports to engage (tp=1 degrades to the oracle the transports are
+# compared against, so it would assert nothing)
+LAYOUTS = ((2, 2), (1, 4))
+MODES = ("local", "injected", "auto")
+
+
+def _moe_smoke(arch: str):
+    cfg = get_smoke(arch)
+    # capacity_factor 2.0: dropless at these shapes (see module docstring)
+    return dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=2.0))
+
+
+def _mesh(dp: int, tp: int) -> Mesh:
+    return Mesh(np.array(jax.devices()[:dp * tp]).reshape(dp, tp),
+                ("data", "model"))
+
+
+def _layer_params(cfg, key):
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    params = {
+        "router": jax.random.normal(ks[0], (d, m.num_experts)) * 0.5,
+        "w_gate": jax.random.normal(ks[1], (m.num_experts, d, m.expert_ff)) * 0.1,
+        "w_up":   jax.random.normal(ks[2], (m.num_experts, d, m.expert_ff)) * 0.1,
+        "w_down": jax.random.normal(ks[3], (m.num_experts, m.expert_ff, d)) * 0.1,
+    }
+    if m.num_shared:
+        ff = m.shared_ff or m.expert_ff
+        params.update(
+            ws_gate=jax.random.normal(ks[4], (d, ff)) * 0.1,
+            ws_up=jax.random.normal(ks[5], (d, ff)) * 0.1,
+            ws_down=jax.random.normal(ks[6], (ff, d)) * 0.1)
+    x = jax.random.normal(ks[7], (2, 16, d))
+    return params, x
+
+
+@needs4
+@pytest.mark.parametrize("arch", MOE_SMOKES)
+@pytest.mark.parametrize("dp,tp", LAYOUTS)
+def test_moe_layer_outputs_match_across_transports(arch, dp, tp):
+    """Every transport's MoE layer output must match the single-device
+    oracle on the same inputs, for every dp/ep layout."""
+    cfg = _moe_smoke(arch)
+    m = cfg.moe
+    if m.num_experts % tp:
+        pytest.skip(f"{m.num_experts} experts not divisible by ep={tp}")
+    params, x = _layer_params(cfg, jax.random.PRNGKey(0))
+    y_ref, _ = moe_lib.moe_ffn_oracle(params, x, m, cfg.act, capacity=None)
+    mesh = _mesh(dp, tp)
+    with mesh:
+        for mode in MODES:
+            tr = make_jam_transport(mesh, dp_axes=("data",), tp_axis="model",
+                                    mode=mode)
+            y, _ = tr(params, x, m, cfg.act)
+            err = float(jnp.abs(y - y_ref).max())
+            assert err < 5e-4, (arch, mode, dp, tp, err)
+
+
+def _two_step_loss(cfg, mesh, mode: str, seq: int, batch: int) -> float:
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, transport=mode))
+    run = RunConfig(model=cfg, shape=ShapeConfig("t", seq, batch, "train"),
+                    sharding=ShardingConfig(fsdp_params=False),
+                    optimizer=OptimizerConfig(total_steps=4, warmup_steps=1))
+    bundle = make_train_step(cfg, run, mesh)
+    with mesh:
+        params = jax.jit(
+            lambda k: model_lib.init_params(cfg, k)[0])(jax.random.PRNGKey(0))
+        opt = adamw_init(params)
+        step = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                       out_shardings=bundle.out_shardings)
+        loss = None
+        for i in range(2):
+            batch_np = synthetic_batch(cfg, run.shape, i)
+            b = {k: jnp.asarray(v) for k, v in batch_np.items()}
+            params, opt, metrics = step(params, opt, b)
+            loss = float(metrics["loss"])
+    return loss
+
+
+@needs4
+@pytest.mark.parametrize("arch", MOE_SMOKES)
+@pytest.mark.parametrize("dp,tp", ((2, 2), (1, 4)))
+def test_train_loss_matches_across_transports(arch, dp, tp):
+    """Two full train steps: every transport must land on the same loss
+    (same routing, same drops, same update) on every dp/ep layout."""
+    cfg = _moe_smoke(arch)
+    if cfg.moe.num_experts % tp:
+        pytest.skip(f"{cfg.moe.num_experts} experts not divisible by ep={tp}")
+    mesh = _mesh(dp, tp)
+    losses = {mode: _two_step_loss(cfg, mesh, mode, seq=16, batch=4)
+              for mode in MODES}
+    base = losses["local"]
+    for mode, loss in losses.items():
+        assert loss == pytest.approx(base, rel=2e-3), losses

@@ -6,13 +6,18 @@ Injected: frame additionally carries the expert weights in STATE (the
           paper's 1408-byte code section, here d*f bf16 state bytes);
           the receiver unpacks and runs them.
 
-Byte-faithful: both paths move real packed int32 frames through
-core.message / core.injection and execute the jam on the "receiver".
+Both paths invoke through one ``repro.fabric.Fabric``: ``fabric.call`` on
+the Local flavour resolves the weights from the fabric's GOT table, and on
+the Injected flavour ships the serialized STATE words — which are held in
+a fabric **lease** (the rFaaS warm-state analogue), so repeated timed
+invocations amortize the serialization and the per-lease hit counters land
+in ``fabric.metrics()``. Frames stay byte-faithful through core.message.
 
-derived: message bytes both modes + latency loss % of Injected vs Local.
-The paper's observation to reproduce: ~40% loss at small payloads,
-converging toward 0% once payload >> state (Fig. 7: Indirect Put converges
-at ~1024 ints; Server-Side Sum, smaller code, converges at ~64).
+derived: message bytes both modes + latency loss % of Injected vs Local,
+plus lease hit/miss counts for the injected path. The paper's observation
+to reproduce: ~40% loss at small payloads, converging toward 0% once
+payload >> state (Fig. 7: Indirect Put converges at ~1024 ints;
+Server-Side Sum, smaller code, converges at ~64).
 """
 from __future__ import annotations
 
@@ -22,7 +27,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import injection
-from repro.core.message import FrameSpec, pack_frame, unpack_frame
+from repro.core.message import FrameSpec
+from repro.fabric import Fabric
 from benchmarks.common import Row, time_fn
 
 D_MODEL, D_FF = 32, 64                     # jam-sized expert (4 KiB state)
@@ -35,11 +41,13 @@ def main() -> List[Row]:
     wg = jax.random.normal(ks[0], (D_MODEL, D_FF), jnp.bfloat16) * 0.1
     wu = jax.random.normal(ks[1], (D_MODEL, D_FF), jnp.bfloat16) * 0.1
     wd = jax.random.normal(ks[2], (D_FF, D_MODEL), jnp.bfloat16) * 0.1
-    state = injection.expert_state_words(wg, wu, wd)
 
     def expert(wg_, wu_, wd_, x):
         h = jax.nn.silu(x @ wg_) * (x @ wu_)
         return h @ wd_
+
+    fabric = Fabric(name="bench.injected_vs_local")
+    fabric.bind("expert_weights", (wg, wu, wd))    # the Local residency
 
     rows: List[Row] = []
     for n_tok in PAYLOAD_TOKENS:
@@ -50,35 +58,53 @@ def main() -> List[Row]:
         spec_local = FrameSpec(got_slots=4, state_words=0, payload_words=pw)
         spec_inj = injection.injected_frame_spec(D_MODEL, D_FF, n_tok)
 
-        @jax.jit
-        def local_roundtrip(payload):
+        @fabric.function(f"expert_local/{n_tok}",
+                         got_symbols=("expert_weights",),
+                         spec=spec_local, result_words=pw)
+        def jam_local(got, state, usr, n_tok=n_tok):
             # pack -> deliver -> execute with RECEIVER-resident weights
-            frame = pack_frame(spec_local, func_id=1, payload_words=payload)
-            f = unpack_frame(spec_local, frame)
-            xs = injection.words_to_tokens(f["usr"], n_tok, D_MODEL)
-            return expert(wg, wu, wd, xs)       # closure = GOT residency
+            (w,) = got
+            xs = injection.words_to_tokens(usr, n_tok, D_MODEL)
+            return injection.tokens_to_words(expert(*w, xs))
 
-        @jax.jit
-        def injected_roundtrip(payload, state):
+        @fabric.function(f"expert_injected/{n_tok}",
+                         spec=spec_inj, result_words=pw)
+        def jam_injected(got, state, usr, n_tok=n_tok):
             # pack (weights in STATE) -> deliver -> unpack weights -> execute
-            frame = pack_frame(spec_inj, func_id=1, flags=1,
-                               state_words=state, payload_words=payload)
-            f = unpack_frame(spec_inj, frame)
             wg_, wu_, wd_ = injection.unpack_expert_state(
-                f["state"], D_MODEL, D_FF)
-            xs = injection.words_to_tokens(f["usr"], n_tok, D_MODEL)
-            return expert(wg_, wu_, wd_, xs)
+                state, D_MODEL, D_FF)
+            xs = injection.words_to_tokens(usr, n_tok, D_MODEL)
+            return injection.tokens_to_words(expert(wg_, wu_, wd_, xs))
 
-        t_local = time_fn(lambda: local_roundtrip(payload))
-        t_inj = time_fn(lambda: injected_roundtrip(payload, state))
+        def injected_call():
+            state = fabric.lease(
+                "expert.state", (wg, wu, wd),
+                materialize=lambda: injection.expert_state_words(wg, wu, wd))
+            return fabric.call(f"expert_injected/{n_tok}", payload,
+                               state=state, placement="injected")
+
+        t_local = time_fn(
+            lambda: fabric.call(f"expert_local/{n_tok}", payload,
+                                placement="local"))
+        t_inj = time_fn(injected_call)
         loss_pct = 100.0 * (t_inj - t_local) / max(t_local, 1e-9)
+        lease = fabric.leases.get("expert.state")
         rows.append(Row(
             f"injected_vs_local/local/{n_tok}tok", t_local,
             f"msg={spec_local.total_bytes}B"))
         rows.append(Row(
             f"injected_vs_local/injected/{n_tok}tok", t_inj,
             f"msg={spec_inj.total_bytes}B state={4*spec_inj.state_words}B "
-            f"loss={loss_pct:+.1f}%"))
+            f"loss={loss_pct:+.1f}% "
+            f"lease_hits={lease.hits} lease_misses={lease.misses}"))
+
+    lease = fabric.leases.get("expert.state")
+    assert lease.hits >= 1, "warm-state lease never hit — amortization broken"
+    calls = fabric.metrics()["calls"]
+    rows.append(Row(
+        "injected_vs_local/fabric_telemetry", 0.0,
+        f"calls={sum(calls.values())} lease_hits={lease.hits} "
+        f"lease_misses={lease.misses}"))
     return rows
 
 

@@ -16,7 +16,8 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core.message import FrameSpec, frame_valid, pack_frame
+from repro.core.message import FrameSpec, frame_valid
+from repro.fabric import Fabric
 from benchmarks.common import Row, time_fn
 
 PAYLOAD_WORDS = (16, 64, 256, 1024, 4096, 16384)
@@ -24,9 +25,16 @@ PAYLOAD_WORDS = (16, 64, 256, 1024, 4096, 16384)
 
 def main() -> List[Row]:
     rows: List[Row] = []
+    fabric = Fabric(name="bench.mailbox_overhead")
     for pw in PAYLOAD_WORDS:
         spec = FrameSpec(got_slots=4, state_words=0, payload_words=pw)
         payload = jnp.arange(pw, dtype=jnp.int32)
+
+        # sender-side surface only: the AM frame fabric.call would send
+        # (execution skipped — the paper's without-execution configuration)
+        @fabric.function(f"noop/{pw}", spec=spec, result_words=1)
+        def jam_noop(g, s, usr):
+            return jnp.zeros((1,), jnp.int32)
 
         @jax.jit
         def raw_put(x):
@@ -34,7 +42,7 @@ def main() -> List[Row]:
 
         @jax.jit
         def am_put(x):
-            frame = pack_frame(spec, func_id=0, payload_words=x)
+            frame = fabric.pack(f"noop/{pw}", x)
             delivered = jnp.roll(frame[None], 1, 0)[0]
             return delivered, frame_valid(spec, delivered)
 

@@ -14,10 +14,9 @@ from typing import List
 import jax
 import jax.numpy as jnp
 
-from repro.core.got import GotTable
 from repro.core.mailbox import spin_wait_poll, wfe_wait
-from repro.core.message import FrameSpec, pack_frame
-from repro.core.registry import JamPackage
+from repro.core.message import FrameSpec
+from repro.fabric import Fabric
 from benchmarks.common import Row, time_fn
 
 PAYLOADS = (64, 1024, 8192)            # words: 256B, 4KB, 32KB frames
@@ -35,18 +34,17 @@ def _ops_per_spin(spec: FrameSpec) -> int:
 
 def main() -> List[Row]:
     rows: List[Row] = []
-    got = GotTable()
+    fabric = Fabric(name="bench.wfe")
     for pw in PAYLOADS:
         spec = FrameSpec(got_slots=4, state_words=0, payload_words=pw)
-        pkg = JamPackage("bench", spec, result_words=16)
 
-        @pkg.register("sum")
+        @fabric.function(f"sum/{pw}", spec=spec, result_words=16)
         def jam_sum(g, s, usr):
             return jnp.broadcast_to(jnp.sum(usr)[None], (16,)).astype(jnp.int32)
 
-        dispatch = pkg.build_dispatcher(got)
-        frame = pkg.pack("sum", got,
-                         payload_words=jnp.arange(pw, dtype=jnp.int32))
+        dispatch = fabric.dispatcher(spec, 16, jit=False)
+        frame = fabric.pack(f"sum/{pw}",
+                            jnp.arange(pw, dtype=jnp.int32))
         frames = frame[None]
 
         @jax.jit

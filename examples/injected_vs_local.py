@@ -6,6 +6,11 @@ Injected = ship expert weights to the tokens (paper's Injected Function)
 Auto     = the byte-crossover cost model picks per shape (paper §VIII
            future work: "detect reoccurring functions and auto-switch")
 
+All three placements invoke through one mesh-bound ``Fabric``
+(``fabric.call("moe.ffn", x, state=params, placement=...)``); the injected
+weight all-gather is held in the fabric's lease pool and the routing
+decisions land in ``fabric.metrics()``.
+
 Run:  PYTHONPATH=src python examples/injected_vs_local.py
 (Must start fresh — this script forces 4 host devices before jax init.)
 """
@@ -21,7 +26,7 @@ from jax.sharding import Mesh  # noqa: E402
 
 from repro.configs.base import MoEConfig  # noqa: E402
 from repro.core import costmodel  # noqa: E402
-from repro.core.dispatch import make_jam_transport  # noqa: E402
+from repro.fabric import Fabric  # noqa: E402
 from repro.models import moe as moe_lib  # noqa: E402
 
 
@@ -39,6 +44,10 @@ def main() -> None:
         "w_down": jax.random.normal(ks[3], (m.num_experts, m.expert_ff, d)) * 0.05,
     }
 
+    fabric = Fabric(mesh, dp_axes=("data",), tp_axis="model",
+                    name="example.injected_vs_local")
+    fabric.moe_transport(mode="auto")        # registers the collective once
+
     print(f"{'tokens':>8} {'local MiB':>10} {'inject MiB':>11} {'auto picks':>10}"
           f"  max|Δ| vs oracle")
     with mesh:
@@ -50,25 +59,23 @@ def main() -> None:
             y_ref, _ = moe_lib.moe_ffn_oracle(params, x, m)
 
             errs = {}
-            for mode in ("local", "injected"):
-                tr = make_jam_transport(mesh, dp_axes=("data",),
-                                        tp_axis="model", mode=mode)
-                y, _ = tr(params, x, m, "silu")
+            for mode in ("local", "injected", "auto"):
+                y, _ = fabric.call("moe.ffn", x, state=params,
+                                   placement=mode, moe=m, act="silu")
                 errs[mode] = float(jnp.abs(y - y_ref).max())
-
-            choices = []
-            tr_auto = make_jam_transport(mesh, dp_axes=("data",),
-                                         tp_axis="model", mode="auto",
-                                         log_choice=choices)
-            y_auto, _ = tr_auto(params, x, m, "silu")
-            errs["auto"] = float(jnp.abs(y_auto - y_ref).max())
+            chosen = (fabric.decisions[-1][1].chosen if fabric.decisions
+                      else est.chosen)
 
             print(f"{n_tokens:>8} {est.local_bytes/2**20:>10.2f} "
                   f"{est.injected_bytes/2**20:>11.2f} "
-                  f"{choices[0].chosen if choices else est.chosen:>10}  "
+                  f"{chosen:>10}  "
                   f"local={errs['local']:.1e} inj={errs['injected']:.1e} "
                   f"auto={errs['auto']:.1e}")
             assert max(errs.values()) < 5e-4
+
+    met = fabric.metrics()
+    print(f"\nfabric telemetry: calls={met['calls']} "
+          f"leases={met['leases']}")
 
     xo = costmodel.crossover_tokens(m, d, tp=4, dtype_bytes=4)
     print(f"\ncrossover (Fig. 7/8): injected beats local from "

@@ -1,20 +1,22 @@
 """Quickstart: the Two-Chains programming model in 60 lines of use.
 
-Demonstrates the paper's §IV workflow end to end on one device:
+Demonstrates the paper's §IV workflow end to end on one device, through the
+single invocation surface (``repro.fabric.Fabric`` — see docs/fabric.md):
   1. a *ried* installs resident symbols (the receiver's interface library),
-  2. a *jam package* registers named active-message functions,
-  3. the sender packs frames (Local and Injected flavours),
-  4. the reactive mailbox delivers and executes them on arrival.
+  2. ``@fabric.function`` registers named active-message functions,
+  3. ``fabric.call`` packs, delivers, and executes in one line,
+  4. the same frames also flow byte-faithfully through the reactive
+     mailbox (``fabric.pack`` + ``fabric.dispatcher``), proving the
+     one-liner and the wire path are the same bytes.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import jax
 import jax.numpy as jnp
 
-from repro.core.got import GotTable
 from repro.core.mailbox import MailboxConfig, drain_mailbox, init_mailbox, post_local
 from repro.core.message import FrameSpec
-from repro.core.registry import JamPackage, RiedPackage
+from repro.core.registry import RiedPackage
+from repro.fabric import Fabric
 
 # --- 1. the receiver's interface library (ried) ------------------------------
 ried = RiedPackage("demo_interface")
@@ -30,49 +32,53 @@ def init_scale():
     return jnp.int32(3)
 
 
-# --- 2. the jam package (active-message functions) ---------------------------
+# --- 2. one fabric: resident state + active-message functions ----------------
 SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=8)
-pkg = JamPackage("demo_jams", SPEC, result_words=8)
+fabric = Fabric(name="quickstart")
+fabric.install(ried)
 
 
-@pkg.register("server_side_sum", got_symbols=("scale",))
+@fabric.function("server_side_sum", got_symbols=("scale",),
+                 spec=SPEC, result_words=8)
 def jam_sum(got, state, usr):
     """The paper's Server-Side Sum: accumulate the payload on the server."""
     (scale,) = got
     return jnp.broadcast_to(jnp.sum(usr) * scale, (8,)).astype(jnp.int32)
 
 
-@pkg.register("reverse")
+@fabric.function("reverse", spec=SPEC, result_words=8)
 def jam_reverse(got, state, usr):
     return usr[::-1]
 
 
 def main() -> None:
-    # --- receiver process: install the ried, build the dispatcher -----------
-    got = GotTable()
-    ried.install(got)
-    dispatch = jax.jit(pkg.build_dispatcher(got))
-    print(f"[receiver] ried '{ried.name}' installed: {got.symbols}")
-    print(f"[receiver] jam package '{pkg.name}': {len(pkg)} functions, "
-          f"layout hash {got.layout_hash():#x}")
+    print(f"[fabric] ried '{ried.name}' installed: {fabric.got.symbols}")
+    print(f"[fabric] functions {fabric.functions}, "
+          f"layout hash {fabric.got.layout_hash():#x}")
 
-    # --- sender process: pack active messages -------------------------------
+    # --- invoke: pack -> deliver -> execute, one line each ------------------
     payload = jnp.arange(8, dtype=jnp.int32)
-    frame_sum = pkg.pack("server_side_sum", got, payload_words=payload)
-    frame_rev = pkg.pack("reverse", got, payload_words=payload)
-    print(f"[sender] packed 2 frames of {SPEC.total_bytes} B each")
+    r_sum = fabric.call("server_side_sum", payload)
+    r_rev = fabric.call("reverse", payload)
+    print(f"[call] server_side_sum(0..7) * scale=3 -> {r_sum[0]}")
+    print(f"[call] reverse(0..7)                  -> {r_rev}")
+    assert int(r_sum[0]) == 28 * 3
+    assert list(r_rev) == list(range(7, -1, -1))
 
-    # --- one-sided put into the reactive mailbox + drain-on-arrival ---------
+    # --- the same frames through the reactive mailbox (the wire path) -------
+    frame_sum = fabric.pack("server_side_sum", payload)
+    frame_rev = fabric.pack("reverse", payload)
+    print(f"[wire] packed 2 frames of {SPEC.total_bytes} B each")
     mcfg = MailboxConfig(banks=1, frames_per_bank=2, spec=SPEC)
     mb = init_mailbox(mcfg)
     mb = post_local(mb, jnp.int32(0), frame_sum)
     mb = post_local(mb, jnp.int32(0), frame_rev)
-    results, mb = drain_mailbox(mb, dispatch, mcfg)
+    results, mb = drain_mailbox(mb, fabric.dispatcher(SPEC, 8), mcfg)
+    assert list(results[0, 0]) == list(r_sum), "wire path diverged from call"
+    assert list(results[0, 1]) == list(r_rev)
+    print(f"[wire] mailbox drain matches fabric.call bit-for-bit")
 
-    print(f"[receiver] server_side_sum(0..7) * scale=3 -> {results[0, 0]}")
-    print(f"[receiver] reverse(0..7)                  -> {results[0, 1]}")
-    assert int(results[0, 0, 0]) == 28 * 3
-    assert list(results[0, 1]) == list(range(7, -1, -1))
+    print(f"[fabric] metrics: {fabric.metrics()['calls']}")
     print("quickstart OK")
 
 

@@ -17,21 +17,24 @@ function invocation, mapped onto expert parallelism (DESIGN.md §3).
 All transports produce results numerically identical to
 ``models.moe.moe_ffn_oracle`` modulo capacity-drop boundaries (validated in
 tests on a multi-device subprocess).
+
+This module now holds the **per-shard bodies** only; the transport factory
+lives in ``repro.fabric.moe`` (reached via ``Fabric.moe_transport`` /
+``fabric.call("moe.ffn", ...)``). ``make_jam_transport`` below is a
+deprecated shim kept for pre-Fabric callers.
 """
 from __future__ import annotations
 
-from functools import partial
+import warnings
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro import compat
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import MoEConfig
-from repro.core.transport import (WeightGatherCache, choose_transport_mode,
-                                  sharded_call)
 from repro.models.common import act_fn
 from repro.models.moe import build_dispatch, expert_capacity, expert_ffn, route_topk
 
@@ -76,6 +79,16 @@ def _sp_slice(xf: jax.Array, tp_axis: str) -> Tuple[jax.Array, int]:
     return jax.lax.dynamic_slice_in_dim(xf, rank * n_loc, n_loc, 0), n_loc
 
 
+def _aux_pmean(aux: jax.Array, tp_axis: str,
+               dp_axes: Tuple[str, ...]) -> jax.Array:
+    """Mean the per-shard aux losses over the tensor axis, then every data
+    axis — the replicated scalar every transport body must return."""
+    aux = jax.lax.pmean(aux, tp_axis)
+    for ax in dp_axes:
+        aux = jax.lax.pmean(aux, ax)
+    return aux
+
+
 def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
                 tp_axis: str, dp_axes: Tuple[str, ...]):
     """Local Function mode: token all-to-all to resident experts."""
@@ -107,11 +120,7 @@ def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
         y_loc = y_loc + _shared_expert(shared, xloc, act)
 
     y = jax.lax.all_gather(y_loc, tp_axis, axis=0, tiled=True)  # (N, d)
-    aux = r.aux_loss + r.z_loss
-    aux = jax.lax.pmean(aux, tp_axis)
-    for ax in dp_axes:
-        aux = jax.lax.pmean(aux, ax)
-    return y, aux
+    return y, _aux_pmean(r.aux_loss + r.z_loss, tp_axis, dp_axes)
 
 
 def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
@@ -136,10 +145,7 @@ def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
         y_loc = y_loc + _shared_expert(shared, xloc, act)
 
     y = jax.lax.all_gather(y_loc, tp_axis, axis=0, tiled=True)
-    aux = jax.lax.pmean(r.aux_loss + r.z_loss, tp_axis)
-    for ax in dp_axes:
-        aux = jax.lax.pmean(aux, ax)
-    return y, aux
+    return y, _aux_pmean(r.aux_loss + r.z_loss, tp_axis, dp_axes)
 
 
 def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
@@ -168,17 +174,16 @@ def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
         # shared weights + tokens are replicated over tp, so adding the
         # shared-expert output on every rank keeps y replicated
         y = y + _shared_expert(shared, xf, act)
-    aux = jax.lax.pmean(r.aux_loss + r.z_loss, tp_axis)
-    for ax in dp_axes:
-        aux = jax.lax.pmean(aux, ax)
-    return y, aux
+    return y, _aux_pmean(r.aux_loss + r.z_loss, tp_axis, dp_axes)
 
 
 _BODIES = {"local": _local_body, "injected": _injected_body, "tp": _tp_body}
 
 
 # ---------------------------------------------------------------------------
-# transport factory
+# transport factory (deprecated shim — the implementation lives in
+# repro.fabric.moe, reached through a Fabric so every caller shares the
+# cost-model routing, lease pool, and telemetry)
 # ---------------------------------------------------------------------------
 
 def make_jam_transport(mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
@@ -187,71 +192,19 @@ def make_jam_transport(mesh: Mesh, *, dp_axes: Tuple[str, ...] = ("data",),
                        log_choice: Optional[list] = None):
     """Build a ``transport(params, x, moe_cfg, act)`` for models.moe.moe_ffn.
 
-    ``mode='auto'`` consults the cost model per call shape (per-dp-shard
-    token counts) and records the decision in ``log_choice`` (if given) and
-    the process-wide ``core.transport`` telemetry.
-
-    ``weight_reuse`` is the expected number of invocations per weight
-    version.  It amortizes the injected-mode gather in the cost model, and
-    the factory backs it with a gather cache: repeated calls on the same
-    weight arrays (eager loops, or multiple calls within one trace) reuse
-    the all-gathered full weights instead of re-gathering.  Only claim
-    reuse the runtime realizes: a transport traced *once* into a compiled
-    step re-executes its gather on every step execution, so jitted callers
-    should leave ``weight_reuse=1`` (see runtime.steps).
+    .. deprecated::
+        Thin shim over ``repro.fabric.Fabric.moe_transport`` — construct a
+        ``Fabric`` and call that instead; it is the same lowering with the
+        lease pool and metrics surfaced. Kept so pre-Fabric callers and the
+        equivalence tests keep importing from here.
     """
-    dp_axes = tuple(a for a in dp_axes if a in mesh.axis_names)
-    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
-    w_spec = P(tp_axis, None, None)
-    w_full_spec = P(None, None, None)
-    gather_cache = WeightGatherCache()
-
-    def _gather_full(wg, wu, wd):
-        def body(g, u, dn):
-            return tuple(jax.lax.all_gather(w, tp_axis, axis=0, tiled=True)
-                         for w in (g, u, dn))
-        fn = sharded_call(body, mesh, in_specs=(w_spec,) * 3,
-                          out_specs=(w_full_spec,) * 3, label="jam.gather")
-        return fn(wg, wu, wd)
-
-    def transport(params, x: jax.Array, m: MoEConfig, act: str):
-        b, s, d = x.shape
-        chosen, _ = choose_transport_mode(
-            m, d_model=d, batch=b, seq=s, mesh_shape=dict(mesh.shape),
-            dp_axes=dp_axes, tp_axis=tp_axis, mode=mode,
-            dtype_bytes=x.dtype.itemsize, weight_reuse=weight_reuse,
-            label="jam", log_choice=log_choice)
-
-        body = partial(_BODIES[chosen], m=m, act=act, tp_axis=tp_axis,
-                       dp_axes=dp_axes)
-
-        has_shared = m.num_shared > 0
-        shared_keys = ("ws_gate", "ws_up", "ws_down")
-        shared = ({k: params[k] for k in shared_keys} if has_shared else None)
-
-        def wrapped(router, wg, wu, wd, shared_p, xb):
-            xf = xb.reshape(-1, d)
-            y, aux = body(router, wg, wu, wd, shared_p, xf)
-            return y.reshape(xb.shape), aux
-
-        weights = (params["w_gate"], params["w_up"], params["w_down"])
-        in_w_spec = w_spec
-        if chosen == "injected":
-            # inject the function state once per weight version; the shard
-            # body then sees pre-gathered full weights (replicated)
-            weights = gather_cache.get_or_gather(
-                weights, lambda: _gather_full(*weights))
-            in_w_spec = w_full_spec
-
-        sh_spec = (None if shared is None
-                   else {k: P(None, None) for k in shared_keys})
-        fn = sharded_call(
-            wrapped, mesh,
-            in_specs=(P(None, None), in_w_spec, in_w_spec, in_w_spec,
-                      sh_spec, P(dp_spec, None, None)),
-            out_specs=(P(dp_spec, None, None), P()),
-            label=f"jam.{chosen}")
-        y, aux = fn(params["router"], *weights, shared, x)
-        return y, aux
-
-    return transport
+    warnings.warn(
+        "repro.core.dispatch.make_jam_transport is deprecated; build a "
+        "repro.fabric.Fabric bound to the mesh and use "
+        "fabric.moe_transport(...) / fabric.call(...)",
+        DeprecationWarning, stacklevel=2)
+    from repro.fabric import Fabric
+    fabric = Fabric(mesh, dp_axes=dp_axes, tp_axis=tp_axis,
+                    name="dispatch.shim")
+    return fabric.moe_transport(mode=mode, weight_reuse=weight_reuse,
+                                log_choice=log_choice)

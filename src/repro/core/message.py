@@ -32,6 +32,18 @@ HEADER_WORDS = 8
 SIG_WORDS = 2
 ALIGN_WORDS = 16                     # 64 B frames, as in the paper
 
+# Named HDR word offsets — the frame ABI. Every consumer that indexes into
+# the header (dispatchers, validators, kernels) must use these instead of
+# bare integers so a header relayout is a one-file change.
+HDR_MAGIC = 0
+HDR_FUNC_ID = 1
+HDR_ELEM_ID = 2
+HDR_PAYLOAD_WORDS = 3
+HDR_STATE_WORDS = 4
+HDR_SRC_RANK = 5
+HDR_SEQ_NO = 6
+HDR_FLAGS = 7
+
 FLAG_INJECTED = 1                    # STATE section carries function state
 FLAG_READONLY_USR = 2                # security reconfig: payload read-only
 FLAG_RECV_GOT = 4                    # security reconfig: receiver sets GOT
@@ -141,14 +153,14 @@ def pack_frame(spec: FrameSpec, *, func_id, elem_id=0, src_rank=0, seq_no=0,
 def unpack_frame(spec: FrameSpec, frame: jax.Array) -> Dict[str, jax.Array]:
     o = spec.offsets()
     return {
-        "magic": frame[0],
-        "func_id": frame[1],
-        "elem_id": frame[2],
-        "payload_words": frame[3],
-        "state_words": frame[4],
-        "src_rank": frame[5],
-        "seq_no": frame[6],
-        "flags": frame[7],
+        "magic": frame[HDR_MAGIC],
+        "func_id": frame[HDR_FUNC_ID],
+        "elem_id": frame[HDR_ELEM_ID],
+        "payload_words": frame[HDR_PAYLOAD_WORDS],
+        "state_words": frame[HDR_STATE_WORDS],
+        "src_rank": frame[HDR_SRC_RANK],
+        "seq_no": frame[HDR_SEQ_NO],
+        "flags": frame[HDR_FLAGS],
         "got": jax.lax.dynamic_slice(frame, (o["got"],), (spec.got_slots,)),
         "state": jax.lax.dynamic_slice(frame, (o["state"],),
                                        (max(spec.state_words, 1),))[: spec.state_words]

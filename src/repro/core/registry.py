@@ -16,10 +16,20 @@ Handler ABI (the GOT indirection contract of §III-B):
 ``state`` is the STATE section (injected function state; empty in Local mode);
 the result is a fixed-width word vector (uniform across the package so the
 switch has one output shape).
+
+.. deprecated::
+    ``JamPackage`` is superseded by ``repro.fabric.Fabric``, the single
+    function-invocation surface (registration + packing + dispatch + leases
+    + telemetry). ``Fabric`` uses the machinery in this module under the
+    hood, so frames and dispatch results stay byte-identical; new code
+    should register functions on a ``Fabric`` instead of constructing
+    packages directly.
 """
 from __future__ import annotations
 
 import dataclasses
+import math
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -28,6 +38,7 @@ import jax.numpy as jnp
 from repro.core.got import GotTable
 from repro.core.message import (
     FLAG_INJECTED,
+    HDR_FUNC_ID,
     FrameSpec,
     frame_valid,
     pack_frame,
@@ -45,8 +56,44 @@ class Jam:
     got_symbols: Tuple[str, ...]
 
 
-class JamPackage:
-    """A named package of jams sharing one FrameSpec + result width."""
+def validate_result_width(jam: Jam, spec: FrameSpec, result_words: int,
+                          got: Tuple[Any, ...], *, package: str) -> None:
+    """Check (without tracing a switch) that ``jam``'s handler produces
+    exactly ``result_words`` int32 words for this frame geometry.
+
+    Runs the handler through ``eval_shape`` on abstract STATE/USR sections,
+    so the check is allocation-free and fails with a clear error at
+    registration/build time — not as a bare ``assert`` halfway through
+    tracing a ``lax.switch`` branch.
+    """
+    state = jax.ShapeDtypeStruct((spec.state_words,), jnp.int32)
+    usr = jax.ShapeDtypeStruct((spec.payload_words,), jnp.int32)
+    try:
+        out = jax.eval_shape(lambda s, u: jam.handler(got, s, u), state, usr)
+    except Exception as e:                                # pragma: no cover
+        raise ValueError(
+            f"jam {jam.name!r} in package {package!r}: handler failed shape "
+            f"validation on spec {spec} ({e})") from e
+    leaves = jax.tree.leaves(out)
+    if len(leaves) != 1:
+        raise ValueError(
+            f"jam {jam.name!r} in package {package!r}: handler must return "
+            f"a single array of {result_words} words, got a pytree of "
+            f"{len(leaves)} leaves")
+    n = math.prod(leaves[0].shape) if leaves[0].shape else 1
+    if n != result_words:
+        raise ValueError(
+            f"jam {jam.name!r} in package {package!r}: handler returns {n} "
+            f"result words (shape {leaves[0].shape}), but the package "
+            f"declares result_words={result_words}")
+
+
+class _JamPackageImpl:
+    """A named package of jams sharing one FrameSpec + result width.
+
+    This is the implementation ``repro.fabric.Fabric`` builds on; the public
+    ``JamPackage`` below is the deprecated direct-use shim.
+    """
 
     def __init__(self, name: str, spec: FrameSpec, result_words: int):
         self.name = name
@@ -61,6 +108,11 @@ class JamPackage:
             if name in self._jams:
                 raise ValueError(f"jam {name!r} already registered in {self.name}")
             jam = Jam(name, len(self._order), fn, tuple(got_symbols))
+            if not jam.got_symbols:
+                # no resident symbols to resolve: the result width is fully
+                # determined now — fail at register() time, not at dispatch
+                validate_result_width(jam, self.spec, self.result_words, (),
+                                      package=self.name)
             self._jams[name] = jam
             self._order.append(jam)
             return fn
@@ -101,25 +153,25 @@ class JamPackage:
         Invalid frames (bad magic/checksum) return zeros — the mailbox skips
         them. ``lax.switch`` over func_id is the Local-Function pointer
         vector; each branch closes over its jam's resolved GOT symbols.
+        Every handler's result width is validated (with resolved GOT values)
+        before any tracing happens.
         """
         spec = self.spec
         branches = []
         for jam in self._order:
             got = got_table.resolve(jam.got_symbols)
+            validate_result_width(jam, spec, self.result_words, got,
+                                  package=self.name)
 
             def branch(frame, jam=jam, got=got):
                 f = unpack_frame(spec, frame)
                 out = jam.handler(got, f["state"], f["usr"])
-                out = out.reshape(-1).astype(jnp.int32)
-                assert out.shape[0] == self.result_words, (
-                    f"jam {jam.name}: result {out.shape[0]} != "
-                    f"{self.result_words} words")
-                return out
+                return out.reshape(-1).astype(jnp.int32)
 
             branches.append(branch)
 
         def dispatch(frame: jax.Array) -> jax.Array:
-            func_id = jnp.clip(frame[1], 0, len(branches) - 1)
+            func_id = jnp.clip(frame[HDR_FUNC_ID], 0, len(branches) - 1)
             ok = frame_valid(spec, frame)
             result = jax.lax.switch(func_id, branches, frame)
             return jnp.where(ok, result, jnp.zeros_like(result))
@@ -127,11 +179,24 @@ class JamPackage:
         return dispatch
 
 
+class JamPackage(_JamPackageImpl):
+    """Deprecated direct-use package; register on ``repro.fabric.Fabric``."""
+
+    def __init__(self, name: str, spec: FrameSpec, result_words: int):
+        warnings.warn(
+            "repro.core.registry.JamPackage is deprecated; register "
+            "functions on a repro.fabric.Fabric (fabric.function / "
+            "fabric.call) instead", DeprecationWarning, stacklevel=2)
+        super().__init__(name, spec, result_words)
+
+
 class RiedPackage:
     """Heavyweight interface distribution: named setup of resident symbols.
 
     ``install`` runs every exported initializer against a GotTable — the
-    dynamic-library load + auto-init of §IV-A.
+    dynamic-library load + auto-init of §IV-A. Rieds remain first-class in
+    the Fabric API: ``fabric.install(ried)`` binds them into the fabric's
+    GOT table.
     """
 
     def __init__(self, name: str):

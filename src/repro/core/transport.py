@@ -149,6 +149,11 @@ def choose_transport_mode(m: MoEConfig, *, d_model: int, batch: int, seq: int,
 class WeightGatherCache:
     """Identity-keyed memo for injected-mode weight all-gathers.
 
+    Superseded in the live MoE path by the named lease pool
+    (``repro.fabric.leases``), which inherits these identity/tracer
+    semantics; kept as the minimal reference implementation the lease
+    tests pin against.
+
     The cost model amortizes the weight gather over ``weight_reuse``
     invocations (gradient-accumulation microbatches, decode ticks); this
     cache realizes the amortization: repeated transport calls on the *same*

@@ -1,0 +1,18 @@
+"""repro.fabric — one function-invocation API over jams, rieds, mailboxes,
+and collective transports (see docs/fabric.md).
+
+Public surface::
+
+    from repro.fabric import Fabric
+
+    fabric = Fabric(mesh)                      # or Fabric() off-mesh
+    fabric.install(ried)                       # resident state
+    @fabric.function("f", spec=..., result_words=...)
+    def handler(got, state, usr): ...
+    fabric.call("f", payload)                  # frame path
+    fabric.moe_transport(mode="auto")          # collective fast path
+    fabric.lease("warm", arrays, ttl_calls=8)  # rFaaS-style lease
+    fabric.metrics()                           # the telemetry surface
+"""
+from repro.fabric.fabric import Fabric  # noqa: F401
+from repro.fabric.leases import Lease, LeasePool  # noqa: F401

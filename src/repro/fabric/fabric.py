@@ -1,0 +1,362 @@
+"""``Fabric`` — the single function-invocation surface of the repro.
+
+The paper's claim is one composition surface for injecting and executing
+functions against remote state; before this module the repro exposed five
+uncoordinated seams (``JamPackage``/``RiedPackage``/``GotTable``
+registration, raw mailbox frame plumbing, ``make_jam_transport``,
+``choose_transport_mode``, and per-consumer telemetry). A ``Fabric`` folds
+them into one object, following rFaaS's lease-based warm executors and
+funcX's register-once/invoke-anywhere endpoints (PAPERS.md):
+
+* ``fabric.install(ried)`` / ``fabric.bind(name, value)`` — resident state
+  into the fabric-owned ``GotTable`` (the receiver's interface library).
+* ``@fabric.function(name, got_symbols=…, spec=…, result_words=…)`` —
+  register a frame-path jam handler (subsumes ``JamPackage.register``;
+  result width is validated at registration, not at trace time).
+* ``fabric.call(name, payload, *, state=None, placement=…)`` — the one
+  invocation surface. Frame functions lower to packed mailbox frames +
+  the ``lax.switch`` dispatcher (byte-faithful: bitwise identical to the
+  legacy ``JamPackage.pack`` → ``build_dispatcher`` path); collectives
+  (e.g. the MoE jam) lower to ``sharded_call`` shard bodies, with
+  ``placement="auto"`` consulting ``core.costmodel`` exactly as
+  ``make_jam_transport(mode="auto")`` did.
+* ``fabric.lease(name, state, ttl_calls=…)`` — named warm-state pool
+  (rFaaS leases) generalizing the injected-mode weight-gather cache.
+* ``fabric.metrics()`` — the one telemetry surface; Trainer/Server/
+  PagedServer delegate to it.
+
+Placement semantics:
+
+==============  =======================  ================================
+placement       frame path               collective path
+==============  =======================  ================================
+``"local"``     state must be resident   token all_to_all to resident
+                (GOT); STATE empty       experts
+``"injected"``  ``state=`` words packed  weights all_gather (leased) to
+                into STATE               the tokens
+``"auto"``      injected iff ``state``   cost model picks per call shape
+                given and spec has       (``core.costmodel``), degrade
+                STATE room               rules unchanged
+``"tp"``        —                        no-split fallback, psum combine
+==============  =======================  ================================
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.core import transport as transport_lib
+from repro.core.costmodel import TransportEstimate
+from repro.core.got import GotTable
+from repro.core.message import FrameSpec
+from repro.core.registry import (Jam, RiedPackage, _JamPackageImpl,
+                                 validate_result_width)
+from repro.fabric.leases import LeasePool
+
+FRAME_PLACEMENTS = ("local", "injected", "auto")
+
+
+class Fabric:
+    """One function-invocation surface over jams, rieds, mailboxes, and
+    collective transports, bound to (at most) one mesh."""
+
+    def __init__(self, mesh=None, *, dp_axes: Sequence[str] = ("data",),
+                 tp_axis: str = "model", name: str = "fabric"):
+        self.name = name
+        self.mesh = mesh
+        self.dp_axes = tuple(dp_axes)
+        self.tp_axis = tp_axis
+        self.got = GotTable()
+        self._lock = threading.Lock()
+        # frame path: functions grouped into lanes (one JamPackage per
+        # (spec, result_words) geometry so each lane's switch has one
+        # output shape); func_ids are dense within a lane.
+        self._lanes: Dict[Tuple[FrameSpec, int], _JamPackageImpl] = {}
+        self._frame_fn_lane: Dict[str, Tuple[FrameSpec, int]] = {}
+        # collective path: name -> invoke(payload, state, placement, **kw)
+        self._collectives: Dict[str, Callable] = {}
+        self._collective_placements: Dict[str, Tuple[str, ...]] = {}
+        self._moe_registrations: Dict[str, Tuple[int, Optional[list]]] = {}
+        self.leases = LeasePool(on_hit=self._gather_hit,
+                                on_miss=self._gather_miss)
+        self._calls: Dict[str, int] = {}
+        self._decisions: List[Tuple[str, TransportEstimate]] = []
+        # bumped on any (re)bind/registration: invalidates (and drops) the
+        # cached dispatchers/callers built against the previous GOT state
+        self._generation = 0
+        self._caller_cache: Dict[Tuple[Any, ...], Callable] = {}
+
+    def _bump_generation(self) -> None:
+        # stale-generation entries can never be looked up again (every key
+        # embeds the generation) — drop them so periodic rebinds don't leak
+        # one dead jitted caller per function per rebind
+        self._generation += 1
+        self._caller_cache.clear()
+
+    # ------------------------------------------------------------------
+    # resident state (rieds / GOT)
+    # ------------------------------------------------------------------
+
+    def install(self, ried) -> "Fabric":
+        """Install a ``RiedPackage`` (or any mapping of symbol -> value)
+        into the fabric's GOT table. Returns self for chaining."""
+        if isinstance(ried, RiedPackage) or hasattr(ried, "install"):
+            ried.install(self.got)
+        elif isinstance(ried, Mapping):
+            for symbol, value in ried.items():
+                self.got.bind(symbol, value)
+        else:
+            raise TypeError(f"cannot install {type(ried).__name__}; expected "
+                            f"a RiedPackage or a symbol->value mapping")
+        self._bump_generation()
+        return self
+
+    def bind(self, symbol: str, value: Any) -> int:
+        """Bind one resident symbol directly (a one-symbol ried)."""
+        idx = self.got.bind(symbol, value)
+        self._bump_generation()
+        return idx
+
+    # ------------------------------------------------------------------
+    # registration
+    # ------------------------------------------------------------------
+
+    def function(self, name: str, *, spec: FrameSpec,
+                 result_words: int, got_symbols: Sequence[str] = ()):
+        """Decorator: register a frame-path jam handler under ``name``.
+
+        Handler ABI is unchanged from ``JamPackage.register``:
+        ``handler(got, state, usr) -> int32[result_words]``. The result
+        width is validated **now** when the handler's GOT symbols are
+        already resolvable (install rieds before registering), otherwise at
+        first dispatch build — either way before any switch is traced.
+        """
+        got_symbols = tuple(got_symbols)
+
+        def deco(fn: Callable) -> Callable:
+            with self._lock:
+                if name in self._frame_fn_lane or name in self._collectives:
+                    raise ValueError(
+                        f"function {name!r} already registered on fabric "
+                        f"{self.name!r}")
+                if got_symbols and all(s in self.got for s in got_symbols):
+                    # validate BEFORE inserting into the lane: a failed
+                    # registration must not leave a half-registered jam
+                    # poisoning every later dispatcher build for the lane
+                    validate_result_width(
+                        Jam(name, -1, fn, got_symbols), spec, result_words,
+                        self.got.resolve(got_symbols), package=self.name)
+                lane_key = (spec, result_words)
+                lane = self._lanes.get(lane_key)
+                if lane is None:
+                    lane = self._lanes[lane_key] = _JamPackageImpl(
+                        f"{self.name}.lane{len(self._lanes)}", spec,
+                        result_words)
+                lane.register(name, got_symbols)(fn)
+                self._frame_fn_lane[name] = lane_key
+                self._bump_generation()
+            return fn
+        return deco
+
+    def register_collective(self, name: str, invoke: Callable, *,
+                            placements: Tuple[str, ...]) -> None:
+        """Register a collective (shard_map-lowered) function.
+
+        ``invoke(payload, state, placement, **kwargs)`` builds and runs the
+        device program; idempotent re-registration with the same name is
+        rejected so two call sites cannot silently disagree."""
+        with self._lock:
+            if name in self._collectives or name in self._frame_fn_lane:
+                raise ValueError(
+                    f"function {name!r} already registered on fabric "
+                    f"{self.name!r}")
+            self._collectives[name] = invoke
+            self._collective_placements[name] = placements
+            self._bump_generation()
+
+    def moe_transport(self, *, mode: str = "local", weight_reuse: int = 1,
+                      log_choice: Optional[list] = None,
+                      name: str = "moe.ffn") -> Callable:
+        """Register (once) and return the MoE jam transport closure —
+        ``transport(params, x, moe_cfg, act)`` for ``models.moe.moe_ffn``.
+
+        Calling again with the same ``name`` reuses the registered
+        collective and only rebinds the closure's default ``mode`` — a
+        different ``weight_reuse`` or ``log_choice`` on the second call is
+        a loud error (register under another ``name`` instead), never a
+        silent drop."""
+        from repro.fabric.moe import register_moe
+        if name in self._collectives:
+            prev_reuse, prev_log = self._moe_registrations[name]
+            if weight_reuse != prev_reuse or (
+                    log_choice is not None and log_choice is not prev_log):
+                raise ValueError(
+                    f"collective {name!r} is already registered with "
+                    f"weight_reuse={prev_reuse}; pass a different name= to "
+                    f"register a second MoE transport configuration")
+
+            def transport(params, x, m, act):
+                return self.call(name, x, state=params, placement=mode,
+                                 moe=m, act=act)
+            return transport
+        self._moe_registrations[name] = (weight_reuse, log_choice)
+        return register_moe(self, name=name, mode=mode,
+                            weight_reuse=weight_reuse, log_choice=log_choice)
+
+    @property
+    def functions(self) -> Tuple[str, ...]:
+        return tuple(sorted((*self._frame_fn_lane, *self._collectives)))
+
+    # ------------------------------------------------------------------
+    # invocation
+    # ------------------------------------------------------------------
+
+    def call(self, name: str, payload, *, state=None,
+             placement: str = "auto", **kwargs):
+        """Invoke function ``name`` on ``payload`` — the one surface.
+
+        Frame functions return the dispatcher's ``int32[result_words]``
+        vector; collectives return whatever their lowering returns (the MoE
+        jam returns ``(y, aux_loss)``). Only invocations that pass
+        validation count toward ``metrics()["calls"]``."""
+        if name in self._collectives:
+            if placement not in self._collective_placements[name]:
+                raise ValueError(
+                    f"collective {name!r} supports placements "
+                    f"{self._collective_placements[name]}, got {placement!r}")
+            self._calls[name] = self._calls.get(name, 0) + 1
+            return self._collectives[name](payload, state, placement,
+                                           **kwargs)
+        if name not in self._frame_fn_lane:
+            raise KeyError(f"no function {name!r} on fabric {self.name!r}; "
+                           f"registered: {self.functions}")
+        if kwargs:
+            raise TypeError(f"frame function {name!r} takes no extra "
+                            f"kwargs, got {sorted(kwargs)}")
+        return self._frame_call(name, payload, state, placement)
+
+    def pack(self, name: str, payload, *, state=None, src_rank=0,
+             seq_no=0) -> jax.Array:
+        """Sender side only: pack the active-message frame ``call`` would
+        send (for mailbox plumbing / wire benchmarks)."""
+        lane = self._lanes[self._frame_fn_lane[name]]
+        return lane.pack(name, self.got, payload_words=payload,
+                         state_words=state, src_rank=src_rank, seq_no=seq_no)
+
+    def dispatcher(self, spec: FrameSpec, result_words: int,
+                   *, jit: bool = True) -> Callable[[jax.Array], jax.Array]:
+        """Receiver side only: the dispatch function for one frame lane
+        (what ``drain_mailbox`` executes on arrival)."""
+        lane = self._lanes.get((spec, result_words))
+        if lane is None:
+            raise KeyError(f"no frame functions registered for spec={spec} "
+                           f"result_words={result_words}")
+        key = ("dispatch", spec, result_words, self._generation, jit)
+        fn = self._caller_cache.get(key)
+        if fn is None:
+            fn = lane.build_dispatcher(self.got)
+            if jit:
+                fn = jax.jit(fn)
+            self._caller_cache[key] = fn
+        return fn
+
+    def _frame_call(self, name: str, payload, state, placement: str):
+        if placement not in FRAME_PLACEMENTS:
+            raise ValueError(f"frame function {name!r}: placement must be "
+                             f"one of {FRAME_PLACEMENTS}, got {placement!r}")
+        spec, result_words = self._frame_fn_lane[name]
+        if placement == "auto":
+            # a caller handing us state always means injection — if the
+            # spec has no STATE room the injected branch below raises the
+            # precise error rather than a misleading 'local' complaint
+            placement = "injected" if state is not None else "local"
+        if placement == "local" and state is not None:
+            raise ValueError(
+                f"{name!r}: placement='local' invokes resident state (GOT); "
+                f"state= must be None (use placement='injected' to ship it)")
+        if placement == "injected":
+            if not spec.state_words:
+                raise ValueError(
+                    f"{name!r}: placement='injected' needs a FrameSpec with "
+                    f"state_words > 0 (this one has none)")
+            if state is None:
+                raise ValueError(f"{name!r}: placement='injected' requires "
+                                 f"state= (the serialized function state)")
+        caller = self._frame_caller(name, with_state=state is not None)
+        self._calls[name] = self._calls.get(name, 0) + 1
+        return caller(payload, state) if state is not None else caller(payload)
+
+    def _frame_caller(self, name: str, *, with_state: bool) -> Callable:
+        """Jitted pack -> dispatch for one frame function (cached; results
+        are integer ops, bitwise identical to the eager legacy path)."""
+        key = ("call", name, with_state, self._generation)
+        fn = self._caller_cache.get(key)
+        if fn is not None:
+            return fn
+        spec, result_words = self._frame_fn_lane[name]
+        lane = self._lanes[(spec, result_words)]
+        # one dispatcher build (validation + branch closures) per lane per
+        # generation, shared by every function's caller
+        dispatch = self.dispatcher(spec, result_words, jit=False)
+
+        if with_state:
+            def fn(payload, state):
+                return dispatch(lane.pack(name, self.got,
+                                          payload_words=payload,
+                                          state_words=state))
+        else:
+            def fn(payload):
+                return dispatch(lane.pack(name, self.got,
+                                          payload_words=payload))
+        fn = jax.jit(fn)
+        self._caller_cache[key] = fn
+        return fn
+
+    # ------------------------------------------------------------------
+    # leases (rFaaS warm state)
+    # ------------------------------------------------------------------
+
+    def lease(self, name: str, state: Sequence[Any], *,
+              ttl_calls: Optional[int] = None,
+              materialize: Optional[Callable[[], Any]] = None) -> Any:
+        """Acquire/renew the named warm-state lease (see fabric.leases)."""
+        return self.leases.acquire(name, state, ttl_calls=ttl_calls,
+                                   materialize=materialize)
+
+    def evict(self, name: str) -> bool:
+        return self.leases.evict(name)
+
+    def _gather_hit(self) -> None:
+        transport_lib.get_telemetry().gather_hits += 1
+
+    def _gather_miss(self) -> None:
+        transport_lib.get_telemetry().gather_misses += 1
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def record_decision(self, name: str, est: TransportEstimate) -> None:
+        with self._lock:
+            self._decisions.append((name, est))
+
+    @property
+    def decisions(self) -> List[Tuple[str, TransportEstimate]]:
+        """Raw auto-mode (name, TransportEstimate) pairs, call order."""
+        return list(self._decisions)
+
+    def metrics(self) -> Dict[str, Any]:
+        """The one telemetry surface (JSON-friendly): registered functions,
+        per-function call counts, auto-mode routing decisions, per-lease
+        warm-state counters, and the process-wide transport summary."""
+        return {
+            "fabric": self.name,
+            "functions": list(self.functions),
+            "calls": dict(self._calls),
+            "decisions": [f"{name}: {est.describe()}"
+                          for name, est in self._decisions],
+            "leases": self.leases.metrics(),
+            "transport_telemetry": transport_lib.get_telemetry().summary(),
+        }

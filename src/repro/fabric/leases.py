@@ -1,0 +1,134 @@
+"""rFaaS-style warm-state leases (PAPERS.md: lease-based warm executors).
+
+A *lease* names a piece of hot function state — gathered expert weights, a
+serialized STATE section, a prepared lookup table — and keeps its
+materialized form warm across calls so repeated invocations skip the
+expensive preparation step. This generalizes the old
+``core.transport.WeightGatherCache`` (an anonymous identity-keyed memo for
+one call site) into a **named pool** with explicit TTL expiry, eviction,
+and per-lease hit telemetry: every warm-state reuse decision in the repo is
+now observable through ``Fabric.metrics()["leases"]``.
+
+Identity + tracer semantics are inherited from the gather cache (they are
+what make the pool safe under jit):
+
+* A hit requires the *same* key arrays by ``is`` — value-equal copies miss,
+  because reusing state across genuinely new arrays would serve stale
+  function state.
+* Entries hold strong references to their key arrays so ids cannot be
+  recycled while an entry is live.
+* A materialized value containing tracers is stored only when the key
+  arrays are tracers of that same live trace; a traced value produced from
+  concrete keys (a jit closure capturing the state) is returned but never
+  stored, so a later eager call cannot receive a dead trace's tracer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+
+
+@dataclasses.dataclass
+class Lease:
+    """One named warm-state entry + its lifetime counters."""
+
+    name: str
+    ttl_calls: Optional[int] = None       # None => identity-bound, no TTL
+    key: Tuple[Any, ...] = ()             # strong refs to the state arrays
+    value: Any = None
+    live: bool = False
+    calls_used: int = 0                   # calls served by the warm value
+    hits: int = 0
+    misses: int = 0
+    expirations: int = 0                  # TTL expiries (a subset of misses)
+
+    def counters(self) -> Dict[str, Any]:
+        return {"hits": self.hits, "misses": self.misses,
+                "expirations": self.expirations,
+                "calls_used": self.calls_used,
+                "ttl_calls": self.ttl_calls, "live": self.live}
+
+
+def _contains_tracer(tree: Any) -> bool:
+    return any(isinstance(leaf, jax.core.Tracer)
+               for leaf in jax.tree.leaves(tree))
+
+
+class LeasePool:
+    """Named warm-state pool backing ``Fabric.lease``.
+
+    ``on_hit`` / ``on_miss`` hooks let the owning fabric mirror lease
+    traffic into the process-wide transport telemetry (the legacy
+    ``gather_cache[hit= miss=]`` counters keep moving after the migration).
+    """
+
+    def __init__(self, on_hit: Optional[Callable[[], None]] = None,
+                 on_miss: Optional[Callable[[], None]] = None):
+        self._leases: Dict[str, Lease] = {}
+        self._on_hit = on_hit or (lambda: None)
+        self._on_miss = on_miss or (lambda: None)
+
+    def acquire(self, name: str, state: Sequence[Any], *,
+                ttl_calls: Optional[int] = None,
+                materialize: Optional[Callable[[], Any]] = None) -> Any:
+        """Return the warm value for ``name``, materializing on miss.
+
+        A hit requires a live entry whose key arrays are identically
+        (``is``) the arrays in ``state`` and whose TTL is not exhausted.
+        ``materialize`` defaults to returning ``state`` itself (pure
+        residency counting). ``ttl_calls=N`` expires the lease after N
+        calls served by the warm value; the next acquire re-materializes.
+        """
+        if ttl_calls is not None and ttl_calls < 1:
+            raise ValueError(f"lease {name!r}: ttl_calls must be >= 1 or "
+                             f"None, got {ttl_calls}")
+        key = tuple(state)
+        lease = self._leases.get(name)
+        if lease is None:
+            lease = self._leases[name] = Lease(name)
+        lease.ttl_calls = ttl_calls
+
+        if (lease.live and len(lease.key) == len(key)
+                and all(a is b for a, b in zip(lease.key, key))):
+            if ttl_calls is not None and lease.calls_used >= ttl_calls:
+                # explicit expiry: the warm value served its term
+                lease.live = False
+                lease.value = None
+                lease.expirations += 1
+            else:
+                lease.hits += 1
+                lease.calls_used += 1
+                self._on_hit()
+                return lease.value
+
+        lease.misses += 1
+        self._on_miss()
+        value = state if materialize is None else materialize()
+        if _contains_tracer(value) and not _contains_tracer(key):
+            # closure-captured trace: hand it back, never store it
+            return value
+        lease.key = key
+        lease.value = value
+        lease.live = True
+        lease.calls_used = 1
+        return value
+
+    def evict(self, name: str) -> bool:
+        """Drop ``name``'s warm value (counters survive). Returns whether a
+        live value was actually released."""
+        lease = self._leases.get(name)
+        if lease is None or not lease.live:
+            return False
+        lease.live = False
+        lease.value = None
+        lease.key = ()
+        return True
+
+    def get(self, name: str) -> Optional[Lease]:
+        return self._leases.get(name)
+
+    def metrics(self) -> Dict[str, Dict[str, Any]]:
+        return {name: lease.counters()
+                for name, lease in sorted(self._leases.items())}

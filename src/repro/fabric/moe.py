@@ -1,0 +1,120 @@
+"""Collective fast-path lowering for the MoE jam — ``fabric.call`` with a
+3-D activation payload lands here.
+
+This is the former ``core.dispatch.make_jam_transport`` factory, rehomed so
+the Fabric owns the transport builder: per-shard bodies still live in
+``core.dispatch`` (they are the computational contract the equivalence
+tests pin), mode selection still goes through
+``core.transport.choose_transport_mode`` (the cost model prices per-dp-shard
+token counts), and the injected-mode weight all-gather is now held in the
+fabric's **lease pool** instead of a private ``WeightGatherCache`` — same
+identity/tracer semantics, but named, TTL-capable, and visible in
+``fabric.metrics()``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core.dispatch import _BODIES
+from repro.core.transport import choose_transport_mode, sharded_call
+
+_SHARED_KEYS = ("ws_gate", "ws_up", "ws_down")
+
+
+def register_moe(fabric, *, name: str = "moe.ffn", mode: str = "local",
+                 weight_reuse: int = 1,
+                 log_choice: Optional[list] = None) -> Callable:
+    """Register the MoE expert-dispatch collective on ``fabric`` and return
+    its ``transport(params, x, moe_cfg, act)`` closure (the callable
+    ``models.moe.moe_ffn`` accepts). ``mode`` is the closure's default
+    placement; ``fabric.call(name, ..., placement=...)`` overrides per call.
+
+    ``weight_reuse`` is the expected number of invocations per weight
+    version. It amortizes the injected-mode gather in the cost model, and
+    the fabric backs it with the ``{name}.weights`` lease: repeated calls on
+    the same weight arrays (eager loops, or multiple calls within one
+    trace) reuse the all-gathered full weights instead of re-gathering.
+    Only claim reuse the runtime realizes: a transport traced *once* into a
+    compiled step re-executes its gather on every step execution, so jitted
+    callers should leave ``weight_reuse=1`` (see runtime.steps).
+    """
+    mesh = fabric.mesh
+    if mesh is None:
+        raise ValueError("the MoE collective needs a mesh-bound Fabric "
+                         "(Fabric(mesh, ...))")
+    tp_axis = fabric.tp_axis
+    dp_axes = tuple(a for a in fabric.dp_axes if a in mesh.axis_names)
+    dp_spec = dp_axes if len(dp_axes) > 1 else (dp_axes[0] if dp_axes else None)
+    w_spec = P(tp_axis, None, None)
+    w_full_spec = P(None, None, None)
+
+    def _gather_full(wg, wu, wd):
+        def body(g, u, dn):
+            return tuple(jax.lax.all_gather(w, tp_axis, axis=0, tiled=True)
+                         for w in (g, u, dn))
+        fn = sharded_call(body, mesh, in_specs=(w_spec,) * 3,
+                          out_specs=(w_full_spec,) * 3, label="jam.gather")
+        return fn(wg, wu, wd)
+
+    def invoke(payload: jax.Array, state, placement: str, *,
+               moe: MoEConfig, act: str = "silu"
+               ) -> Tuple[jax.Array, jax.Array]:
+        params, x, m = state, payload, moe
+        if params is None:
+            raise ValueError(f"collective {name!r} needs state= (the MoE "
+                             f"layer params)")
+        b, s, d = x.shape
+        chosen, est = choose_transport_mode(
+            m, d_model=d, batch=b, seq=s, mesh_shape=dict(mesh.shape),
+            dp_axes=dp_axes, tp_axis=tp_axis, mode=placement,
+            dtype_bytes=x.dtype.itemsize, weight_reuse=weight_reuse,
+            label="jam", log_choice=log_choice)
+        if est is not None:
+            fabric.record_decision(name, est)
+
+        body = partial(_BODIES[chosen], m=m, act=act, tp_axis=tp_axis,
+                       dp_axes=dp_axes)
+
+        shared = ({k: params[k] for k in _SHARED_KEYS}
+                  if m.num_shared > 0 else None)
+
+        def wrapped(router, wg, wu, wd, shared_p, xb):
+            xf = xb.reshape(-1, d)
+            y, aux = body(router, wg, wu, wd, shared_p, xf)
+            return y.reshape(xb.shape), aux
+
+        weights = (params["w_gate"], params["w_up"], params["w_down"])
+        in_w_spec = w_spec
+        if chosen == "injected":
+            # inject the function state once per weight version; the shard
+            # body then sees pre-gathered full weights (replicated). The
+            # lease is the rFaaS warm executor: identity-keyed on the weight
+            # arrays, hit-counted in fabric.metrics().
+            weights = fabric.lease(
+                f"{name}.weights", weights,
+                materialize=lambda: _gather_full(*weights))
+            in_w_spec = w_full_spec
+
+        sh_spec = (None if shared is None
+                   else {k: P(None, None) for k in _SHARED_KEYS})
+        fn = sharded_call(
+            wrapped, mesh,
+            in_specs=(P(None, None), in_w_spec, in_w_spec, in_w_spec,
+                      sh_spec, P(dp_spec, None, None)),
+            out_specs=(P(dp_spec, None, None), P()),
+            label=f"jam.{chosen}")
+        return fn(params["router"], *weights, shared, x)
+
+    fabric.register_collective(name, invoke,
+                               placements=("local", "injected", "tp", "auto"))
+
+    def transport(params, x: jax.Array, m: MoEConfig, act: str):
+        return fabric.call(name, x, state=params, placement=mode,
+                           moe=m, act=act)
+
+    return transport

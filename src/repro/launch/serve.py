@@ -87,6 +87,10 @@ def main() -> None:
           f"({total_tokens/dt:.1f} tok/s, {server.ticks} ticks)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
+    if server.fabric is not None:
+        fm = server.fabric.metrics()
+        print(f"[serve:{kind}] fabric '{fm['fabric']}': calls={fm['calls']} "
+              f"decisions={len(fm['decisions'])} leases={list(fm['leases'])}")
     if args.metrics_json:
         print(json.dumps(server.metrics(), default=str, indent=2))
 

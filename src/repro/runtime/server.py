@@ -61,8 +61,16 @@ class _ServerBase:
         self.completed: List[Request] = []
 
     @property
+    def fabric(self):
+        """The decode bundle's Fabric — the invocation + telemetry surface."""
+        return self.bundle.meta.get("fabric")
+
+    @property
     def transport_decisions(self):
-        """Auto-mode TransportEstimates recorded while tracing decode."""
+        """Auto-mode TransportEstimates recorded while tracing decode
+        (delegates to the bundle fabric's decision log)."""
+        if self.fabric is not None:
+            return [est for _, est in self.fabric.decisions]
         return list(self.bundle.meta.get("transport_log", ()))
 
     def _fresh_cache(self) -> PyTree:
@@ -88,11 +96,17 @@ class _ServerBase:
         self.cache = self._fresh_cache()
 
     def _transport_metrics(self) -> Dict[str, Any]:
-        return {
+        """Transport telemetry block of ``metrics()`` — delegates to the
+        bundle fabric (`fabric` key carries its full ``metrics()`` dict);
+        the two legacy keys are kept for pre-Fabric consumers."""
+        out: Dict[str, Any] = {
             "transport_decisions": [est.describe()
                                     for est in self.transport_decisions],
             "transport_telemetry": transport_lib.get_telemetry().summary(),
         }
+        if self.fabric is not None:
+            out["fabric"] = self.fabric.metrics()
+        return out
 
 
 class Server(_ServerBase):

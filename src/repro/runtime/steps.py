@@ -5,8 +5,11 @@ abstract_inputs)`` so ``launch.dryrun`` can ``jax.jit(fn, in_shardings=...,
 out_shardings=...).lower(*abstract_inputs).compile()`` with zero allocation,
 and the trainer/server can call the same jitted function with real arrays.
 
-MoE architectures get the Two-Chains jam transport (core.dispatch) wired in
-when the mesh has a >1 tensor axis; otherwise the single-device oracle runs.
+Every bundle owns a ``repro.fabric.Fabric`` bound to its mesh
+(``bundle.meta["fabric"]``): MoE architectures get the Two-Chains jam
+transport registered on it when the mesh has a >1 tensor axis (otherwise
+the single-device oracle runs), and Trainer/Server delegate their
+transport telemetry to ``fabric.metrics()``.
 """
 from __future__ import annotations
 
@@ -20,8 +23,8 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeConfig
-from repro.core.dispatch import make_jam_transport
 from repro.data.synthetic import batch_shapes
+from repro.fabric import Fabric
 from repro.models import model as model_lib
 from repro.models.kvcache import PagedLayout
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -86,17 +89,23 @@ def sharding_ctx(cfg: ModelConfig, run: RunConfig, mesh: Mesh):
     return rules, params_shapes, axes, pspecs, pshard
 
 
-def _moe_transport(cfg: ModelConfig, mesh: Mesh, rules, *,
+def _bundle_fabric(cfg: ModelConfig, mesh: Mesh, rules, *, kind: str,
                    weight_reuse: int = 1,
-                   log_choice: Optional[list] = None) -> Optional[Callable]:
-    if cfg.moe is None:
-        return None
-    if mesh.shape.get(rules.tp_axis, 1) <= 1:
-        return None   # single tensor shard: oracle path
-    return make_jam_transport(mesh, dp_axes=rules.dp_axes,
-                              tp_axis=rules.tp_axis, mode=cfg.moe.transport,
-                              weight_reuse=weight_reuse,
-                              log_choice=log_choice)
+                   log_choice: Optional[list] = None
+                   ) -> Tuple[Fabric, Optional[Callable]]:
+    """One Fabric per step bundle — the bundle's invocation + telemetry
+    surface (``bundle.meta["fabric"]``; Trainer/Server delegate to its
+    ``metrics()``). Registers the MoE jam transport when the config and
+    mesh call for it; otherwise the fabric carries telemetry only and the
+    single-device oracle path runs."""
+    fabric = Fabric(mesh, dp_axes=rules.dp_axes, tp_axis=rules.tp_axis,
+                    name=f"steps.{kind}")
+    if cfg.moe is None or mesh.shape.get(rules.tp_axis, 1) <= 1:
+        return fabric, None   # single tensor shard: oracle path
+    transport = fabric.moe_transport(mode=cfg.moe.transport,
+                                     weight_reuse=weight_reuse,
+                                     log_choice=log_choice)
+    return fabric, transport
 
 
 def opt_shardings(pshard: PyTree, mesh: Mesh) -> AdamWState:
@@ -153,7 +162,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
     # callers that reuse weights across calls get the gather cache and may
     # pass weight_reuse themselves.)
     transport_log: list = []
-    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
+    fabric, transport = _bundle_fabric(cfg, mesh, rules, kind="train",
+                                       log_choice=transport_log)
 
     def grads_of(params, batch):
         def loss_of(p):
@@ -218,7 +228,8 @@ def make_train_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         abstract_inputs=(params_shapes, abstract_opt_state(params_shapes),
                          batch_abs),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="train",
-                  batch=batch_abs, transport_log=transport_log),
+                  batch=batch_abs, transport_log=transport_log,
+                  fabric=fabric),
     )
 
 
@@ -230,7 +241,8 @@ def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
                       batch_override: Optional[int] = None) -> StepBundle:
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
     transport_log: list = []
-    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
+    fabric, transport = _bundle_fabric(cfg, mesh, rules, kind="prefill",
+                                       log_choice=transport_log)
     shape = run.shape
     b = batch_override or shape.global_batch
     seq_sharded = rules.seq_axis is not None
@@ -282,7 +294,8 @@ def make_prefill_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         out_shardings=(logit_shard, cache_shard),
         abstract_inputs=(params_shapes, batch_abs),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="prefill",
-                  batch=batch_abs, transport_log=transport_log),
+                  batch=batch_abs, transport_log=transport_log,
+                  fabric=fabric),
     )
 
 
@@ -298,7 +311,8 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
     # weight_reuse stays 1: the decode step is compiled once and every
     # executed tick re-runs the gather inside it, so auto mode must price
     # the full per-call cost (see make_train_step)
-    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
+    fabric, transport = _bundle_fabric(cfg, mesh, rules, kind="decode",
+                                       log_choice=transport_log)
     shape = run.shape
     b = batch_override or shape.global_batch
     constrain = act_constrain(
@@ -339,7 +353,8 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
         out_shardings=(tok_shard, cache_shard),
         abstract_inputs=tuple(abstract),
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="decode",
-                  cache=cache_shapes, transport_log=transport_log),
+                  cache=cache_shapes, transport_log=transport_log,
+                  fabric=fabric),
     )
 
 
@@ -366,7 +381,8 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
     transport_log: list = []
     # weight_reuse stays 1 for the same reason as make_serve_step: the step
     # is compiled once and every executed tick re-runs the traced gather
-    transport = _moe_transport(cfg, mesh, rules, log_choice=transport_log)
+    fabric, transport = _bundle_fabric(cfg, mesh, rules, kind="paged_decode",
+                                       log_choice=transport_log)
     if transport is not None:
         # the jam transports route every token — padding columns would
         # silently steal expert capacity from real tokens, breaking the
@@ -414,8 +430,8 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
         abstract_inputs=abstract,
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="paged_decode",
                   cache=cache_shapes, transport_log=transport_log,
-                  block_size=block_size, num_blocks=num_blocks,
-                  chunk=chunk, slots=slots),
+                  fabric=fabric, block_size=block_size,
+                  num_blocks=num_blocks, chunk=chunk, slots=slots),
     )
 
 

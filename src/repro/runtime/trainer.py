@@ -70,8 +70,16 @@ class Trainer:
         self._transport_logged = False
 
     @property
+    def fabric(self):
+        """The step bundle's Fabric — the invocation + telemetry surface."""
+        return self.bundle.meta.get("fabric")
+
+    @property
     def transport_decisions(self):
-        """Auto-mode TransportEstimates recorded while tracing the step."""
+        """Auto-mode TransportEstimates recorded while tracing the step
+        (delegates to the bundle fabric's decision log)."""
+        if self.fabric is not None:
+            return [est for _, est in self.fabric.decisions]
         return list(self.bundle.meta.get("transport_log", ()))
 
     # -- state ------------------------------------------------------------------
@@ -171,6 +179,11 @@ class Trainer:
                                for k, v in metrics.items()}
         stats.transport_decisions = [est.describe()
                                      for est in self.transport_decisions]
-        if stats.transport_decisions or transport_lib.get_telemetry().builds:
+        fabric_metrics = (self.fabric.metrics() if self.fabric is not None
+                          else None)
+        if fabric_metrics is not None and (stats.transport_decisions
+                                           or fabric_metrics["calls"]):
+            self.log(f"[trainer] fabric: {fabric_metrics}")
+        elif stats.transport_decisions or transport_lib.get_telemetry().builds:
             self.log(f"[trainer] {transport_lib.get_telemetry().summary()}")
         return stats

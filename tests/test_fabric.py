@@ -1,0 +1,340 @@
+"""Fabric invocation-surface tests (ISSUE 3).
+
+Covers the three contracts the redesign must hold:
+
+1. **Byte-faithful frame path** — ``fabric.call`` output is bitwise
+   identical to the legacy ``JamPackage.pack`` -> ``build_dispatcher``
+   chain (same frames, same dispatch results), for Local and Injected
+   flavours.
+2. **Collective fast path** — ``fabric.call("moe.ffn", ...)`` is bitwise
+   identical to the (now shimmed) ``make_jam_transport`` for all three
+   modes, and auto-mode telemetry records the *executed* (post-degrade)
+   mode under jit on both 1-dp and multi-dp meshes.
+3. **Leases** — named warm-state pool semantics: identity hits, TTL
+   expiry, eviction, tracer safety, per-lease counters in
+   ``fabric.metrics()``.
+
+Plus the deprecation contract: the legacy shims still work but warn
+(the pytest.ini filter turns any OTHER repro DeprecationWarning into an
+error — this test is the shims' exemption proof).
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs.base import MoEConfig
+from repro.core import transport as transport_lib
+from repro.core.got import GotTable
+from repro.core.message import FrameSpec
+from repro.core.registry import JamPackage, RiedPackage
+from repro.fabric import Fabric
+from repro.models import moe as moe_lib
+
+needs4 = pytest.mark.skipif(len(jax.devices()) < 4,
+                            reason="needs 4 simulated devices (conftest)")
+
+SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=8)
+SPEC_INJ = FrameSpec(got_slots=4, state_words=4, payload_words=8)
+
+
+def _handlers():
+    def jam_sum(got, state, usr):
+        (bias,) = got
+        return jnp.full((8,), jnp.sum(usr) + bias, jnp.int32)
+
+    def jam_rev(got, state, usr):
+        return usr[::-1]
+
+    def jam_scaled(got, state, usr):
+        # injected flavour: the "function state" is a 4-word scale vector
+        return (usr * state[0]).astype(jnp.int32)
+
+    return jam_sum, jam_rev, jam_scaled
+
+
+def _ried():
+    ried = RiedPackage("iface")
+    ried.export("bias")(lambda: jnp.int32(100))
+    return ried
+
+
+def _legacy_package():
+    got = GotTable()
+    _ried().install(got)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pkg = JamPackage("legacy", SPEC, result_words=8)
+        pkg_inj = JamPackage("legacy_inj", SPEC_INJ, result_words=8)
+    jam_sum, jam_rev, jam_scaled = _handlers()
+    pkg.register("sum", got_symbols=("bias",))(jam_sum)
+    pkg.register("rev")(jam_rev)
+    pkg_inj.register("scaled")(jam_scaled)
+    return got, pkg, pkg_inj
+
+
+def _fabric():
+    fabric = Fabric(name="test")
+    fabric.install(_ried())
+    jam_sum, jam_rev, jam_scaled = _handlers()
+    fabric.function("sum", got_symbols=("bias",), spec=SPEC,
+                    result_words=8)(jam_sum)
+    fabric.function("rev", spec=SPEC, result_words=8)(jam_rev)
+    fabric.function("scaled", spec=SPEC_INJ, result_words=8)(jam_scaled)
+    return fabric
+
+
+# ---------------------------------------------------------------------------
+# frame path: fabric.call ≡ JamPackage.pack -> build_dispatcher, bitwise
+# ---------------------------------------------------------------------------
+
+def test_frame_call_bitwise_matches_legacy_local():
+    got, pkg, _ = _legacy_package()
+    fabric = _fabric()
+    dispatch = pkg.build_dispatcher(got)
+    payload = jnp.arange(8, dtype=jnp.int32)
+    for name in ("sum", "rev"):
+        frame_legacy = pkg.pack(name, got, payload_words=payload)
+        frame_fabric = fabric.pack(name, payload)
+        np.testing.assert_array_equal(np.asarray(frame_legacy),
+                                      np.asarray(frame_fabric))
+        np.testing.assert_array_equal(np.asarray(dispatch(frame_legacy)),
+                                      np.asarray(fabric.call(name, payload)))
+
+
+def test_frame_call_bitwise_matches_legacy_injected():
+    got, _, pkg_inj = _legacy_package()
+    fabric = _fabric()
+    dispatch = pkg_inj.build_dispatcher(got)
+    payload = jnp.arange(8, dtype=jnp.int32)
+    state = jnp.full((4,), 7, jnp.int32)
+    frame_legacy = pkg_inj.pack("scaled", got, payload_words=payload,
+                                state_words=state)
+    np.testing.assert_array_equal(
+        np.asarray(frame_legacy),
+        np.asarray(fabric.pack("scaled", payload, state=state)))
+    np.testing.assert_array_equal(
+        np.asarray(dispatch(frame_legacy)),
+        np.asarray(fabric.call("scaled", payload, state=state,
+                               placement="injected")))
+    # placement="auto" on the frame path: injected iff state is shippable
+    np.testing.assert_array_equal(
+        np.asarray(fabric.call("scaled", payload, state=state)),
+        np.asarray(dispatch(frame_legacy)))
+
+
+def test_frame_placement_errors():
+    fabric = _fabric()
+    payload = jnp.arange(8, dtype=jnp.int32)
+    with pytest.raises(ValueError, match="resident state"):
+        fabric.call("sum", payload, state=payload, placement="local")
+    with pytest.raises(ValueError, match="state_words > 0"):
+        fabric.call("rev", payload, placement="injected")
+    with pytest.raises(ValueError, match="requires"):
+        fabric.call("scaled", payload, placement="injected")
+    with pytest.raises(KeyError, match="no function"):
+        fabric.call("missing", payload)
+
+
+def test_result_width_validated_at_register_time():
+    fabric = _fabric()
+    # no GOT symbols: fails immediately at registration
+    with pytest.raises(ValueError, match="result words"):
+        fabric.function("bad", spec=SPEC, result_words=8)(
+            lambda got, state, usr: usr[:4])
+    # GOT symbols already resolvable: also fails at registration
+    with pytest.raises(ValueError, match="result words"):
+        fabric.function("bad2", got_symbols=("bias",), spec=SPEC,
+                        result_words=8)(
+            lambda got, state, usr: jnp.zeros((3,), jnp.int32))
+    # and neither failure may poison the lane: functions sharing the same
+    # (spec, result_words) geometry must keep dispatching afterwards
+    payload = jnp.arange(8, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(fabric.call("rev", payload)), np.asarray(payload[::-1]))
+
+
+def test_legacy_package_width_validated_before_trace():
+    """JamPackage: got-dependent handlers are validated at dispatcher build
+    (with resolved symbols) — a clear ValueError, not a trace-time assert."""
+    got = GotTable()
+    got.bind("bias", jnp.int32(1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        pkg = JamPackage("p", SPEC, result_words=8)
+    pkg.register("wrong", got_symbols=("bias",))(
+        lambda g, s, u: jnp.zeros((5,), jnp.int32))
+    with pytest.raises(ValueError, match="5 result words"):
+        pkg.build_dispatcher(got)
+    # and got-independent handlers fail at register() itself
+    with pytest.raises(ValueError, match="result words"):
+        pkg.register("wrong2")(lambda g, s, u: u[:2])
+
+
+# ---------------------------------------------------------------------------
+# collective path: fabric.call ≡ make_jam_transport, bitwise, all modes
+# ---------------------------------------------------------------------------
+
+_M = MoEConfig(num_experts=8, top_k=2, expert_ff=64, capacity_factor=2.0)
+_D = 32
+
+
+def _moe_params(key):
+    ks = jax.random.split(key, 5)
+    return {
+        "router": jax.random.normal(ks[0], (_D, _M.num_experts)) * 0.3,
+        "w_gate": jax.random.normal(ks[1], (_M.num_experts, _D, _M.expert_ff)) * 0.05,
+        "w_up": jax.random.normal(ks[2], (_M.num_experts, _D, _M.expert_ff)) * 0.05,
+        "w_down": jax.random.normal(ks[3], (_M.num_experts, _M.expert_ff, _D)) * 0.05,
+    }, jax.random.normal(ks[4], (4, 16, _D)) * 0.5
+
+
+@needs4
+@pytest.mark.parametrize("dp,tp", ((1, 4), (2, 2)))
+def test_fabric_moe_bitwise_matches_legacy_transport(dp, tp):
+    from repro.core.dispatch import make_jam_transport
+    params, x = _moe_params(jax.random.PRNGKey(0))
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(dp, tp),
+                ("data", "model"))
+    y_ref, _ = moe_lib.moe_ffn_oracle(params, x, _M)
+    with mesh:
+        fabric = Fabric(mesh, dp_axes=("data",), tp_axis="model")
+        fabric.moe_transport(mode="local")
+        for mode in ("local", "injected", "auto"):
+            with pytest.warns(DeprecationWarning, match="make_jam_transport"):
+                tr = make_jam_transport(mesh, dp_axes=("data",),
+                                        tp_axis="model", mode=mode)
+            y_legacy, aux_legacy = tr(params, x, _M, "silu")
+            y_fab, aux_fab = fabric.call("moe.ffn", x, state=params,
+                                         placement=mode, moe=_M, act="silu")
+            np.testing.assert_array_equal(np.asarray(y_legacy),
+                                          np.asarray(y_fab), err_msg=mode)
+            np.testing.assert_array_equal(np.asarray(aux_legacy),
+                                          np.asarray(aux_fab), err_msg=mode)
+            assert float(jnp.abs(y_fab - y_ref).max()) < 5e-4, mode
+
+
+@needs4
+@pytest.mark.parametrize("dp,tp", ((1, 4), (2, 2)))
+def test_auto_telemetry_under_jit_records_executed_mode(dp, tp):
+    """Auto-mode decisions recorded at trace time must name the mode that
+    actually executes (post-degrade), on 1-dp and multi-dp meshes, in both
+    the caller's log_choice and fabric.metrics()."""
+    transport_lib.reset_telemetry()
+    params, _ = _moe_params(jax.random.PRNGKey(1))
+    mesh = Mesh(np.array(jax.devices()[:4]).reshape(dp, tp),
+                ("data", "model"))
+    with mesh:
+        fabric = Fabric(mesh, dp_axes=("data",), tp_axis="model")
+        log = []
+        transport = fabric.moe_transport(mode="auto", log_choice=log)
+        step = jax.jit(lambda p, xx: transport(p, xx, _M, "silu"))
+
+        # tokens divide over tp: auto's preference stands (small shape
+        # => the cost model picks 'local')
+        x_ok = jax.random.normal(jax.random.PRNGKey(2), (dp, 16 * tp, _D))
+        step(params, x_ok)
+        assert log[-1].chosen == "local"
+
+        # 6 global tokens: the per-dp-shard count (6/dp) cannot split over
+        # tp -> whatever auto preferred, the EXECUTED mode is 'tp'
+        x_bad = jax.random.normal(jax.random.PRNGKey(3), (dp, 6 // dp, _D))
+        step(params, x_bad)
+        assert log[-1].chosen == "tp"
+
+        recorded = [est.chosen for _, est in fabric.decisions]
+        assert recorded == ["local", "tp"]
+        met = fabric.metrics()
+        assert met["decisions"][0].endswith("local")
+        assert met["decisions"][1].endswith("tp")
+        assert met["calls"]["moe.ffn"] == 2
+        # the process-wide telemetry saw the same executed modes
+        tel_modes = [est.chosen
+                     for _, est in transport_lib.get_telemetry().decisions]
+        assert tel_modes == ["local", "tp"]
+
+
+# ---------------------------------------------------------------------------
+# leases
+# ---------------------------------------------------------------------------
+
+def test_lease_identity_hit_and_ttl_expiry():
+    fabric = Fabric(name="lease-test")
+    state = (jnp.ones(3), jnp.zeros(2))
+    built = []
+
+    def mat():
+        built.append(1)
+        return len(built)
+
+    assert fabric.lease("warm", state, ttl_calls=2, materialize=mat) == 1
+    assert fabric.lease("warm", state, ttl_calls=2, materialize=mat) == 1
+    # third acquire: TTL exhausted -> explicit expiry -> re-materialize
+    assert fabric.lease("warm", state, ttl_calls=2, materialize=mat) == 2
+    c = fabric.leases.get("warm").counters()
+    assert (c["hits"], c["misses"], c["expirations"]) == (1, 2, 1)
+
+    # new identity (equal values) misses: stale state must not be served
+    state2 = (jnp.ones(3), jnp.zeros(2))
+    assert fabric.lease("warm", state2, ttl_calls=2, materialize=mat) == 3
+
+    assert fabric.evict("warm") is True
+    assert fabric.lease("warm", state2, ttl_calls=2, materialize=mat) == 4
+    assert "warm" in fabric.metrics()["leases"]
+
+
+def test_lease_never_leaks_tracers_to_eager_calls():
+    """A jit closing over concrete state produces traced values from
+    concrete keys; leasing those would hand a dead trace's tracer to a
+    later eager call."""
+    fabric = Fabric(name="tracer-test")
+    w = jnp.ones(3)
+
+    @jax.jit
+    def f(x):
+        full = fabric.lease("g", (w,), materialize=lambda: (w * 2 + x,))
+        return full[0]
+
+    np.testing.assert_allclose(np.asarray(f(jnp.ones(3))), 3.0)
+    out = fabric.lease("g", (w,), materialize=lambda: ("fresh",))
+    assert out == ("fresh",)
+    assert fabric.lease("g", (w,), materialize=lambda: ("again",)) == ("fresh",)
+
+
+def test_lease_ttl_validation():
+    fabric = Fabric(name="ttl-test")
+    with pytest.raises(ValueError, match="ttl_calls"):
+        fabric.lease("x", (jnp.ones(1),), ttl_calls=0)
+
+
+# ---------------------------------------------------------------------------
+# deprecation contract (the pytest.ini exemptions, proven to fire)
+# ---------------------------------------------------------------------------
+
+def test_jampackage_shim_warns():
+    with pytest.warns(DeprecationWarning,
+                      match="repro.core.registry.JamPackage is deprecated"):
+        JamPackage("shim", SPEC, result_words=8)
+
+
+def test_make_jam_transport_shim_warns():
+    from repro import compat
+    from repro.core.dispatch import make_jam_transport
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with pytest.warns(
+            DeprecationWarning,
+            match="repro.core.dispatch.make_jam_transport is deprecated"):
+        make_jam_transport(mesh, dp_axes=("data",), tp_axis="model")
+
+
+def test_duplicate_function_name_rejected():
+    fabric = _fabric()
+    with pytest.raises(ValueError, match="already registered"):
+        fabric.function("sum", spec=SPEC, result_words=8)(
+            lambda g, s, u: u)
+    with pytest.raises(ValueError, match="already registered"):
+        fabric.register_collective("sum", lambda *a, **k: None,
+                                   placements=("local",))

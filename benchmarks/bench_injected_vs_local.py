@@ -29,7 +29,7 @@ import jax.numpy as jnp
 from repro.core import injection
 from repro.core.message import FrameSpec
 from repro.fabric import Fabric
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, time_fn, write_bench_json
 
 D_MODEL, D_FF = 32, 64                     # jam-sized expert (4 KiB state)
 PAYLOAD_TOKENS = (1, 8, 64, 256, 1024)
@@ -105,6 +105,13 @@ def main() -> List[Row]:
         "injected_vs_local/fabric_telemetry", 0.0,
         f"calls={sum(calls.values())} lease_hits={lease.hits} "
         f"lease_misses={lease.misses}"))
+    write_bench_json(
+        "injected_vs_local",
+        config={"d_model": D_MODEL, "d_ff": D_FF,
+                "payload_tokens": list(PAYLOAD_TOKENS)},
+        rows=rows,
+        extra_metrics={"lease_hits": lease.hits,
+                       "lease_misses": lease.misses})
     return rows
 
 

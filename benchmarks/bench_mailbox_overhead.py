@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.core.message import FrameSpec, frame_valid
 from repro.fabric import Fabric
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, time_fn, write_bench_json
 
 PAYLOAD_WORDS = (16, 64, 256, 1024, 4096, 16384)
 
@@ -56,6 +56,8 @@ def main() -> List[Row]:
             f"mailbox_overhead/am_put/{4*pw}B", t_am,
             f"frame_ovh={ovh_bytes}B({100.0*ovh_bytes/spec.total_bytes:.1f}%) "
             f"lat_ovh={ovh_pct:+.1f}%"))
+    write_bench_json("mailbox_overhead",
+                     config={"payload_words": list(PAYLOAD_WORDS)}, rows=rows)
     return rows
 
 

@@ -12,7 +12,7 @@ import json
 import os
 from typing import List
 
-from benchmarks.common import Row
+from benchmarks.common import Row, write_bench_json
 
 FILES = ("dryrun_single.json", "dryrun_multi.json")
 
@@ -56,6 +56,7 @@ def main() -> List[Row]:
                     f"collective={rf['collective_s']*1e3:.2f}ms "
                     f"bottleneck={rf['bottleneck']} "
                     f"frac={rf['roofline_frac']:.3f}"))
+    write_bench_json("roofline", config={"files": list(FILES)}, rows=rows)
     return rows
 
 

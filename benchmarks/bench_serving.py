@@ -9,9 +9,10 @@ sequences are shorter than ``max_len`` (the common serving case).
 Reports tokens/s, p50/p99 time-to-first-token, and peak sustained
 concurrency for both servers, plus per-request output identity against the
 exact contiguous path (a slots=1 fixed-slot server, which has no batch
-position skew — docs/serving.md). Results also land in
-``serving_bench.json`` (ISSUE 2 acceptance: paged concurrency >= 2x at
-equal budget, outputs identical).
+position skew — docs/serving.md). Results land in the standardized
+``BENCH_serving.json`` (ISSUE 2 acceptance: paged concurrency >= 2x at
+equal budget, outputs identical); ``serving_bench.json`` remains as a
+deprecated compat copy of the report body for one PR.
 
   PYTHONPATH=src python -m benchmarks.bench_serving
 """
@@ -27,7 +28,7 @@ from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
 from repro.runtime.server import PagedServer, Request, Server
-from benchmarks.common import Row
+from benchmarks.common import Row, write_bench_json
 
 N_REQUESTS = 16
 PROMPT_LEN = 8
@@ -37,7 +38,7 @@ SLOTS_CONTIG = 4
 BLOCK_SIZE = 8
 # equal budget: 4 slots * 96 rows = 384 pool tokens = 48 blocks
 NUM_BLOCKS = SLOTS_CONTIG * MAX_LEN // BLOCK_SIZE
-JSON_PATH = "serving_bench.json"
+COMPAT_JSON_PATH = "serving_bench.json"       # deprecated: one-PR compat copy
 
 
 def _requests(prompts) -> List[Request]:
@@ -127,15 +128,15 @@ def main() -> List[Row]:
                   **{k: v for k, v in res_p.items() if k != "outputs"}},
         "concurrency_ratio": concurrency_p / concurrency_c,
         "outputs_match_reference": paged_exact == N_REQUESTS,
+        "paged_kernel": pm["paged_kernel"],
+        "live_token_fraction_mean": pm["live_token_fraction_mean"],
     }
-    with open(JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
+    report["acceptance"] = {
+        "concurrency_ok": report["concurrency_ratio"] >= 2.0,
+        "outputs_ok": report["outputs_match_reference"],
+    }
 
-    assert report["concurrency_ratio"] >= 2.0, report["concurrency_ratio"]
-    assert report["outputs_match_reference"], \
-        f"paged outputs diverged from reference ({paged_exact}/{N_REQUESTS})"
-
-    return [
+    rows = [
         Row("serving_contig_tok_s", res_c["wall_s"] * 1e6 / max(1, res_c["tokens"]),
             f"tok/s={res_c['tokens_per_s']:.1f} "
             f"ttft_p50={res_c['ttft_p50_s']*1e3:.0f}ms "
@@ -149,9 +150,26 @@ def main() -> List[Row]:
             f"x{report['concurrency_ratio']:.1f} vs contig, "
             f"exact={paged_exact}/{N_REQUESTS}"),
     ]
+    # both reports (with the acceptance verdicts inside) write BEFORE the
+    # asserts so a failing run still leaves consistent diagnostics on disk
+    with open(COMPAT_JSON_PATH, "w") as f:
+        json.dump(report, f, indent=2)
+    write_bench_json(
+        "serving",
+        config={"n_requests": N_REQUESTS, "prompt_len": PROMPT_LEN,
+                "max_new": MAX_NEW, "max_len": MAX_LEN,
+                "slots_contig": SLOTS_CONTIG, "block_size": BLOCK_SIZE,
+                "num_blocks": NUM_BLOCKS},
+        rows=rows, extra_metrics={"report": report})
+
+    assert report["acceptance"]["concurrency_ok"], report["concurrency_ratio"]
+    assert report["acceptance"]["outputs_ok"], \
+        f"paged outputs diverged from reference ({paged_exact}/{N_REQUESTS})"
+    return rows
 
 
 if __name__ == "__main__":
     for row in main():
         print(row.csv())
-    print(f"# full report: {JSON_PATH}")
+    print("# full report: BENCH_serving.json "
+          f"(+ deprecated compat copy {COMPAT_JSON_PATH})")

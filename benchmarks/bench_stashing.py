@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.moe_jam import moe_jam_ffn, moe_jam_ffn_ref
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, time_fn, write_bench_json
 
 SHAPES = (
     # (E, C, D, F)
@@ -63,6 +63,8 @@ def main() -> List[Row]:
             f"{name}/stash_vmem", t_stash,
             f"hbm={fused/2**20:.2f}MiB saving={unfused/fused:.2f}x "
             f"(memory-term reduction)"))
+    write_bench_json("stashing", config={"shapes": [list(s) for s in SHAPES]},
+                     rows=rows)
     return rows
 
 

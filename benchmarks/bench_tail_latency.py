@@ -21,7 +21,7 @@ from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
 from repro.configs.registry import get_smoke
 from repro.runtime.fault import FaultInjector
 from repro.runtime.trainer import Trainer, TrainerConfig
-from benchmarks.common import Row
+from benchmarks.common import Row, write_bench_json
 
 STEPS = 60
 
@@ -61,6 +61,7 @@ def main() -> List[Row]:
             f"p99.9={stats.p999_s*1e6:.0f}us "
             f"tail_spread={100*stats.tail_spread:.0f}% "
             f"stragglers_flagged={stats.stragglers}"))
+    write_bench_json("tail_latency", config={"steps": STEPS}, rows=rows)
     return rows
 
 

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from repro.core.mailbox import spin_wait_poll, wfe_wait
 from repro.core.message import FrameSpec
 from repro.fabric import Fabric
-from benchmarks.common import Row, time_fn
+from benchmarks.common import Row, time_fn, write_bench_json
 
 PAYLOADS = (64, 1024, 8192)            # words: 256B, 4KB, 32KB frames
 
@@ -70,6 +70,8 @@ def main() -> List[Row]:
             f"wfe/wfe/{4*pw}B", t_wfe,
             f"spin_ops={cyc_wfe} reduction={cyc_poll/cyc_wfe:.1f}x "
             f"lat_delta={100.0*(t_wfe-t_poll)/max(t_poll,1e-9):+.1f}%"))
+    write_bench_json("wfe", config={"payload_words": list(PAYLOADS)},
+                     rows=rows)
     return rows
 
 

@@ -1,17 +1,32 @@
-"""Benchmark harness plumbing: timing + CSV row emission.
+"""Benchmark harness plumbing: timing, CSV row emission, and the
+machine-readable ``BENCH_<name>.json`` report schema.
 
 Every bench_* module exposes ``main() -> list[Row]``; ``run.py`` aggregates.
 CPU wall-clock here is *rank-correlated* evidence (the real target is TPU —
 see DESIGN.md §2 assumption 3); byte/op-count "derived" columns are the
 hardware-independent reproduction of each paper figure.
+
+Every bench also writes ``BENCH_<name>.json`` at the repo root through
+``write_bench_json`` so the perf trajectory across PRs is machine-readable.
+One common schema::
+
+    {"name": ..., "schema_version": 1, "timestamp": <iso-8601 utc>,
+     "config": {...static knobs...},
+     "metrics": {"rows": [{"name", "us_per_call", "derived"}, ...], ...}}
 """
 from __future__ import annotations
 
 import dataclasses
+import datetime
+import json
+import pathlib
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
+
+BENCH_SCHEMA_VERSION = 1
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 
 @dataclasses.dataclass
@@ -44,3 +59,30 @@ def time_fn(fn: Callable[[], object], *, warmup: int = 3, iters: int = 20,
 def emit(rows: List[Row]) -> None:
     for r in rows:
         print(r.csv(), flush=True)
+
+
+def bench_json_path(name: str) -> pathlib.Path:
+    return REPO_ROOT / f"BENCH_{name}.json"
+
+
+def write_bench_json(name: str, *, config: Dict, rows: Sequence[Row] = (),
+                     extra_metrics: Optional[Dict] = None) -> pathlib.Path:
+    """Write the standardized ``BENCH_<name>.json`` report at the repo root.
+
+    ``rows`` land under ``metrics["rows"]``; bench-specific structured
+    results (full reports, sweeps) go in ``extra_metrics`` and are merged
+    alongside. Returns the written path.
+    """
+    metrics: Dict = {"rows": [dataclasses.asdict(r) for r in rows]}
+    if extra_metrics:
+        metrics.update(extra_metrics)
+    payload = {
+        "name": name,
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "timestamp": datetime.datetime.now(datetime.timezone.utc).isoformat(),
+        "config": config,
+        "metrics": metrics,
+    }
+    path = bench_json_path(name)
+    path.write_text(json.dumps(payload, indent=2, default=str) + "\n")
+    return path

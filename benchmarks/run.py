@@ -3,6 +3,10 @@
   PYTHONPATH=src python -m benchmarks.run [--only substr]
 
 Prints ``name,us_per_call,derived`` CSV (stdout), one row per measurement.
+Every module also writes its own standardized ``BENCH_<name>.json`` at the
+repo root (benchmarks/common.py schema), and this harness writes an
+aggregate ``BENCH_run.json`` over everything it ran.
+
 Paper figure -> module map (DESIGN.md §7):
 
   Fig 5/6   bench_mailbox_overhead    AM put vs raw put, without-execution
@@ -11,17 +15,20 @@ Paper figure -> module map (DESIGN.md §7):
   Fig 11/12 bench_tail_latency        p50/p99.9/tail-spread under load
   Fig 13/14 bench_wfe                 semaphore wait vs spin-poll cycles
   §Roofline bench_roofline            3-term roofline per dry-run cell
+  §VII-B    bench_paged_attention     stash-resident kernel occupancy sweep
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 import traceback
 
 from benchmarks import (bench_injected_vs_local, bench_mailbox_overhead,
-                        bench_roofline, bench_serving, bench_stashing,
-                        bench_tail_latency, bench_wfe)
+                        bench_paged_attention, bench_roofline, bench_serving,
+                        bench_stashing, bench_tail_latency, bench_wfe)
+from benchmarks.common import write_bench_json
 
 MODULES = (
     ("fig5_6", bench_mailbox_overhead),
@@ -31,6 +38,7 @@ MODULES = (
     ("fig13_14", bench_wfe),
     ("roofline", bench_roofline),
     ("serving", bench_serving),
+    ("paged_attention", bench_paged_attention),
 )
 
 
@@ -42,18 +50,23 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failed = []
+    by_module = {}
     for tag, mod in MODULES:
         if args.only and args.only not in tag:
             continue
         t0 = time.time()
         try:
-            for row in mod.main():
+            rows = mod.main()
+            by_module[tag] = [dataclasses.asdict(r) for r in rows]
+            for row in rows:
                 print(row.csv(), flush=True)
         except Exception as e:  # noqa: BLE001 - report, keep harness going
             failed.append(tag)
             print(f"{tag},0.00,ERROR {type(e).__name__}: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
         print(f"# {tag} done in {time.time()-t0:.1f}s", flush=True)
+    write_bench_json("run", config={"only": args.only},
+                     extra_metrics={"modules": by_module, "failed": failed})
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

@@ -6,6 +6,9 @@
   moe_jam/          fused expert-FFN over dispatched capacity buckets (the
                     VMEM-stash execution of injected/local jams)
   flash_attention/  blockwise online-softmax attention (32k prefill)
+  paged_attention/  stash-resident block-table attention for the paged
+                    serving step — live KV blocks stream pool->VMEM, the
+                    dense logical view is never materialized (§VII-B)
   ssm_scan/         chunked selective scan (hymba's Mamba path)
 
 Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd

@@ -153,22 +153,39 @@ def _sum_kernel(frames_ref, sums_ref, *, usr_off: int, payload_words: int):
     sums_ref[:, 0] = jnp.sum(usr, axis=1, dtype=jnp.int32)
 
 
+def _drain_geometry(n: int, block_n: int) -> Tuple[int, int]:
+    """(tile rows, padded N). N pads up to a tile multiple instead of
+    degrading the tile: the old linear search for a divisor of N walked
+    ``block_n`` down to 1 for prime N, so a 127-frame drain ran a 127-step
+    grid of width-1 tiles. Tiles stay sublane-aligned (multiples of 8),
+    including for caller-passed ``block_n`` that isn't one."""
+    aligned = -(-n // 8) * 8
+    bn = max(8, min(block_n, aligned) // 8 * 8)
+    return bn, -(-n // bn) * bn
+
+
 def sum_drain_pallas(frames: jax.Array, *, usr_off: int, payload_words: int,
                      block_n: int = 128, interpret: bool = False) -> jax.Array:
-    """Server-Side Sum over (N, W) frames -> (N, 1) sums (HBM -> VMEM tile)."""
+    """Server-Side Sum over (N, W) frames -> (N, 1) sums (HBM -> VMEM tile).
+
+    N that doesn't divide into ``block_n`` tiles is zero-padded up to the
+    next tile multiple — zero rows sum to zero and are sliced off, so no
+    in-kernel mask is needed.
+    """
     n, w = frames.shape
-    bn = min(block_n, n)
-    while n % bn:
-        bn -= 1
-    return pl.pallas_call(
+    bn, n_pad = _drain_geometry(n, block_n)
+    if n_pad != n:
+        frames = jnp.pad(frames, ((0, n_pad - n), (0, 0)))
+    out = pl.pallas_call(
         functools.partial(_sum_kernel, usr_off=usr_off,
                           payload_words=payload_words),
-        grid=(n // bn,),
+        grid=(n_pad // bn,),
         in_specs=[pl.BlockSpec((bn, w), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((bn, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((n_pad, 1), jnp.int32),
         interpret=interpret,
     )(frames)
+    return out[:n]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,8 @@
+from repro.kernels.paged_attention.ops import (KERNEL_KINDS,
+                                               modeled_hbm_bytes,
+                                               paged_attention,
+                                               resolve_kernel)
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["KERNEL_KINDS", "modeled_hbm_bytes", "paged_attention",
+           "paged_attention_ref", "resolve_kernel"]

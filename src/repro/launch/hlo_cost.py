@@ -99,6 +99,26 @@ class HloCost:
     n_computations: int = 0
 
 
+def buffer_dims(hlo_text: str) -> set:
+    """Every distinct array shape (dims tuple) appearing in the module.
+
+    Used by the paged-attention acceptance check: the ref path's compiled
+    step carries a ``(slots, max_blocks*block_size, K, D)`` logical-KV
+    buffer; the Pallas step must not (tests/test_paged_attention.py).
+    """
+    out = set()
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dims = m.group(2)
+        out.add(tuple(int(d) for d in dims.split(",") if d) if dims else ())
+    return out
+
+
+def has_buffer_shape(hlo_text: str, dims) -> bool:
+    """True when any instruction in the module touches a buffer whose shape
+    is exactly ``dims`` (order-sensitive, dtype-agnostic)."""
+    return tuple(dims) in buffer_dims(hlo_text)
+
+
 def _type_bytes(type_str: str) -> int:
     total = 0
     for m in _SHAPE_RE.finditer(type_str):

@@ -41,6 +41,12 @@ def main() -> None:
                    help="paged: tokens per block")
     p.add_argument("--chunk", type=int, default=8,
                    help="paged: prefill tokens per request per tick")
+    p.add_argument("--paged-kernel", choices=("auto", "pallas", "ref"),
+                   default="auto",
+                   help="paged attention path: the stash-resident Pallas "
+                        "block-table kernel, the gather-then-dense "
+                        "reference, or auto (pallas wherever TPU semantics "
+                        "are available)")
     p.add_argument("--metrics-json", action="store_true",
                    help="print the final Server.metrics() dict as JSON")
     args = p.parse_args()
@@ -67,7 +73,8 @@ def main() -> None:
                 (args.slots * args.max_len // 2) // args.block_size)
             server = PagedServer(cfg, run, mesh, slots=args.slots,
                                  max_len=args.max_len, num_blocks=num_blocks,
-                                 block_size=args.block_size, chunk=args.chunk)
+                                 block_size=args.block_size, chunk=args.chunk,
+                                 kernel=args.paged_kernel)
         else:
             server = Server(cfg, run, mesh, slots=args.slots,
                             max_len=args.max_len)
@@ -85,6 +92,11 @@ def main() -> None:
     print(f"[serve:{kind}] {len(done)}/{args.requests} requests, "
           f"{total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {server.ticks} ticks)")
+    if args.paged:
+        m = server.metrics()
+        print(f"[serve:paged] attention kernel={m['paged_kernel']} "
+              f"live-token fraction last={m['live_token_fraction']:.3f} "
+              f"mean={m['live_token_fraction_mean']:.3f}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
     if server.fabric is not None:

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import AttentionConfig
+from repro.kernels import paged_attention as paged_kernel
 from repro.models.common import ParamBuilder, rms_norm
 from repro.models.kvcache import KVCache, MLACache, PagedKVCache, PagedLayout
 from repro.models.rope import apply_mrope, apply_rope
@@ -299,22 +300,26 @@ def gqa_paged_attention(
     cache: PagedKVCache,
     layout: PagedLayout,
     window: Optional[int] = None,
+    kernel: str = "auto",
 ) -> Tuple[jax.Array, PagedKVCache]:
     """One serving step through a paged cache.
 
     Each batch row is one request slot advancing ``n_valid`` tokens whose
     absolute positions start at ``starts`` — decode rows advance 1 token,
     chunked-prefill rows up to C, idle rows 0. New k/v scatter into the
-    shared pool through the block table; scores run against the request's
-    gathered (M * block_size) logical view. Columns beyond ``n_valid``
-    produce garbage outputs that the caller discards (their cache writes
-    are dropped), which is what lets decode and prefill share one compiled
-    shape — the ISSUE's "decode-shaped step, no per-bucket prefill jits".
+    shared pool through the block table; scores then run either through the
+    stash-resident Pallas kernel (``kernel="pallas"`` — live blocks stream
+    pool->VMEM, the logical view never exists in HBM) or the gather-then-
+    dense oracle (``kernel="ref"``). ``"auto"`` picks pallas wherever TPU
+    semantics are available (``kernels.paged_attention.resolve_kernel``).
+    Columns beyond ``n_valid`` produce garbage outputs that the caller
+    discards (their cache writes are dropped), which is what lets decode and
+    prefill share one compiled shape — the ISSUE-2 "decode-shaped step, no
+    per-bucket prefill jits".
     """
     assert not a.mrope, "paged serving does not support mrope archs yet"
     B, C, _ = x.shape
     H, K, D = a.num_heads, a.num_kv_heads, a.head_dim
-    G = H // K
     positions = layout.token_positions(C)                   # (B, C)
 
     q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
@@ -325,24 +330,13 @@ def gqa_paged_attention(
         k = apply_rope(k, positions, a.rope_theta, a.rotary_pct)
 
     new_cache = cache.write(k, v, layout)
-    k_all, v_all = new_cache.gather(layout.block_tables)    # (B, T, K, D)
-    T = k_all.shape[1]
-
-    kv_pos = jnp.arange(T, dtype=jnp.int32)
-    rel = positions[:, :, None] - kv_pos[None, None, :]     # (B, C, T)
-    mask = rel >= 0                                          # causal
-    if window is not None:
-        mask &= rel < window
-    # never read past the tokens resident after this step's writes (keeps
-    # stale pool rows from reused blocks out of even discarded columns)
-    seq_end = layout.starts + layout.n_valid
-    mask &= kv_pos[None, None, :] < seq_end[:, None, None]
-    mask = mask[:, None, None, :, :]                         # (B,1,1,C,T)
-
-    qg = q.reshape(B, C, K, G, D)
-    out = _sdpa(qg, k_all.astype(x.dtype), v_all.astype(x.dtype), mask,
-                1.0 / math.sqrt(D))
-    out = out.reshape(B, C, H, D)
+    kind = paged_kernel.resolve_kernel(kernel)
+    fn = (paged_kernel.paged_attention if kind == "pallas"
+          else paged_kernel.paged_attention_ref)
+    out = fn(q.astype(x.dtype), new_cache.k_pool, new_cache.v_pool,
+             layout.block_tables, layout.starts, layout.n_valid,
+             block_size=layout.block_size, window=window,
+             scale=1.0 / math.sqrt(D))
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
     return y, new_cache
 

@@ -122,13 +122,14 @@ def apply_block(
     mrope_positions: Optional[jax.Array] = None,
     moe_transport=None,
     paged: Optional[PagedLayout] = None,
+    paged_kernel: str = "auto",
 ) -> Tuple[jax.Array, Cache, jax.Array]:
     a = cfg.attention
     zero = jnp.zeros((), jnp.float32)
 
     if paged is not None:
         return _apply_block_paged(bt, params, x, cfg, cache, paged,
-                                  moe_transport)
+                                  moe_transport, paged_kernel)
 
     if bt == "mlstm":
         h = rms_norm(x, params["ln1"], cfg.norm_eps)
@@ -210,11 +211,13 @@ def apply_block(
 
 def _apply_block_paged(bt: str, params, x: jax.Array, cfg: ModelConfig,
                        cache: Cache, paged: PagedLayout,
-                       moe_transport) -> Tuple[jax.Array, Cache, jax.Array]:
+                       moe_transport, paged_kernel: str = "auto"
+                       ) -> Tuple[jax.Array, Cache, jax.Array]:
     """Paged-serving variant: GQA attention through the block pool.
 
     Same residual structure as the contiguous path; only the attention
-    sub-layer differs (pool scatter/gather instead of contiguous append).
+    sub-layer differs (pool scatter + the stash-resident kernel or its
+    gather-then-dense oracle instead of contiguous append).
     """
     if bt not in PAGED_BLOCK_TYPES:
         raise ValueError(f"block type {bt!r} has no paged path")
@@ -224,7 +227,8 @@ def _apply_block_paged(bt: str, params, x: jax.Array, cfg: ModelConfig,
     pkv = PagedKVCache(cache["k"], cache["v"], paged.block_size)
     y_attn, npkv = attn.gqa_paged_attention(params["attn"], h, a,
                                             cache=pkv, layout=paged,
-                                            window=window)
+                                            window=window,
+                                            kernel=paged_kernel)
     x = x + y_attn
     h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
     if bt.endswith("_moe"):

@@ -180,11 +180,19 @@ class PagedKVCache:
                             flat_v.reshape(self.v_pool.shape),
                             self.block_size)
 
-    def gather(self, block_tables: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    def gather(self, block_tables: jax.Array,
+               seq_lens: Optional[jax.Array] = None):
         """Materialize each request's logical (T, K, D) view, T = M * bs.
 
         Unallocated table slots (-1) read block 0 — callers mask positions
         ``>= length`` so the garbage never reaches the softmax unmasked.
+
+        With ``seq_lens`` (per-request resident-token counts, (B,)), also
+        returns ``max_resident``: the longest live sequence rounded up to
+        ``block_size`` and clamped to T. Eager callers (the kernel oracle,
+        tests) use it to bound the view to live tokens instead of always
+        ``max_blocks * block_size``; under jit it is a tracer and the full
+        fixed-shape view stands.
         """
         bs = self.block_size
         B, M = block_tables.shape
@@ -194,7 +202,11 @@ class PagedKVCache:
         tail = self.k_pool.shape[2:]
         flat_k = self.k_pool.reshape(-1, *tail)
         flat_v = self.v_pool.reshape(-1, *tail)
-        return flat_k[rows], flat_v[rows]
+        if seq_lens is None:
+            return flat_k[rows], flat_v[rows]
+        max_resident = jnp.minimum(
+            -(-jnp.max(seq_lens.astype(jnp.int32)) // bs) * bs, M * bs)
+        return flat_k[rows], flat_v[rows], max_resident
 
 
 @jax.tree_util.register_dataclass

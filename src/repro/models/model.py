@@ -197,6 +197,7 @@ def forward(
     compute_dtype=jnp.bfloat16,
     constrain=None,                          # activation sharding constraint
     paged: Optional[PagedLayout] = None,     # serving: block-table cache view
+    paged_kernel: str = "auto",              # paged attention: pallas|ref|auto
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     # ``constrain(x)`` pins (B, S, d) activations to the batch sharding at
     # the embedding, between layer groups, and inside the scanned body —
@@ -256,7 +257,8 @@ def forward(
                     bt, lp[p_idx],
                     x_c, cfg, cache=c_in, length=length,
                     positions=positions, mrope_positions=mrope_positions,
-                    moe_transport=moe_transport, paged=paged)
+                    moe_transport=moe_transport, paged=paged,
+                    paged_kernel=paged_kernel)
                 x_c = constrain(x_c)
                 new_lc.append(c_out)
             return (x_c, aux_c + aux), new_lc

@@ -289,7 +289,7 @@ class PagedServer(_ServerBase):
     def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                  slots: int, max_len: int, num_blocks: int,
                  block_size: int = 16, chunk: int = 8,
-                 eos_id: Optional[int] = None):
+                 eos_id: Optional[int] = None, kernel: str = "auto"):
         super().__init__(cfg, run, mesh)
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.block_size, self.chunk = block_size, chunk
@@ -307,7 +307,15 @@ class PagedServer(_ServerBase):
         self.bundle = make_paged_serve_step(
             cfg, run_decode, mesh, slots=slots, chunk=chunk,
             num_blocks=num_blocks, block_size=block_size,
-            max_blocks_per_seq=self.max_blocks_per_seq)
+            max_blocks_per_seq=self.max_blocks_per_seq, kernel=kernel)
+        # resolved attention path ("pallas" | "ref") + per-step live-token
+        # fraction: how much of the pool's token capacity is actually
+        # resident each tick — the occupancy knob the stash-resident kernel's
+        # bytes-read win scales with (docs/serving.md)
+        self.paged_kernel: str = self.bundle.meta["paged_kernel"]
+        self._live_frac_last = 0.0
+        self._live_frac_sum = 0.0
+        self._live_frac_ticks = 0
         self.step = jax.jit(self.bundle.fn,
                             in_shardings=self.bundle.in_shardings,
                             out_shardings=self.bundle.out_shardings,
@@ -344,6 +352,11 @@ class PagedServer(_ServerBase):
             "peak_active_slots": self.peak_active,
             "queued": len(self.queue),
             "completed": len(self.completed),
+            "paged_kernel": self.paged_kernel,
+            "live_token_fraction": self._live_frac_last,
+            "live_token_fraction_mean": (
+                self._live_frac_sum / self._live_frac_ticks
+                if self._live_frac_ticks else 0.0),
             "num_blocks": self.num_blocks,
             "block_size": self.block_size,
             "chunk": self.chunk,
@@ -474,6 +487,11 @@ class PagedServer(_ServerBase):
         self.peak_active = max(self.peak_active, len(sched))
         self.peak_blocks_used = max(self.peak_blocks_used,
                                     self.pool.used_blocks)
+        # tokens resident after this step's writes / pool token capacity
+        live = sum(entry.pos + n for _, entry, n, _ in sched)
+        self._live_frac_last = live / (self.num_blocks * self.block_size)
+        self._live_frac_sum += self._live_frac_last
+        self._live_frac_ticks += 1
 
         # phase B: build the fixed-shape step inputs
         m = self.max_blocks_per_seq

@@ -25,6 +25,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeConfig
 from repro.data.synthetic import batch_shapes
 from repro.fabric import Fabric
+from repro.kernels import paged_attention as paged_attention_lib
 from repro.models import model as model_lib
 from repro.models.kvcache import PagedLayout
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
@@ -365,8 +366,8 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
 
 def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                           slots: int, chunk: int, num_blocks: int,
-                          block_size: int,
-                          max_blocks_per_seq: int) -> StepBundle:
+                          block_size: int, max_blocks_per_seq: int,
+                          kernel: str = "auto") -> StepBundle:
     """One step through the paged pool for ``slots`` request rows.
 
     fn(params, cache, tokens (slots, chunk), block_tables
@@ -375,8 +376,22 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
     each row's last *valid* column; rows mid-prefill get a token the
     scheduler ignores. The same compiled fn serves decode rows (n_valid=1),
     chunked-prefill rows (n_valid up to chunk), and idle rows (n_valid=0).
+
+    ``kernel`` selects the paged-attention path (``"pallas"``: the
+    stash-resident block-table kernel; ``"ref"``: gather-then-dense;
+    ``"auto"``: pallas wherever TPU semantics are available). The resolved
+    choice lands in ``meta["paged_kernel"]``. On multi-device meshes
+    ``auto`` stays on ``ref``: the kernel has no GSPMD partitioning rule
+    yet, so sharding it is the documented follow-up (docs/serving.md).
     """
     assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    paged_kernel = paged_attention_lib.resolve_kernel(
+        kernel, n_devices=mesh.devices.size)
+    if paged_kernel == "pallas" and mesh.devices.size > 1:
+        raise NotImplementedError(
+            "the pallas paged-attention kernel has no multi-device "
+            "partitioning rule yet; use kernel='auto'/'ref' on >1 "
+            "device meshes (docs/serving.md)")
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
     transport_log: list = []
     # weight_reuse stays 1 for the same reason as make_serve_step: the step
@@ -400,6 +415,7 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
         layout = PagedLayout(block_tables, starts, n_valid, block_size)
         logits, new_cache, _ = model_lib.forward(
             cfg, params, tokens, cache=cache, paged=layout,
+            paged_kernel=paged_kernel,
             moe_transport=transport, constrain=constrain)
         last = jnp.maximum(n_valid - 1, 0)
         last_logits = jnp.take_along_axis(
@@ -431,7 +447,8 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
         meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="paged_decode",
                   cache=cache_shapes, transport_log=transport_log,
                   fabric=fabric, block_size=block_size,
-                  num_blocks=num_blocks, chunk=chunk, slots=slots),
+                  num_blocks=num_blocks, chunk=chunk, slots=slots,
+                  paged_kernel=paged_kernel),
     )
 
 

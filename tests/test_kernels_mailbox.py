@@ -35,6 +35,29 @@ def test_server_sum_kernel_matches_ref():
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("n", [1, 7, 127, 130])
+def test_server_sum_awkward_frame_counts(n):
+    """Prime / non-dividing N must pad up to one tile multiple, not degrade
+    the grid to width-1 tiles (ISSUE 4 satellite) — and stay exact."""
+    from repro.kernels.mailbox.kernel import _drain_geometry
+    frames = _frames(n, seed=n)
+    got = am_server_sum(frames, SPEC)
+    want = server_sum_ref(frames, SPEC.offsets()["usr"], SPEC.payload_words)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    bn, n_pad = _drain_geometry(n, 128)
+    assert n_pad % bn == 0 and n_pad >= n
+    assert bn >= 8 and bn % 8 == 0, (n, bn)   # never a width-1 tile
+
+
+def test_drain_geometry_cases():
+    from repro.kernels.mailbox.kernel import _drain_geometry
+    assert _drain_geometry(127, 128) == (128, 128)   # the prime-N headline
+    assert _drain_geometry(4, 128) == (8, 8)
+    assert _drain_geometry(130, 128) == (128, 256)
+    # caller-passed non-multiple-of-8 tile rounds down to stay aligned
+    assert _drain_geometry(127, 100) == (96, 192)
+
+
 def test_indirect_put_kernel_matches_ref():
     frames = _frames(5, seed=3)
     slots = 8

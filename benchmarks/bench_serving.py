@@ -1,24 +1,28 @@
-"""Serving throughput/latency — contiguous fixed-slot vs paged scheduler.
+"""Serving throughput/latency — cache backends x scheduler policies.
 
-Equal HBM budget on both sides: the contiguous server allocates
-``slots_contig * max_len`` KV rows up front; the paged server gets the SAME
-number of pool tokens (``num_blocks * block_size``) but allocates them at
-block granularity, so it sustains more concurrent requests whenever actual
-sequences are shorter than ``max_len`` (the common serving case).
+Equal HBM budget on both cache backends: the fixed-slot backend allocates
+``slots_contig * max_len`` KV rows up front; the paged backend gets the
+SAME number of pool tokens (``num_blocks * block_size``) but allocates them
+at block granularity, so it sustains more concurrent requests whenever
+actual sequences are shorter than ``max_len`` (the common serving case).
 
-Reports tokens/s, p50/p99 time-to-first-token, and peak sustained
-concurrency for both servers, plus per-request output identity against the
-exact contiguous path (a slots=1 fixed-slot server, which has no batch
-position skew — docs/serving.md). Results land in the standardized
+On top of the backend comparison, the paged engine runs once per scheduler
+policy (``fifo`` / ``priority`` / ``sjf``) over one fixed request set with
+mixed priorities and prompt lengths — per-policy tokens/s and p50/p99
+time-to-first-token land under one unified metrics schema, all extracted
+from ``Engine.metrics()["requests"]`` (no server-internal reconstruction).
+
+Per-request output identity is asserted against the exact contiguous path
+(a slots=1 fixed-slot engine, which has no batch position skew —
+docs/serving.md) for every policy: scheduling reorders *when* requests run,
+never *what* they produce. Results land in the standardized
 ``BENCH_serving.json`` (ISSUE 2 acceptance: paged concurrency >= 2x at
-equal budget, outputs identical); ``serving_bench.json`` remains as a
-deprecated compat copy of the report body for one PR.
+equal budget, outputs identical; ISSUE 5: per-policy TTFT/throughput).
 
   PYTHONPATH=src python -m benchmarks.bench_serving
 """
 from __future__ import annotations
 
-import json
 import time
 from typing import Dict, List
 
@@ -27,7 +31,7 @@ import numpy as np
 from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
-from repro.runtime.server import PagedServer, Request, Server
+from repro.engine import Engine, Request
 from benchmarks.common import Row, write_bench_json
 
 N_REQUESTS = 16
@@ -38,40 +42,46 @@ SLOTS_CONTIG = 4
 BLOCK_SIZE = 8
 # equal budget: 4 slots * 96 rows = 384 pool tokens = 48 blocks
 NUM_BLOCKS = SLOTS_CONTIG * MAX_LEN // BLOCK_SIZE
-COMPAT_JSON_PATH = "serving_bench.json"       # deprecated: one-PR compat copy
+POLICIES = ("fifo", "priority", "sjf")
 
 
 def _requests(prompts) -> List[Request]:
-    """Fresh Request objects over one fixed prompt set (all servers must
-    see identical prompts for the output-identity comparison)."""
-    return [Request(rid, p, max_new_tokens=MAX_NEW)
+    """Fresh Request objects over one fixed prompt set (every engine must
+    see identical prompts for the output-identity comparison). Priorities
+    spread 0/1/2 so the priority policy has something to reorder."""
+    return [Request(rid, p, max_new_tokens=MAX_NEW, priority=rid % 3)
             for rid, p in enumerate(prompts)]
 
 
-def _drive(server, requests) -> Dict:
-    """Run to drain, recording per-request TTFT at tick granularity."""
+def _drive(engine, requests) -> Dict:
+    """Run to drain; TTFT comes from the engine's per-request records."""
     for r in requests:
-        server.submit(r)
-    ttft: Dict[int, float] = {}
+        engine.submit(r)
     t0 = time.perf_counter()
-    while server.pending() and server.ticks < 10_000:
-        server.tick()
-        now = time.perf_counter()
-        for r in requests:
-            if r.out_tokens and r.rid not in ttft:
-                ttft[r.rid] = now - t0
+    engine.run_until_drained()
     dt = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in requests)
-    lat = sorted(ttft.values())
+    m = engine.metrics()
+    lat = sorted(rec["ttft_s"] for rec in m["requests"]
+                 if rec["ttft_s"] is not None)
     return {
         "wall_s": dt,
         "tokens": toks,
         "tokens_per_s": toks / dt,
-        "ticks": server.ticks,
+        "ticks": engine.ticks,
         "ttft_p50_s": float(np.percentile(lat, 50)),
         "ttft_p99_s": float(np.percentile(lat, 99)),
+        "admission_order": list(engine.admission_log),
         "outputs": {r.rid: list(r.out_tokens) for r in requests},
+        "metrics": m,
     }
+
+
+def _paged_engine(cfg, run, mesh, scheduler: str) -> Engine:
+    return Engine(cfg, run, mesh, cache="paged", slots=N_REQUESTS,
+                  max_len=MAX_LEN, num_blocks=NUM_BLOCKS,
+                  block_size=BLOCK_SIZE, chunk=BLOCK_SIZE,
+                  scheduler=scheduler)
 
 
 def main() -> List[Row]:
@@ -80,25 +90,28 @@ def main() -> List[Row]:
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
     mesh = compat.make_mesh((1, 1), ("data", "model"))
     rng = np.random.default_rng(0)
+    # mixed prompt lengths give SJF something to reorder too
     prompts = [rng.integers(0, cfg.vocab_size,
-                            size=(PROMPT_LEN,)).astype(np.int32)
-               for _ in range(N_REQUESTS)]
+                            size=(PROMPT_LEN + (rid % 3),)).astype(np.int32)
+               for rid in range(N_REQUESTS)]
 
     with mesh:
-        contig = Server(cfg, run, mesh, slots=SLOTS_CONTIG, max_len=MAX_LEN)
+        contig = Engine(cfg, run, mesh, cache="slots", slots=SLOTS_CONTIG,
+                        max_len=MAX_LEN)
         contig.load_params()
         params = contig.params
         res_c = _drive(contig, _requests(prompts))
 
-        paged = PagedServer(cfg, run, mesh, slots=N_REQUESTS, max_len=MAX_LEN,
-                            num_blocks=NUM_BLOCKS, block_size=BLOCK_SIZE,
-                            chunk=BLOCK_SIZE)
-        paged.load_params(params)
-        res_p = _drive(paged, _requests(prompts))
-        pm = paged.metrics()
+        res_by_policy: Dict[str, Dict] = {}
+        for policy in POLICIES:
+            paged = _paged_engine(cfg, run, mesh, policy)
+            paged.load_params(params)
+            res_by_policy[policy] = _drive(paged, _requests(prompts))
+        res_p = res_by_policy["fifo"]
+        pm = res_p["metrics"]
 
         # exact contiguous reference: one request at a time, no batch skew
-        ref = Server(cfg, run, mesh, slots=1, max_len=MAX_LEN)
+        ref = Engine(cfg, run, mesh, cache="slots", slots=1, max_len=MAX_LEN)
         ref_out = {}
         for r in _requests(prompts):
             ref.load_params(params)   # fresh cache: length scalar must reset
@@ -106,8 +119,9 @@ def main() -> List[Row]:
             ref.run_until_drained()
             ref_out[r.rid] = list(r.out_tokens)
 
-    paged_exact = sum(res_p["outputs"][rid] == ref_out[rid]
-                      for rid in ref_out)
+    exact = {policy: sum(res["outputs"][rid] == ref_out[rid]
+                         for rid in ref_out)
+             for policy, res in res_by_policy.items()}
     contig_exact = sum(res_c["outputs"][rid] == ref_out[rid]
                        for rid in ref_out)
     concurrency_c = min(SLOTS_CONTIG, N_REQUESTS)
@@ -118,58 +132,81 @@ def main() -> List[Row]:
         "contig": {"slots": SLOTS_CONTIG, "max_len": MAX_LEN,
                    "peak_concurrent": concurrency_c,
                    "exact_vs_reference": f"{contig_exact}/{N_REQUESTS}",
-                   **{k: v for k, v in res_c.items() if k != "outputs"}},
+                   **{k: v for k, v in res_c.items()
+                      if k not in ("outputs", "metrics")}},
         "paged": {"slots": N_REQUESTS, "num_blocks": NUM_BLOCKS,
                   "block_size": BLOCK_SIZE,
                   "peak_concurrent": concurrency_p,
                   "peak_used_blocks": pm["peak_used_blocks"],
                   "preemptions": pm["preemptions"],
-                  "exact_vs_reference": f"{paged_exact}/{N_REQUESTS}",
-                  **{k: v for k, v in res_p.items() if k != "outputs"}},
+                  "exact_vs_reference": f"{exact['fifo']}/{N_REQUESTS}",
+                  **{k: v for k, v in res_p.items()
+                     if k not in ("outputs", "metrics")}},
+        # the scheduler-policy comparison axis (one unified metrics schema:
+        # every number below comes from Engine.metrics())
+        "policies": {
+            policy: {
+                "tokens_per_s": res["tokens_per_s"],
+                "ttft_p50_s": res["ttft_p50_s"],
+                "ttft_p99_s": res["ttft_p99_s"],
+                "ticks": res["ticks"],
+                "preemptions": res["metrics"]["preemptions"],
+                "admission_order": res["admission_order"],
+                "exact_vs_reference": f"{exact[policy]}/{N_REQUESTS}",
+            } for policy, res in res_by_policy.items()},
         "concurrency_ratio": concurrency_p / concurrency_c,
-        "outputs_match_reference": paged_exact == N_REQUESTS,
+        "outputs_match_reference": all(n == N_REQUESTS
+                                       for n in exact.values()),
         "paged_kernel": pm["paged_kernel"],
         "live_token_fraction_mean": pm["live_token_fraction_mean"],
     }
     report["acceptance"] = {
         "concurrency_ok": report["concurrency_ratio"] >= 2.0,
         "outputs_ok": report["outputs_match_reference"],
+        # the priority policy must demonstrably reorder admission vs fifo
+        "priority_reorders": (
+            res_by_policy["priority"]["admission_order"]
+            != res_by_policy["fifo"]["admission_order"]),
     }
 
     rows = [
-        Row("serving_contig_tok_s", res_c["wall_s"] * 1e6 / max(1, res_c["tokens"]),
+        Row("serving_contig_tok_s",
+            res_c["wall_s"] * 1e6 / max(1, res_c["tokens"]),
             f"tok/s={res_c['tokens_per_s']:.1f} "
             f"ttft_p50={res_c['ttft_p50_s']*1e3:.0f}ms "
             f"ttft_p99={res_c['ttft_p99_s']*1e3:.0f}ms "
             f"concurrent={concurrency_c}"),
-        Row("serving_paged_tok_s", res_p["wall_s"] * 1e6 / max(1, res_p["tokens"]),
-            f"tok/s={res_p['tokens_per_s']:.1f} "
-            f"ttft_p50={res_p['ttft_p50_s']*1e3:.0f}ms "
-            f"ttft_p99={res_p['ttft_p99_s']*1e3:.0f}ms "
-            f"concurrent={concurrency_p} "
-            f"x{report['concurrency_ratio']:.1f} vs contig, "
-            f"exact={paged_exact}/{N_REQUESTS}"),
     ]
-    # both reports (with the acceptance verdicts inside) write BEFORE the
+    for policy, res in res_by_policy.items():
+        rows.append(Row(
+            f"serving_paged_{policy}_tok_s",
+            res["wall_s"] * 1e6 / max(1, res["tokens"]),
+            f"tok/s={res['tokens_per_s']:.1f} "
+            f"ttft_p50={res['ttft_p50_s']*1e3:.0f}ms "
+            f"ttft_p99={res['ttft_p99_s']*1e3:.0f}ms "
+            f"exact={exact[policy]}/{N_REQUESTS}"
+            + (f" concurrent={concurrency_p} "
+               f"x{report['concurrency_ratio']:.1f} vs contig"
+               if policy == "fifo" else "")))
+    # the report (with the acceptance verdicts inside) writes BEFORE the
     # asserts so a failing run still leaves consistent diagnostics on disk
-    with open(COMPAT_JSON_PATH, "w") as f:
-        json.dump(report, f, indent=2)
     write_bench_json(
         "serving",
         config={"n_requests": N_REQUESTS, "prompt_len": PROMPT_LEN,
                 "max_new": MAX_NEW, "max_len": MAX_LEN,
                 "slots_contig": SLOTS_CONTIG, "block_size": BLOCK_SIZE,
-                "num_blocks": NUM_BLOCKS},
+                "num_blocks": NUM_BLOCKS, "policies": list(POLICIES)},
         rows=rows, extra_metrics={"report": report})
 
     assert report["acceptance"]["concurrency_ok"], report["concurrency_ratio"]
     assert report["acceptance"]["outputs_ok"], \
-        f"paged outputs diverged from reference ({paged_exact}/{N_REQUESTS})"
+        f"paged outputs diverged from reference: {exact}"
+    assert report["acceptance"]["priority_reorders"], \
+        "priority policy did not reorder admission vs fifo"
     return rows
 
 
 if __name__ == "__main__":
     for row in main():
         print(row.csv())
-    print("# full report: BENCH_serving.json "
-          f"(+ deprecated compat copy {COMPAT_JSON_PATH})")
+    print("# full report: BENCH_serving.json")

@@ -1,29 +1,46 @@
 """Paper Fig. 11/12 — tail latency on a loaded system.
 
-stress-ng analogue: deterministic per-step jitter injected into the train
-loop (runtime.fault.FaultInjector.jitter_ms) models co-located memory/paging
-pressure. We train the smoke MoE model and report p50 / p99.9 / tail-spread
-(Eq. 1 of the paper) for a quiet system vs a loaded one, and loaded-with-
-mitigation (straggler-aware EWMA monitor flags the slow steps; at scale the
-flagged host is the re-mesh candidate — here flagging evidence is counted).
+Two sections, one report:
+
+**Train** (the original figure): stress-ng analogue — deterministic
+per-step jitter injected into the train loop
+(runtime.fault.FaultInjector.jitter_ms) models co-located memory/paging
+pressure. We train the smoke MoE model and report p50 / p99.9 /
+tail-spread (Eq. 1 of the paper) for a quiet system vs a loaded one.
+
+**Serve** (ISSUE 5, ported to the ``repro.engine`` API): the serving
+analogue of "loaded" is an oversubscribed KV pool. The same request set
+runs through a paged ``Engine`` twice — quiet (pool sized so nothing
+preempts) and loaded (a scarce pool forcing preempt-and-requeue) — and the
+per-tick wall-clock tail plus per-request TTFT spread come straight out of
+the engine's unified metrics schema. Preemption-recompute work is what
+inflates the loaded tail.
 """
 from __future__ import annotations
 
 import shutil
 import tempfile
+import time
 from typing import List
 
 import jax
+import numpy as np
 
 from repro import compat
-from repro.configs.base import (OptimizerConfig, RunConfig, ShapeConfig,
-                                ShardingConfig)
+from repro.configs.base import (SHAPES, OptimizerConfig, RunConfig,
+                                ShapeConfig, ShardingConfig)
 from repro.configs.registry import get_smoke
+from repro.engine import Engine, Request
 from repro.runtime.fault import FaultInjector
 from repro.runtime.trainer import Trainer, TrainerConfig
 from benchmarks.common import Row, write_bench_json
 
 STEPS = 60
+N_REQUESTS = 8
+PROMPT_LEN = 10
+MAX_NEW = 12
+MAX_LEN = 32
+BLOCK_SIZE = 4
 
 
 def _run(jitter_ms, tmp) -> "StepStats":
@@ -44,8 +61,45 @@ def _run(jitter_ms, tmp) -> "StepStats":
     return stats
 
 
+def _serve_run(num_blocks: int, params=None):
+    """One engine run; returns (per-tick seconds, metrics, params)."""
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(0)
+    with mesh:
+        engine = Engine(cfg, run, mesh, cache="paged", slots=4,
+                        max_len=MAX_LEN, num_blocks=num_blocks,
+                        block_size=BLOCK_SIZE, chunk=BLOCK_SIZE)
+        engine.load_params(params)
+        for rid in range(N_REQUESTS):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=(PROMPT_LEN,)).astype(np.int32)
+            engine.submit(Request(rid, prompt, max_new_tokens=MAX_NEW))
+        tick_s: List[float] = []
+        warm = 0
+        while engine.pending() and engine.ticks < 10_000:
+            t0 = time.perf_counter()
+            engine.tick()
+            dt = time.perf_counter() - t0
+            # first tick pays jit compilation; it is not scheduler tail
+            if warm == 0:
+                warm = 1
+                continue
+            tick_s.append(dt)
+    return tick_s, engine.metrics(), engine.params
+
+
+def _tail(xs: List[float]):
+    p50 = float(np.percentile(xs, 50))
+    p999 = float(np.percentile(xs, 99.9))
+    return p50, p999, (p999 - p50) / p50 if p50 else 0.0
+
+
 def main() -> List[Row]:
     rows: List[Row] = []
+    # -- train section (paper Fig. 11/12) --------------------------------
     # every 10th step takes a large hit; half the steps take a small one —
     # roughly what stress-ng --class vm does to a co-located process
     loaded = tuple((25.0 if i % 10 == 9 else (2.0 if i % 2 else 0.0))
@@ -61,7 +115,39 @@ def main() -> List[Row]:
             f"p99.9={stats.p999_s*1e6:.0f}us "
             f"tail_spread={100*stats.tail_spread:.0f}% "
             f"stragglers_flagged={stats.stragglers}"))
-    write_bench_json("tail_latency", config={"steps": STEPS}, rows=rows)
+
+    # -- serve section (engine tick tail, quiet vs oversubscribed pool) --
+    # quiet: every request can be fully resident at once; loaded: the pool
+    # holds barely more than one max_len sequence, so concurrent requests
+    # evict each other (preempt + recompute) and the tail stretches
+    quiet_blocks = N_REQUESTS * (-(-MAX_LEN // BLOCK_SIZE))
+    loaded_blocks = -(-MAX_LEN // BLOCK_SIZE) + 2
+    serve = {}
+    params = None
+    for name, blocks in (("serve_quiet", quiet_blocks),
+                         ("serve_loaded", loaded_blocks)):
+        tick_s, metrics, params = _serve_run(blocks, params)
+        p50, p999, spread = _tail(tick_s)
+        ttft = metrics["ttft_s"]
+        serve[name] = {"tick_p50_s": p50, "tick_p999_s": p999,
+                       "tail_spread": spread, "ticks": metrics["ticks"],
+                       "preemptions": metrics["preemptions"],
+                       "ttft_p50_s": float(np.percentile(ttft, 50)),
+                       "ttft_max_s": max(ttft)}
+        rows.append(Row(
+            f"tail_latency/{name}/p50", p50 * 1e6,
+            f"p99.9={p999*1e6:.0f}us tail_spread={100*spread:.0f}% "
+            f"preemptions={metrics['preemptions']} "
+            f"ttft_p50={serve[name]['ttft_p50_s']*1e3:.0f}ms"))
+    # the loaded pool must actually have been loaded (else the comparison
+    # is vacuous)
+    assert serve["serve_loaded"]["preemptions"] >= 1, serve
+
+    write_bench_json("tail_latency",
+                     config={"steps": STEPS, "n_requests": N_REQUESTS,
+                             "quiet_blocks": quiet_blocks,
+                             "loaded_blocks": loaded_blocks},
+                     rows=rows, extra_metrics={"serve": serve})
     return rows
 
 

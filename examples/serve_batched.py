@@ -1,15 +1,17 @@
-"""Serve a small model with batched requests: fixed-slot vs paged scheduler.
+"""Serve a small model with batched requests on the unified Engine.
 
-Part 1 — the original 4-slot fixed-slot server decodes 10 concurrent
-requests of mixed lengths: requests admit as slots free up, every tick
-advances all active slots one token — the injection-rate shape of the paper
-(§VI-A2) applied to token serving.
+Part 1 — the fixed-slot cache backend (``Engine(cache="slots")``, 4 slots)
+decodes 10 concurrent requests of mixed lengths: requests admit as slots
+free up, every tick advances all active slots one token — the
+injection-rate shape of the paper (§VI-A2) applied to token serving.
 
-Part 2 — the paged scheduler serves the SAME 10 requests with the same KV
-budget but 10 slots: block-granular allocation lets every request run
-concurrently, and chunked prefill keeps admission off the decode critical
-path. Asserted at the end: every paged request reproduces the unbatched
-greedy forward exactly, and the fixed-slot server agrees on its first
+Part 2 — the paged backend (``Engine(cache="paged")``) serves the SAME 10
+requests with the same KV budget but 10 slots: block-granular allocation
+lets every request run concurrently, and chunked prefill keeps admission
+off the decode critical path. The last request is consumed as a **stream**
+(``handle.tokens()`` + an ``on_token`` callback) — no ``run_until_drained``
+needed. Asserted at the end: every paged request reproduces the unbatched
+greedy forward exactly, and the fixed-slot backend agrees on its first
 admission wave (the only wave where it is exact — docs/serving.md).
 
 Run:  PYTHONPATH=src python examples/serve_batched.py
@@ -23,12 +25,12 @@ import numpy as np
 from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
+from repro.engine import Engine, Request
 from repro.models import model as model_lib
-from repro.runtime.server import PagedServer, Request, Server
 
 
 def make_requests(prompts):
-    """Fresh Request objects over one fixed prompt set (both servers must
+    """Fresh Request objects over one fixed prompt set (both backends must
     see identical prompts for the output comparison)."""
     return [Request(rid, p, max_new_tokens=8)
             for rid, p in enumerate(prompts)]
@@ -45,7 +47,8 @@ def main() -> None:
     prompts = [rng.integers(0, cfg.vocab_size, size=(plen,)).astype(np.int32)
                for _ in range(n_req)]
     with mesh:
-        contig = Server(cfg, run, mesh, slots=4, max_len=max_len)
+        contig = Engine(cfg, run, mesh, cache="slots", slots=4,
+                        max_len=max_len)
         contig.load_params()
         for r in make_requests(prompts):
             contig.submit(r)
@@ -54,25 +57,32 @@ def main() -> None:
         dt_c = time.perf_counter() - t0
 
         # same KV budget: 4 slots * 96 tokens = 384 pool tokens = 48 blocks
-        paged = PagedServer(cfg, run, mesh, slots=n_req, max_len=max_len,
-                            num_blocks=48, block_size=8, chunk=8)
+        paged = Engine(cfg, run, mesh, cache="paged", slots=n_req,
+                       max_len=max_len, num_blocks=48, block_size=8, chunk=8)
         paged.load_params(contig.params)
-        for r in make_requests(prompts):
-            paged.submit(r)
+        handles = [paged.submit(r) for r in make_requests(prompts)]
+        streamed = []
+        handles[-1].on_token(lambda tok, i: streamed.append(tok))
         t0 = time.perf_counter()
-        done_p = paged.run_until_drained()
+        # consume the last request as a stream; pulling its generator
+        # drives the engine, so every co-scheduled request advances too
+        stream_toks = list(handles[-1].tokens())
+        for h in handles[:-1]:          # the rest are already done/buffered
+            h.result()
+        done_p = paged.completed
         dt_p = time.perf_counter() - t0
 
     toks_c = sum(len(r.out_tokens) for r in done_c)
     toks_p = sum(len(r.out_tokens) for r in done_p)
-    print(f"[serve_batched] contig: {len(done_c)} requests, {toks_c} tokens, "
+    print(f"[serve_batched] slots: {len(done_c)} requests, {toks_c} tokens, "
           f"{contig.ticks} ticks, {dt_c:.1f}s ({toks_c/dt_c:.1f} tok/s)")
     m = paged.metrics()
-    print(f"[serve_batched] paged:  {len(done_p)} requests, {toks_p} tokens, "
+    print(f"[serve_batched] paged: {len(done_p)} requests, {toks_p} tokens, "
           f"{paged.ticks} ticks, {dt_p:.1f}s ({toks_p/dt_p:.1f} tok/s), "
           f"peak_active={m['peak_active_slots']} "
           f"peak_blocks={m['peak_used_blocks']}/{m['num_blocks']} "
           f"preemptions={m['preemptions']}")
+    print(f"[serve_batched] streamed req {n_req - 1}: {stream_toks}")
     for r in sorted(done_p, key=lambda r: r.rid)[:4]:
         print(f"  req {r.rid}: {len(r.out_tokens)} tokens -> "
               f"{r.out_tokens[:6]}{'...' if len(r.out_tokens) > 6 else ''}")
@@ -80,6 +90,9 @@ def main() -> None:
     assert len(done_c) == n_req and len(done_p) == n_req
     by_c = {r.rid: r.out_tokens for r in done_c}
     by_p = {r.rid: r.out_tokens for r in done_p}
+    # the stream must be exactly the request's final tokens, both via the
+    # generator and via the callback
+    assert stream_toks == by_p[n_req - 1] == streamed
     # Every paged request must reproduce the unbatched greedy forward (the
     # model's definition of the right answer) token for token.
     with mesh:
@@ -91,15 +104,19 @@ def main() -> None:
                 got = int(jnp.argmax(logits[0, -1]))
                 assert got == want, f"req {rid} diverged from greedy"
                 toks.append(got)
-    # The fixed-slot batcher is only exact for its first admission wave
+    # The fixed-slot backend is only exact for its first admission wave
     # (later waves inherit a stale batch-global length scalar —
-    # docs/serving.md), so it must agree with the paged scheduler there.
+    # docs/serving.md), so it must agree with the paged backend there.
     wave1 = [r.rid for r in done_c[:4]]
     assert all(by_c[rid] == by_p[rid] for rid in wave1), \
         "paged and fixed-slot outputs diverged on the exact wave"
     assert m["free_blocks"] == m["num_blocks"], "block leak after drain"
     assert m["peak_active_slots"] > 4, "paged should exceed 4 fixed slots"
-    print("serve_batched OK (greedy-exact outputs, no block leak)")
+    # per-request metrics carry arrival/priority/TTFT for every request
+    assert len(m["requests"]) == n_req
+    assert all(rec["ttft_s"] is not None for rec in m["requests"])
+    print("serve_batched OK (greedy-exact outputs, exact stream, "
+          "no block leak)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,23 @@
+"""repro.engine — one serving engine API with pluggable schedulers,
+streaming outputs, and fabric-routed placement (see docs/engine.md).
+
+Public surface::
+
+    from repro.engine import Engine, Request
+
+    engine = Engine(cfg, run, mesh, cache="paged", slots=8, max_len=256,
+                    num_blocks=64, scheduler="priority")
+    engine.load_params()
+    handle = engine.submit(Request(0, prompt, priority=2))
+    for tok in handle.tokens():        # streams as ticks produce tokens
+        ...
+    engine.metrics()                   # unified schema, both backends
+
+``runtime/server.py``'s ``Server``/``PagedServer`` remain as deprecation
+shims over this class.
+"""
+from repro.engine.engine import BlockPool, Engine, Request  # noqa: F401
+from repro.engine.scheduler import (  # noqa: F401
+    POLICIES, FIFOPolicy, PriorityPolicy, SchedulerPolicy, SchedulerState,
+    SJFPolicy, resolve_policy)
+from repro.engine.stream import RequestHandle  # noqa: F401

@@ -1,0 +1,727 @@
+"""``repro.engine.Engine`` — the one serving engine.
+
+The paper's claim applied to serving: function *invocation* is one uniform
+low-granularity API while *placement and scheduling* are chosen dynamically
+as the application progresses. Before this module the repro hard-coded
+both: ``Server`` and ``PagedServer`` each owned an admission loop, a tick
+loop, preemption logic, and a metrics dialect. ``Engine`` collapses them:
+
+* **one submit/admit/step/complete loop** (``tick``) over a pluggable
+  KV-cache backend — ``cache="paged"`` (block pool, chunked prefill,
+  preempt-and-requeue) or ``cache="slots"`` (fixed-slot contiguous cache,
+  single-request prefill);
+* **pluggable scheduling** — a ``SchedulerPolicy`` object
+  (``engine.scheduler``) decides admission order, victim selection, and
+  block budgets; ``FIFOPolicy`` reproduces the legacy servers bitwise,
+  ``PriorityPolicy``/``SJFPolicy`` reorder admission without touching the
+  math;
+* **streaming outputs** — ``submit`` returns a ``RequestHandle``
+  (``engine.stream``): ``handle.tokens()`` yields tokens as ticks produce
+  them, ``handle.on_token`` registers callbacks, so clients no longer need
+  ``run_until_drained``;
+* **fabric-routed invocation** — the jitted serve steps are registered on
+  the step bundle's PR-3 ``Fabric`` (``engine.prefill`` / ``engine.decode``
+  / ``engine.paged_step``) and every tick invokes them through
+  ``fabric.call(..., placement="local")``; ``metrics()["fabric"]`` reports
+  per-step call counts and the resolved placement of each registered step.
+
+``runtime/server.py`` keeps ``Server``/``PagedServer`` only as thin
+``DeprecationWarning`` shims over this class. See docs/engine.md for the
+API, the scheduler protocol, streaming semantics, and the migration table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.core import transport as transport_lib
+from repro.engine.scheduler import (SchedulerPolicy, SchedulerState,
+                                    resolve_policy)
+from repro.engine.stream import RequestHandle
+from repro.models import model as model_lib
+from repro.runtime.steps import (make_paged_serve_step, make_serve_step,
+                                 sharding_ctx)
+
+PyTree = Any
+
+__all__ = ["Request", "BlockPool", "Engine"]
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``priority`` is read by priority-aware scheduler policies (higher =
+    more urgent; FIFO/SJF ignore it). ``arrival_tick`` is stamped by
+    ``Engine.submit`` with the engine's tick counter at submission and is
+    surfaced — together with per-request TTFT — in
+    ``metrics()["requests"]``.
+    """
+
+    rid: int
+    prompt: np.ndarray                  # (L,) int32
+    max_new_tokens: int = 16
+    priority: int = 0
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    arrival_tick: int = -1              # stamped at submit
+
+
+class BlockPool:
+    """Host-side free list over the device block pool's block ids.
+
+    Guarded against lifecycle bugs: releasing a block that is already free
+    (double-free) or outside the pool raises with the offending id, and
+    ``alloc`` detects a corrupted free list (the same id handed out twice)
+    rather than silently aliasing two requests onto one block.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks))
+        self._free_set: Set[int] = set(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        blk = self._free.pop()
+        if blk not in self._free_set:
+            raise RuntimeError(
+                f"double-alloc of block {blk}: free list is corrupted (the "
+                f"id appears more than once)")
+        self._free_set.remove(blk)
+        return blk
+
+    def release(self, blocks: List[int]) -> None:
+        # validate the whole batch before mutating so a bad id cannot leave
+        # the pool half-released (a caller retrying after the error would
+        # then hit spurious double-frees on the already-freed prefix)
+        seen: Set[int] = set()
+        for blk in blocks:
+            if not 0 <= blk < self.num_blocks:
+                raise ValueError(
+                    f"release of unknown block id {blk} (pool holds ids "
+                    f"0..{self.num_blocks - 1})")
+            if blk in self._free_set or blk in seen:
+                raise ValueError(f"double-free of block {blk}")
+            seen.add(blk)
+        self._free.extend(blocks)
+        self._free_set.update(blocks)
+
+
+@dataclasses.dataclass
+class _Entry:
+    """Scheduler state for one request (states: queued -> running ->
+    finished, with running -> queued on preemption)."""
+
+    req: Request
+    handle: Optional[RequestHandle] = None
+    pos: int = 0                        # tokens resident in the cache
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    admit_seq: int = -1                 # first-admission stamp (victim order)
+    arrival_seq: int = -1               # submit-order stamp (policy ties)
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+    first_token_tick: Optional[int] = None
+    preemptions: int = 0
+    # prompt as python ints, converted once at submit (seq() runs every tick)
+    prompt_tokens: List[int] = dataclasses.field(default_factory=list)
+
+    def seq(self) -> List[int]:
+        """prompt ++ generated — what must be resident before decoding."""
+        return self.prompt_tokens + self.req.out_tokens
+
+
+class Engine:
+    """One serving engine over one mesh: pluggable scheduler, pluggable
+    KV-cache backend, streaming outputs, fabric-routed steps.
+
+    ``cache="paged"``: shared per-layer block pool (``num_blocks`` x
+    ``block_size`` tokens), chunked prefill (``chunk`` tokens per tick)
+    through the same compiled step as decode, block-budget-gated admission,
+    preempt-and-requeue (recompute) on pool exhaustion. ``kernel`` selects
+    the paged-attention path (docs/serving.md).
+
+    ``cache="slots"``: one contiguous per-slot cache of ``max_len``,
+    single-request prefill on admission, one decode tick per token — the
+    legacy fixed-slot batcher, kept for MLA/SSM/xLSTM archs and as the
+    decode-bench baseline (exactness caveats: docs/serving.md).
+
+    ``scheduler`` is a policy name (``"fifo"``/``"priority"``/``"sjf"``) or
+    any ``SchedulerPolicy`` object. FIFO reproduces the legacy servers
+    bitwise, preemption paths included (tests/test_engine.py).
+    """
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
+                 cache: str = "paged", slots: int, max_len: int,
+                 scheduler="fifo", kernel: str = "auto",
+                 num_blocks: Optional[int] = None, block_size: int = 16,
+                 chunk: int = 8, eos_id: Optional[int] = None):
+        assert not cfg.is_encoder, "encoder-only arch has no decode path"
+        if cache not in ("paged", "slots"):
+            raise ValueError(f"cache must be 'paged' or 'slots', got {cache!r}")
+        self.cfg, self.run, self.mesh = cfg, run, mesh
+        self.cache_kind = cache
+        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
+        self.policy: SchedulerPolicy = resolve_policy(scheduler)
+        self.params: Optional[PyTree] = None
+        self.cache: Optional[PyTree] = None
+        self.ticks = 0
+        self.completed: List[Request] = []
+        self.queue: List[_Entry] = []
+        self.slot_entry: List[Optional[_Entry]] = [None] * slots
+        self._finished: List[_Entry] = []
+        self._submit_counter = 0
+        self._admit_counter = 0
+        self.admission_log: List[int] = []     # rids in first-admission order
+        self.peak_active = 0
+        self.preempt_count = 0
+        self._placements: Dict[str, str] = {}
+        self._pending_pump: List[_Entry] = []
+
+        run_decode = dataclasses.replace(
+            run, shape=dataclasses.replace(run.shape, kind="decode",
+                                           seq_len=max_len,
+                                           global_batch=slots))
+        if cache == "paged":
+            if num_blocks is None:
+                raise ValueError("cache='paged' requires num_blocks=")
+            self.block_size, self.chunk = block_size, chunk
+            self.num_blocks = num_blocks
+            self.max_blocks_per_seq = -(-max_len // block_size)
+            if num_blocks < self.max_blocks_per_seq:
+                raise ValueError(
+                    f"num_blocks={num_blocks} cannot hold one "
+                    f"max_len={max_len} request ({self.max_blocks_per_seq} "
+                    f"blocks of {block_size})")
+            self.bundle = make_paged_serve_step(
+                cfg, run_decode, mesh, slots=slots, chunk=chunk,
+                num_blocks=num_blocks, block_size=block_size,
+                max_blocks_per_seq=self.max_blocks_per_seq, kernel=kernel)
+            # resolved attention path ("pallas" | "ref") + per-step
+            # live-token fraction: resident tokens / pool token capacity —
+            # the occupancy knob the stash-resident kernel's bytes-read win
+            # scales with (docs/serving.md)
+            self.paged_kernel: str = self.bundle.meta["paged_kernel"]
+            self._live_frac_last = 0.0
+            self._live_frac_sum = 0.0
+            self._live_frac_ticks = 0
+            self.pool = BlockPool(num_blocks)
+            self.peak_blocks_used = 0
+            self._step_name = "engine.paged_step"
+        else:
+            self.bundle = make_serve_step(cfg, run_decode, mesh,
+                                          batch_override=slots)
+            self._step_name = "engine.decode"
+        self._jit_step = jax.jit(self.bundle.fn,
+                                 in_shardings=self.bundle.in_shardings,
+                                 out_shardings=self.bundle.out_shardings,
+                                 donate_argnums=(1,))
+        # the cache arg is donated, so pjit refuses to reshard it silently;
+        # host-assembled caches (fresh init, prefill scatter) are re-placed
+        # onto the step's declared shardings explicitly — a layout op, not
+        # a numeric one (multi-device meshes fail without it)
+        self._cache_shard = self.bundle.in_shardings[1]
+        _, self.params_shapes, _, _, self.pshard = sharding_ctx(
+            cfg, run_decode, mesh)
+        self._register_fabric_steps()
+
+    # ------------------------------------------------------------------
+    # fabric registration / invocation — the one seam
+    # ------------------------------------------------------------------
+
+    @property
+    def fabric(self):
+        """The step bundle's Fabric — the invocation + telemetry surface."""
+        return self.bundle.meta.get("fabric")
+
+    @property
+    def transport_decisions(self):
+        """Auto-mode TransportEstimates recorded while tracing the step
+        (delegates to the bundle fabric's decision log)."""
+        if self.fabric is not None:
+            return [est for _, est in self.fabric.decisions]
+        return list(self.bundle.meta.get("transport_log", ()))
+
+    def _register_fabric_steps(self) -> None:
+        """Register the serve steps as collectives on the bundle fabric so
+        every tick's invocation goes through ``fabric.call`` — the paper's
+        one invocation surface. Placement is ``"local"``: the step runs
+        against receiver-resident state (weights + KV) on this engine's
+        mesh; the resolved placement per step lands in
+        ``metrics()["fabric"]["placements"]``."""
+        fabric = self.fabric
+        if fabric is None:              # pragma: no cover - bundles always
+            return                      # carry a fabric; kept as a guard
+
+        def invoke_step(payload, state, placement):
+            return self._jit_step(state, *payload)
+
+        fabric.register_collective(self._step_name, invoke_step,
+                                   placements=("local",))
+        self._placements[self._step_name] = "local"
+        if self.cache_kind == "slots":
+            def invoke_prefill(payload, state, placement):
+                one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+                return model_lib.forward(self.cfg, state, payload,
+                                         cache=one_cache)
+
+            fabric.register_collective("engine.prefill", invoke_prefill,
+                                       placements=("local",))
+            self._placements["engine.prefill"] = "local"
+
+    def _step_call(self, *args):
+        """One tick's compiled-step invocation, routed through the fabric."""
+        fabric = self.fabric
+        if fabric is None:              # pragma: no cover - guard only
+            return self._jit_step(self.params, *args)
+        return fabric.call(self._step_name, args, state=self.params,
+                           placement="local")
+
+    # ------------------------------------------------------------------
+    # lifecycle
+    # ------------------------------------------------------------------
+
+    def load_params(self, params: Optional[PyTree] = None) -> None:
+        """Install model weights (init randomly when none given)."""
+        if params is None:
+            init = jax.jit(lambda k: model_lib.init_params(self.cfg, k)[0],
+                           out_shardings=self.pshard)
+            params = init(jax.random.PRNGKey(self.run.seed))
+        self.params = params
+        self.cache = self._fresh_cache()
+
+    def _fresh_cache(self) -> PyTree:
+        if self.cache_kind == "paged":
+            fresh = jax.jit(lambda: model_lib.init_paged_cache(
+                self.cfg, self.num_blocks, self.block_size))()
+        else:
+            fresh = jax.jit(lambda: model_lib.init_cache(
+                self.cfg, self.slots, self.max_len))()
+        return jax.device_put(fresh, self._cache_shard)
+
+    def pending(self) -> bool:
+        """True while any request is queued or occupying a slot."""
+        return bool(self.queue
+                    or any(e is not None for e in self.slot_entry))
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Serve until queue + slots drain; returns completed requests.
+        (Streaming clients can instead pull ``handle.tokens()``.)"""
+        while self.pending() and self.ticks < max_ticks:
+            self.tick()
+        return self.completed
+
+    # ------------------------------------------------------------------
+    # request plumbing
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> RequestHandle:
+        """Queue a request; returns its streaming ``RequestHandle``."""
+        if (self.cache_kind == "paged"
+                and len(req.prompt) + req.max_new_tokens > self.max_len):
+            # reject up front what could never finish: past this check a
+            # request's sequence always fits max_blocks_per_seq blocks, so
+            # the block table row cannot overflow and a lone request never
+            # starves
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                f"max_new_tokens ({req.max_new_tokens}) exceeds "
+                f"max_len={self.max_len}")
+        req.arrival_tick = self.ticks
+        entry = _Entry(req=req, submit_time=time.perf_counter(),
+                       arrival_seq=self._submit_counter,
+                       prompt_tokens=[int(t) for t in req.prompt])
+        self._submit_counter += 1
+        entry.handle = RequestHandle(self, req)
+        self.queue.append(entry)
+        return entry.handle
+
+    def _sched_state(self, block_budget: Optional[int]) -> SchedulerState:
+        return SchedulerState(
+            tick=self.ticks,
+            free_slots=sum(e is None for e in self.slot_entry),
+            block_budget=block_budget,
+            blocks_needed=(
+                (lambda e: self._blocks_for(len(e.seq()) + 1))
+                if self.cache_kind == "paged" else (lambda e: 0)))
+
+    def _stamp_admitted(self, entry: _Entry) -> None:
+        if entry.admit_seq < 0:
+            entry.admit_seq = self._admit_counter
+            self._admit_counter += 1
+            self.admission_log.append(entry.req.rid)
+
+    def _emit(self, entry: _Entry, tok: int) -> None:
+        """Append one generated token + TTFT stamps; streaming delivery is
+        deferred to ``_flush_streams`` at the end of the tick so a raising
+        client callback can never abort the engine's own bookkeeping
+        mid-loop (which would silently drop co-scheduled tokens)."""
+        entry.req.out_tokens.append(tok)
+        if len(entry.req.out_tokens) == 1:
+            entry.first_token_time = time.perf_counter()
+            entry.first_token_tick = self.ticks
+        if entry.handle is not None:
+            self._pending_pump.append(entry)
+
+    def _flush_streams(self) -> None:
+        """Deliver this tick's tokens to stream callbacks. Runs after all
+        token appends/completions; a raising callback propagates to the
+        tick() caller but leaves the engine consistent — undelivered
+        entries stay queued and flush on the next tick."""
+        while self._pending_pump:
+            entry = self._pending_pump.pop(0)
+            if entry.handle is not None:
+                entry.handle._pump()
+
+    def _complete(self, slot: int, entry: _Entry) -> None:
+        entry.req.done = True
+        if entry.blocks:
+            self.pool.release(entry.blocks)
+            entry.blocks = []
+        self.completed.append(entry.req)
+        self._finished.append(entry)
+        self.slot_entry[slot] = None
+
+    def _entries_everywhere(self) -> List[_Entry]:
+        out = list(self.queue) + [e for e in self.slot_entry if e is not None]
+        out.extend(self._finished)
+        return out
+
+    # ------------------------------------------------------------------
+    # tick — one admit/step/complete round, backend-dispatched
+    # ------------------------------------------------------------------
+
+    def tick(self) -> int:
+        """Admit + advance every active request one step. Returns the
+        number of rows advanced."""
+        if self.cache_kind == "paged":
+            return self._tick_paged()
+        return self._tick_slots()
+
+    # -- slots (fixed-slot contiguous cache) backend ----------------------
+
+    def _admit_slots(self) -> None:
+        for slot in range(self.slots):
+            if self.slot_entry[slot] is not None or not self.queue:
+                continue
+            idx = self.policy.admit(self.queue, self._sched_state(None))
+            if idx is None:
+                return
+            entry = self.queue.pop(idx)
+            self._stamp_admitted(entry)
+            self._prefill_slot(slot, entry)
+
+    def _prefill_slot(self, slot: int, entry: _Entry) -> None:
+        """Run the prompt through the model, writing this slot's cache rows.
+
+        Single-slot prefill through the fabric-registered ``engine.prefill``
+        step: a (1, L) forward with a fresh length-``max_len`` cache, then
+        scatter the slot row into the live batched cache.
+        """
+        req = entry.req
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        fabric = self.fabric
+        if fabric is None:              # pragma: no cover - guard only
+            one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
+            logits, filled, _ = model_lib.forward(
+                self.cfg, self.params, prompt, cache=one_cache)
+        else:
+            logits, filled, _ = fabric.call("engine.prefill", prompt,
+                                            state=self.params,
+                                            placement="local")
+        self._emit(entry, int(jnp.argmax(logits[0, -1, :])))
+
+        def scatter(live, one):
+            # Cache leaves may carry a leading layer-stack dim
+            # ((repeats, B, ...) for scanned groups), so the batch axis is
+            # located structurally: the first axis where the live leaf has
+            # ``slots`` extent, the one-row prefill leaf has extent 1, and
+            # every leading dim matches. (Matching on shape[:1] mistook the
+            # layer-stack dim for batch: slots=1 silently dropped the whole
+            # prefill and slots==repeats scattered layers as slots.)
+            if getattr(live, "ndim", 0) == 0:
+                return live
+            for ax in range(live.ndim):
+                if (live.shape[ax] == self.slots and one.shape[ax] == 1
+                        and live.shape[:ax] == one.shape[:ax]):
+                    idx = (slice(None),) * ax + (slot,)
+                    return live.at[idx].set(jnp.take(one, 0, axis=ax))
+            return live
+
+        # lengths differ per slot; keep the max (cache length is per-batch
+        # scalar — decode masks by absolute position so overshoot is safe)
+        new_groups = jax.tree.map(scatter, self.cache["groups"],
+                                  filled["groups"])
+        self.cache = jax.device_put(
+            {"length": jnp.maximum(self.cache["length"], filled["length"]),
+             "groups": new_groups}, self._cache_shard)
+        self.slot_entry[slot] = entry
+
+    def _tick_slots(self) -> int:
+        self._admit_slots()
+        active = [i for i, e in enumerate(self.slot_entry) if e is not None]
+        if not active:
+            self._flush_streams()       # leftovers from a raising flush
+            return 0
+        self.peak_active = max(self.peak_active, len(active))
+        tokens = np.zeros((self.slots, 1), np.int32)
+        for i, e in enumerate(self.slot_entry):
+            if e is not None:
+                tokens[i, 0] = e.req.out_tokens[-1]
+        args = [self.cache, jnp.asarray(tokens)]
+        if self.cfg.attention is not None and self.cfg.attention.mrope:
+            pos = np.broadcast_to(
+                np.asarray(self.cache["length"])[None, None],
+                (3, self.slots, 1)).astype(np.int32)
+            args.append(jnp.asarray(pos))
+        next_tok, self.cache = self._step_call(*args)
+        next_np = np.asarray(next_tok)
+        for i in active:
+            e = self.slot_entry[i]
+            tok = int(next_np[i, 0])
+            self._emit(e, tok)
+            if (len(e.req.out_tokens) >= e.req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                self._complete(i, e)
+        self.ticks += 1
+        self._flush_streams()
+        return len(active)
+
+    # -- paged (block-pool cache) backend ---------------------------------
+
+    def _blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def _admit_paged(self) -> None:
+        """Policy-gated admission: the policy picks the next queued entry;
+        it admits only when a slot is free AND the pool can hold its whole
+        resident prefix plus one decode token. ``budget`` tracks the blocks
+        already promised to entries admitted in this same call — their
+        allocation happens later in tick phase A, so reading
+        ``pool.free_blocks`` alone would over-commit the pool and trigger
+        spurious preemptions of just-admitted requests."""
+        budget = self.pool.free_blocks
+        while self.queue:
+            free_slots = [i for i, e in enumerate(self.slot_entry)
+                          if e is None]
+            if not free_slots:
+                return
+            state = self._sched_state(budget)
+            idx = self.policy.admit(self.queue, state)
+            if idx is None:
+                return                  # policy head blocked => wait
+            entry = self.queue.pop(idx)
+            # debit what the policy *reserved* (its budget() — >= the exact
+            # need, e.g. headroom-reserving policies), never less than the
+            # real need, so the round ledger cannot over-commit the pool
+            budget -= max(self.policy.budget(entry, state),
+                          self._blocks_for(len(entry.seq()) + 1))
+            self._stamp_admitted(entry)
+            self.slot_entry[free_slots[0]] = entry
+
+    def _preempt(self, victim: _Entry) -> None:
+        """Free the victim's blocks and requeue it in admission order:
+        before every never-admitted entry and every previously-preempted
+        entry with a younger admit stamp. (Plain front-insertion breaks
+        FIFO when two preemptions land out of stamp order — e.g. the
+        youngest running entry grows and evicts a middle-aged one, then an
+        older entry evicts the youngest.) Generated tokens are kept; on
+        re-admission the prompt+generated prefix is re-prefilled
+        (recompute-style preemption). Reordering policies re-decide at the
+        next admission anyway, so the stamp-ordered insert is
+        policy-neutral."""
+        self.pool.release(victim.blocks)
+        victim.blocks = []
+        victim.pos = 0
+        victim.preemptions += 1
+        self.preempt_count += 1
+        self.slot_entry[self.slot_entry.index(victim)] = None
+        at = next((i for i, e in enumerate(self.queue)
+                   if e.admit_seq < 0 or e.admit_seq > victim.admit_seq),
+                  len(self.queue))
+        self.queue.insert(at, victim)
+
+    def _ensure_blocks(self, entry: _Entry, upto_tokens: int) -> None:
+        """Grow ``entry.blocks`` to cover ``upto_tokens``, preempting the
+        policy's victim among the other running requests whenever the pool
+        is dry."""
+        need = self._blocks_for(upto_tokens)
+        while len(entry.blocks) < need:
+            blk = self.pool.alloc()
+            if blk is not None:
+                entry.blocks.append(blk)
+                continue
+            running = [e for e in self.slot_entry
+                       if e is not None and e is not entry]
+            victim = self.policy.pick_victim(running, self._sched_state(0))
+            if victim is None:
+                # unreachable given the num_blocks >= max_blocks_per_seq
+                # init check: a lone request always fits
+                raise RuntimeError("block pool exhausted by a single request")
+            self._preempt(victim)
+
+    def _tick_paged(self) -> int:
+        self._admit_paged()
+
+        # phase A: chunk sizing + block allocation (may preempt victims,
+        # including entries already scheduled earlier in this loop).
+        # seq is materialized once per entry per tick — it is O(seq_len).
+        sched: List[Tuple[int, _Entry, int, List[int]]] = []
+        for slot in range(self.slots):
+            entry = self.slot_entry[slot]
+            if entry is None:
+                continue
+            seq = entry.seq()
+            n = min(self.chunk, len(seq) - entry.pos)
+            self._ensure_blocks(entry, entry.pos + n)
+            sched.append((slot, entry, n, seq))
+        sched = [item for item in sched if self.slot_entry[item[0]] is item[1]]
+        # the tick counts even when nothing is schedulable, so
+        # run_until_drained's max_ticks stays a hard bound (a queue head
+        # that can never admit must not spin forever)
+        self.ticks += 1
+        if not sched:
+            self._flush_streams()       # leftovers from a raising flush
+            return 0
+        self.peak_active = max(self.peak_active, len(sched))
+        self.peak_blocks_used = max(self.peak_blocks_used,
+                                    self.pool.used_blocks)
+        # tokens resident after this step's writes / pool token capacity
+        live = sum(entry.pos + n for _, entry, n, _ in sched)
+        self._live_frac_last = live / (self.num_blocks * self.block_size)
+        self._live_frac_sum += self._live_frac_last
+        self._live_frac_ticks += 1
+
+        # phase B: build the fixed-shape step inputs
+        m = self.max_blocks_per_seq
+        tokens = np.zeros((self.slots, self.chunk), np.int32)
+        tables = np.full((self.slots, m), -1, np.int32)
+        starts = np.zeros((self.slots,), np.int32)
+        n_valid = np.zeros((self.slots,), np.int32)
+        for slot, entry, n, seq in sched:
+            tokens[slot, :n] = seq[entry.pos:entry.pos + n]
+            tables[slot, :len(entry.blocks)] = entry.blocks
+            starts[slot] = entry.pos
+            n_valid[slot] = n
+
+        next_tok, self.cache = self._step_call(
+            self.cache, jnp.asarray(tokens), jnp.asarray(tables),
+            jnp.asarray(starts), jnp.asarray(n_valid))
+        next_np = np.asarray(next_tok)
+
+        for slot, entry, n, seq in sched:
+            known = len(seq)
+            entry.pos += n
+            if entry.pos < known:
+                continue                 # mid-prefill: output discarded
+            tok = int(next_np[slot])
+            self._emit(entry, tok)
+            if (len(entry.req.out_tokens) >= entry.req.max_new_tokens
+                    or (self.eos_id is not None and tok == self.eos_id)):
+                self._complete(slot, entry)
+
+        self._flush_streams()
+        return len(sched)
+
+    # ------------------------------------------------------------------
+    # metrics — one unified schema for both backends
+    # ------------------------------------------------------------------
+
+    def _request_records(self) -> List[Dict[str, Any]]:
+        """Per-request metrics (submit order): priority/arrival/TTFT —
+        previously reconstructible only from server internals."""
+        recs = []
+        for e in sorted(self._entries_everywhere(),
+                        key=lambda e: e.arrival_seq):
+            r = e.req
+            recs.append({
+                "rid": r.rid,
+                "priority": r.priority,
+                "arrival_tick": r.arrival_tick,
+                "admitted": e.admit_seq >= 0,
+                "first_token_tick": e.first_token_tick,
+                "ttft_s": (e.first_token_time - e.submit_time
+                           if e.first_token_time is not None else None),
+                "tokens": len(r.out_tokens),
+                "preemptions": e.preemptions,
+                "done": r.done,
+            })
+        return recs
+
+    def _transport_metrics(self) -> Dict[str, Any]:
+        """Transport telemetry block of ``metrics()`` — delegates to the
+        bundle fabric (the ``fabric`` key carries its full ``metrics()``
+        dict plus the resolved placement of every engine-registered step);
+        the two legacy keys are kept for pre-Fabric consumers."""
+        out: Dict[str, Any] = {
+            "transport_decisions": [est.describe()
+                                    for est in self.transport_decisions],
+            "transport_telemetry": transport_lib.get_telemetry().summary(),
+        }
+        if self.fabric is not None:
+            fm = self.fabric.metrics()
+            fm["placements"] = dict(self._placements)
+            out["fabric"] = fm
+        return out
+
+    def metrics(self) -> Dict[str, Any]:
+        """Unified engine telemetry snapshot (JSON-friendly).
+
+        One schema for both cache backends: scheduler progress, per-request
+        records (``requests``), TTFT distribution, preemption counters, and
+        the fabric/transport block; the paged backend adds its pool keys
+        (same names the legacy ``PagedServer`` reported). docs/engine.md
+        documents every key.
+        """
+        done = [e for e in self._entries_everywhere() if e.req.done]
+        ttfts = sorted(e.first_token_time - e.submit_time
+                       for e in done if e.first_token_time is not None)
+        out: Dict[str, Any] = {
+            "engine": {
+                "cache": self.cache_kind,
+                "scheduler": self.policy.name,
+                "slots": self.slots,
+                "max_len": self.max_len,
+            },
+            "ticks": self.ticks,
+            "active_slots": sum(e is not None for e in self.slot_entry),
+            "peak_active_slots": self.peak_active,
+            "queued": len(self.queue),
+            "completed": len(self.completed),
+            "preemptions": self.preempt_count,
+            "ttft_s": ttfts,
+            "requests": self._request_records(),
+            **self._transport_metrics(),
+        }
+        if self.cache_kind == "paged":
+            out.update({
+                "paged_kernel": self.paged_kernel,
+                "live_token_fraction": self._live_frac_last,
+                "live_token_fraction_mean": (
+                    self._live_frac_sum / self._live_frac_ticks
+                    if self._live_frac_ticks else 0.0),
+                "num_blocks": self.num_blocks,
+                "block_size": self.block_size,
+                "chunk": self.chunk,
+                "free_blocks": self.pool.free_blocks,
+                "used_blocks": self.pool.used_blocks,
+                "peak_used_blocks": self.peak_blocks_used,
+                "occupancy": self.pool.used_blocks / max(1, self.num_blocks),
+            })
+        return out

@@ -1,0 +1,106 @@
+"""Streaming request API for ``repro.engine.Engine``.
+
+``engine.submit(req)`` returns a ``RequestHandle`` — the client-side view
+of one in-flight request. Clients no longer need ``run_until_drained``:
+
+* ``handle.tokens()`` is a generator yielding tokens **as ticks produce
+  them**. Pulling the generator drives ``engine.tick()`` whenever no
+  undelivered token is buffered, so a plain ``for tok in handle.tokens()``
+  serves the whole engine (all co-scheduled requests advance too — their
+  handles simply find their tokens already buffered).
+* ``handle.on_token(fn)`` registers a callback invoked as ``fn(token,
+  index)`` the moment the engine appends a token — inside ``tick()``,
+  whoever is driving it (another handle's generator, ``run_until_drained``,
+  or a manual tick loop).
+* ``handle.result()`` drives the engine until this request completes and
+  returns the finished ``Request``.
+
+Tokens stream with tick granularity: a preempted-and-recomputed request
+re-emits nothing (generated tokens are kept across preemption), so the
+stream each client observes is exactly the request's final
+``out_tokens`` — byte-for-byte, under every scheduler policy.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterator, List, TYPE_CHECKING
+
+if TYPE_CHECKING:                       # pragma: no cover - typing only
+    from repro.engine.engine import Engine, Request
+
+__all__ = ["RequestHandle"]
+
+
+class RequestHandle:
+    """Client-side streaming view of one submitted request."""
+
+    def __init__(self, engine: "Engine", req: "Request"):
+        self._engine = engine
+        self.req = req
+        self._callbacks: List[Callable[[int, int], None]] = []
+        self._delivered = 0             # callback cursor into out_tokens
+
+    @property
+    def rid(self) -> int:
+        return self.req.rid
+
+    @property
+    def done(self) -> bool:
+        return self.req.done
+
+    def on_token(self, fn: Callable[[int, int], None]) -> "RequestHandle":
+        """Register ``fn(token, index)``; returns self for chaining.
+
+        Tokens already produced before registration are replayed to ``fn``
+        immediately so late subscribers never miss the head of the stream
+        (the engine-side cursor ``_delivered`` already covers them; future
+        tokens arrive through ``_pump`` like everyone else's)."""
+        for i, tok in enumerate(self.req.out_tokens):
+            fn(tok, i)
+        self._callbacks.append(fn)
+        self._delivered = max(self._delivered, len(self.req.out_tokens))
+        return self
+
+    def _pump(self) -> None:
+        """Engine-side: deliver newly appended tokens to callbacks.
+        Iterates a snapshot so a callback that registers another callback
+        mid-delivery cannot double-deliver the in-flight token (on_token's
+        replay already covers it)."""
+        while self._delivered < len(self.req.out_tokens):
+            i = self._delivered
+            self._delivered = i + 1
+            for fn in list(self._callbacks):
+                fn(self.req.out_tokens[i], i)
+
+    def tokens(self, max_ticks: int = 10_000) -> Iterator[int]:
+        """Yield this request's tokens as the engine produces them,
+        ticking the engine whenever nothing new is buffered. Raises
+        ``RuntimeError`` after ``max_ticks`` engine ticks without the
+        request completing (the same bound ``run_until_drained`` uses)."""
+        i = 0
+        ticked = 0
+        while True:
+            out = self.req.out_tokens
+            while i < len(out):
+                yield out[i]
+                i += 1
+            if self.req.done:
+                return
+            if not self._engine.pending():
+                # request vanished without completing (e.g. external reset)
+                return
+            if ticked >= max_ticks:
+                raise RuntimeError(
+                    f"request {self.req.rid} still incomplete after "
+                    f"{max_ticks} engine ticks (streaming bound)")
+            self._engine.tick()
+            ticked += 1
+
+    def result(self, max_ticks: int = 10_000) -> "Request":
+        """Drive the engine until this request completes; return it."""
+        for _ in self.tokens(max_ticks=max_ticks):
+            pass
+        return self.req
+
+    def __repr__(self) -> str:
+        return (f"RequestHandle(rid={self.req.rid}, "
+                f"tokens={len(self.req.out_tokens)}, done={self.req.done})")

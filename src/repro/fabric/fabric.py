@@ -22,8 +22,8 @@ funcX's register-once/invoke-anywhere endpoints (PAPERS.md):
   ``make_jam_transport(mode="auto")`` did.
 * ``fabric.lease(name, state, ttl_calls=…)`` — named warm-state pool
   (rFaaS leases) generalizing the injected-mode weight-gather cache.
-* ``fabric.metrics()`` — the one telemetry surface; Trainer/Server/
-  PagedServer delegate to it.
+* ``fabric.metrics()`` — the one telemetry surface; Trainer and the
+  serving ``repro.engine.Engine`` delegate to it.
 
 Placement semantics:
 

@@ -1,4 +1,4 @@
-"""Serving launcher: batched-request continuous decoding.
+"""Serving launcher: the unified engine with pluggable schedulers.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 12 --slots 4 --max-new 16
@@ -6,6 +6,10 @@
   # paged scheduler (block-pool KV cache + chunked prefill):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --paged --slots 12 --blocks 48 --block-size 8 --chunk 8
+
+  # priority scheduling + per-token streaming:
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --paged --scheduler priority --stream --requests 4
 """
 from __future__ import annotations
 
@@ -19,8 +23,8 @@ import numpy as np
 from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.engine import Engine, Request
 from repro.launch.mesh import make_production_mesh
-from repro.runtime.server import PagedServer, Request, Server
 
 
 def main() -> None:
@@ -33,7 +37,17 @@ def main() -> None:
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--max-new", type=int, default=16)
     p.add_argument("--paged", action="store_true",
-                   help="use the paged (block-pool) scheduler")
+                   help="use the paged (block-pool) cache backend "
+                        "(cache='paged'); default is the fixed-slot cache")
+    p.add_argument("--scheduler", choices=("fifo", "priority", "sjf"),
+                   default="fifo",
+                   help="scheduler policy: fifo (submission order), "
+                        "priority (Request.priority-aware; requests here "
+                        "get priority rid %% 3 so reordering is visible), "
+                        "sjf (shortest prompt first)")
+    p.add_argument("--stream", action="store_true",
+                   help="consume per-request token streams "
+                        "(handle.tokens()) instead of run_until_drained")
     p.add_argument("--blocks", type=int, default=0,
                    help="paged: pool size in blocks (0 => slots*max_len/2 "
                         "worth of tokens — half the contiguous budget)")
@@ -48,7 +62,7 @@ def main() -> None:
                         "reference, or auto (pallas wherever TPU semantics "
                         "are available)")
     p.add_argument("--metrics-json", action="store_true",
-                   help="print the final Server.metrics() dict as JSON")
+                   help="print the final Engine.metrics() dict as JSON")
     args = p.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
@@ -66,45 +80,64 @@ def main() -> None:
     with mesh:
         if args.paged:
             # default: half the contiguous budget, floored at one full
-            # max_len sequence (PagedServer rejects anything smaller)
+            # max_len sequence (the engine rejects anything smaller)
             max_blocks_per_seq = -(-args.max_len // args.block_size)
             num_blocks = args.blocks or max(
                 max_blocks_per_seq,
                 (args.slots * args.max_len // 2) // args.block_size)
-            server = PagedServer(cfg, run, mesh, slots=args.slots,
-                                 max_len=args.max_len, num_blocks=num_blocks,
-                                 block_size=args.block_size, chunk=args.chunk,
-                                 kernel=args.paged_kernel)
+            engine = Engine(cfg, run, mesh, cache="paged", slots=args.slots,
+                            max_len=args.max_len, num_blocks=num_blocks,
+                            block_size=args.block_size, chunk=args.chunk,
+                            scheduler=args.scheduler,
+                            kernel=args.paged_kernel)
         else:
-            server = Server(cfg, run, mesh, slots=args.slots,
-                            max_len=args.max_len)
-        server.load_params()
+            engine = Engine(cfg, run, mesh, cache="slots", slots=args.slots,
+                            max_len=args.max_len, scheduler=args.scheduler)
+        engine.load_params()
         t0 = time.perf_counter()
+        handles = []
         for rid in range(args.requests):
             prompt = rng.integers(
                 0, cfg.vocab_size, size=(args.prompt_len,)).astype(np.int32)
-            server.submit(Request(rid, prompt, max_new_tokens=args.max_new))
-        done = server.run_until_drained()
+            # a visible priority spread so --scheduler priority demonstrably
+            # reorders admission (higher = more urgent)
+            handles.append(engine.submit(
+                Request(rid, prompt, max_new_tokens=args.max_new,
+                        priority=rid % 3)))
+        if args.stream:
+            # pull each handle's stream; pulling one drives the engine, so
+            # co-scheduled requests' tokens are found already buffered
+            for h in handles:
+                toks = []
+                for tok in h.tokens():
+                    toks.append(tok)
+                print(f"[stream] req {h.rid} (prio {h.req.priority}): "
+                      f"{toks[:8]}{'...' if len(toks) > 8 else ''}")
+            done = engine.completed
+        else:
+            done = engine.run_until_drained()
         dt = time.perf_counter() - t0
 
     total_tokens = sum(len(r.out_tokens) for r in done)
-    kind = "paged" if args.paged else "contig"
-    print(f"[serve:{kind}] {len(done)}/{args.requests} requests, "
-          f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, {server.ticks} ticks)")
+    kind = "paged" if args.paged else "slots"
+    m = engine.metrics()
+    print(f"[serve:{kind}/{args.scheduler}] {len(done)}/{args.requests} "
+          f"requests, {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens/dt:.1f} tok/s, {engine.ticks} ticks)")
+    print(f"[serve:{kind}] admission order: {engine.admission_log}")
     if args.paged:
-        m = server.metrics()
         print(f"[serve:paged] attention kernel={m['paged_kernel']} "
               f"live-token fraction last={m['live_token_fraction']:.3f} "
               f"mean={m['live_token_fraction_mean']:.3f}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
-    if server.fabric is not None:
-        fm = server.fabric.metrics()
+    if engine.fabric is not None:
+        fm = m["fabric"]
         print(f"[serve:{kind}] fabric '{fm['fabric']}': calls={fm['calls']} "
+              f"placements={fm['placements']} "
               f"decisions={len(fm['decisions'])} leases={list(fm['leases'])}")
     if args.metrics_json:
-        print(json.dumps(server.metrics(), default=str, indent=2))
+        print(json.dumps(m, default=str, indent=2))
 
 
 if __name__ == "__main__":

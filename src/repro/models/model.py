@@ -164,7 +164,8 @@ def init_paged_cache(cfg: ModelConfig, num_blocks: int, block_size: int,
     layer, mirroring the group structure. One *logical* block id indexes the
     same slot in every layer's pool, so the scheduler tracks a single block
     table per request. No length scalar: per-request lengths live host-side
-    in the scheduler (``PagedServer``). Raises for non-GQA architectures.
+    in the scheduler (``repro.engine.Engine``). Raises for non-GQA
+    architectures.
     """
     groups = []
     for pattern, repeats in layer_plan(cfg):

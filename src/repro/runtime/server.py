@@ -1,531 +1,61 @@
-"""Serving runtimes: fixed-slot continuous batching and the paged scheduler.
+"""Deprecated serving shims — the servers live in ``repro.engine`` now.
 
-Two servers over one mesh (the serving analogue of the trainer):
+ISSUE 5 collapsed the two server classes that used to live here into one
+``repro.engine.Engine`` with pluggable scheduler policies, streaming
+request handles, and fabric-routed step invocation:
 
-* ``Server`` — the original fixed-slot batcher: one contiguous per-slot KV
-  cache of ``max_len``, single-request prefill, one decode tick per token.
-  Kept for MLA/SSM/xLSTM archs and as the decode-bench baseline.
+* ``Server(cfg, run, mesh, slots=, max_len=)`` ->
+  ``Engine(cfg, run, mesh, cache="slots", slots=, max_len=)``
+* ``PagedServer(cfg, run, mesh, slots=, max_len=, num_blocks=, ...)`` ->
+  ``Engine(cfg, run, mesh, cache="paged", slots=, max_len=, num_blocks=,
+  ...)``
 
-* ``PagedServer`` — the paged (block) KV-cache scheduler of ISSUE 2: a
-  shared per-layer block pool (``models.kvcache.PagedKVCache``), a
-  per-request block table, chunked prefill through the same compiled step
-  as decode (no per-bucket prefill jits), FIFO admission against the
-  free-block budget, and preempt-and-requeue (recompute-style) on pool
-  exhaustion. This is the per-request analogue of the paper's
-  receiver-resident state claim: keep hot state (the pool) resident and
-  stream small messages (one chunk per tick) against it instead of
-  re-shipping state. See docs/serving.md for the scheduler state machine
-  and metrics schema.
-
-The decode step is the jitted ``make_serve_step`` / ``make_paged_serve_step``
-bundle.
+Both shims warn with ``DeprecationWarning`` and forward every argument;
+under FIFO (the default policy) the engine's schedule — preemption paths
+included — is bitwise identical to the legacy servers
+(tests/test_engine.py). ``Request`` and ``BlockPool`` are re-exported from
+their new home for pre-engine imports. See docs/engine.md for the full
+migration table.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, RunConfig
-from repro.core import transport as transport_lib
-from repro.models import model as model_lib
-from repro.runtime.steps import (make_paged_serve_step, make_serve_step,
-                                 sharding_ctx)
-
-PyTree = Any
+from repro.engine import BlockPool, Engine, Request  # noqa: F401 (re-export)
 
 
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                  # (L,) int32
-    max_new_tokens: int = 16
-    out_tokens: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-
-
-class _ServerBase:
-    """Shared plumbing: params install + transport telemetry surface."""
-
-    def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh):
-        assert not cfg.is_encoder, "encoder-only arch has no decode path"
-        self.cfg, self.run, self.mesh = cfg, run, mesh
-        self.params: Optional[PyTree] = None
-        self.cache = None
-        self.ticks = 0
-        self.completed: List[Request] = []
-
-    @property
-    def fabric(self):
-        """The decode bundle's Fabric — the invocation + telemetry surface."""
-        return self.bundle.meta.get("fabric")
-
-    @property
-    def transport_decisions(self):
-        """Auto-mode TransportEstimates recorded while tracing decode
-        (delegates to the bundle fabric's decision log)."""
-        if self.fabric is not None:
-            return [est for _, est in self.fabric.decisions]
-        return list(self.bundle.meta.get("transport_log", ()))
-
-    def _fresh_cache(self) -> PyTree:
-        raise NotImplementedError
-
-    def pending(self) -> bool:
-        """True while any request is queued or occupying a slot."""
-        raise NotImplementedError
-
-    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
-        """Serve until queue + slots drain; returns completed requests."""
-        while self.pending() and self.ticks < max_ticks:
-            self.tick()
-        return self.completed
-
-    def load_params(self, params: Optional[PyTree] = None) -> None:
-        """Install model weights (init randomly when none given)."""
-        if params is None:
-            init = jax.jit(lambda k: model_lib.init_params(self.cfg, k)[0],
-                           out_shardings=self.pshard)
-            params = init(jax.random.PRNGKey(self.run.seed))
-        self.params = params
-        self.cache = self._fresh_cache()
-
-    def _transport_metrics(self) -> Dict[str, Any]:
-        """Transport telemetry block of ``metrics()`` — delegates to the
-        bundle fabric (`fabric` key carries its full ``metrics()`` dict);
-        the two legacy keys are kept for pre-Fabric consumers."""
-        out: Dict[str, Any] = {
-            "transport_decisions": [est.describe()
-                                    for est in self.transport_decisions],
-            "transport_telemetry": transport_lib.get_telemetry().summary(),
-        }
-        if self.fabric is not None:
-            out["fabric"] = self.fabric.metrics()
-        return out
-
-
-class Server(_ServerBase):
-    """Fixed-slot continuous-batching server over one mesh."""
+class Server(Engine):
+    """Deprecated fixed-slot server; use ``Engine(cache="slots")``."""
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                  slots: int, max_len: int, eos_id: Optional[int] = None):
-        super().__init__(cfg, run, mesh)
-        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
-
-        run_decode = dataclasses.replace(
-            run, shape=dataclasses.replace(run.shape, kind="decode",
-                                           seq_len=max_len,
-                                           global_batch=slots))
-        self.bundle = make_serve_step(cfg, run_decode, mesh,
-                                      batch_override=slots)
-        self.decode = jax.jit(self.bundle.fn,
-                              in_shardings=self.bundle.in_shardings,
-                              out_shardings=self.bundle.out_shardings,
-                              donate_argnums=(1,))
-        _, self.params_shapes, _, _, self.pshard = sharding_ctx(
-            cfg, run_decode, mesh)
-        self.slot_req: List[Optional[Request]] = [None] * slots
-        self.queue: List[Request] = []
-
-    def _fresh_cache(self) -> PyTree:
-        return jax.jit(
-            lambda: model_lib.init_cache(self.cfg, self.slots, self.max_len))()
-
-    def pending(self) -> bool:
-        return bool(self.queue or any(r is not None for r in self.slot_req))
-
-    def metrics(self) -> Dict[str, Any]:
-        """Serving + transport telemetry snapshot (monitoring surface)."""
-        return {
-            "ticks": self.ticks,
-            "active_slots": sum(r is not None for r in self.slot_req),
-            "queued": len(self.queue),
-            "completed": len(self.completed),
-            **self._transport_metrics(),
-        }
-
-    # -- request plumbing ----------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        self.queue.append(req)
-
-    def _prefill(self, slot: int, req: Request) -> None:
-        """Run the prompt through the model, writing this slot's cache rows.
-
-        Single-slot prefill: a (1, L) forward with a fresh length-``max_len``
-        cache, then scatter the slot row into the live batched cache.
-        """
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
-        logits, filled, _ = model_lib.forward(self.cfg, self.params, prompt,
-                                              cache=one_cache)
-        next_tok = int(jnp.argmax(logits[0, -1, :]))
-        req.out_tokens.append(next_tok)
-
-        def scatter(live, one):
-            # Cache leaves may carry a leading layer-stack dim
-            # ((repeats, B, ...) for scanned groups), so the batch axis is
-            # located structurally: the first axis where the live leaf has
-            # ``slots`` extent, the one-row prefill leaf has extent 1, and
-            # every leading dim matches. (Matching on shape[:1] mistook the
-            # layer-stack dim for batch: slots=1 silently dropped the whole
-            # prefill and slots==repeats scattered layers as slots.)
-            if getattr(live, "ndim", 0) == 0:
-                return live
-            for ax in range(live.ndim):
-                if (live.shape[ax] == self.slots and one.shape[ax] == 1
-                        and live.shape[:ax] == one.shape[:ax]):
-                    idx = (slice(None),) * ax + (slot,)
-                    return live.at[idx].set(jnp.take(one, 0, axis=ax))
-            return live
-
-        # lengths differ per slot; keep the max (cache length is per-batch
-        # scalar — decode masks by absolute position so overshoot is safe)
-        new_groups = jax.tree.map(scatter, self.cache["groups"],
-                                  filled["groups"])
-        self.cache = {"length": jnp.maximum(self.cache["length"],
-                                            filled["length"]),
-                      "groups": new_groups}
-        self.slot_req[slot] = req
-
-    def _admit(self) -> None:
-        for slot in range(self.slots):
-            if self.slot_req[slot] is None and self.queue:
-                self._prefill(slot, self.queue.pop(0))
-
-    # -- decode tick -----------------------------------------------------------------
-    def tick(self) -> int:
-        """Admit + one decode step for all active slots. Returns #active."""
-        self._admit()
-        active = [i for i, r in enumerate(self.slot_req) if r is not None]
-        if not active:
-            return 0
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for i, r in enumerate(self.slot_req):
-            if r is not None:
-                tokens[i, 0] = r.out_tokens[-1]
-        args = [self.params, self.cache, jnp.asarray(tokens)]
-        if self.cfg.attention is not None and self.cfg.attention.mrope:
-            pos = np.broadcast_to(
-                np.asarray(self.cache["length"])[None, None],
-                (3, self.slots, 1)).astype(np.int32)
-            args.append(jnp.asarray(pos))
-        next_tok, self.cache = self.decode(*args)
-        next_np = np.asarray(next_tok)
-        for i in active:
-            r = self.slot_req[i]
-            tok = int(next_np[i, 0])
-            r.out_tokens.append(tok)
-            if (len(r.out_tokens) >= r.max_new_tokens
-                    or (self.eos_id is not None and tok == self.eos_id)):
-                r.done = True
-                self.completed.append(r)
-                self.slot_req[i] = None
-        self.ticks += 1
-        return len(active)
+        warnings.warn(
+            "repro.runtime.server.Server is deprecated; use "
+            "repro.engine.Engine(cfg, run, mesh, cache='slots', slots=..., "
+            "max_len=...) — same loop, pluggable scheduler, streaming "
+            "submit (docs/engine.md)", DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, run, mesh, cache="slots", slots=slots,
+                         max_len=max_len, eos_id=eos_id)
 
 
-# ---------------------------------------------------------------------------
-# Paged scheduler
-# ---------------------------------------------------------------------------
-
-class BlockPool:
-    """Host-side free list over the device block pool's block ids."""
-
-    def __init__(self, num_blocks: int):
-        self.num_blocks = num_blocks
-        self._free: List[int] = list(range(num_blocks))
-
-    @property
-    def free_blocks(self) -> int:
-        return len(self._free)
-
-    @property
-    def used_blocks(self) -> int:
-        return self.num_blocks - len(self._free)
-
-    def alloc(self) -> Optional[int]:
-        return self._free.pop() if self._free else None
-
-    def release(self, blocks: List[int]) -> None:
-        self._free.extend(blocks)
-
-
-@dataclasses.dataclass
-class _Entry:
-    """Scheduler state for one request (states: queued -> running ->
-    finished, with running -> queued on preemption)."""
-
-    req: Request
-    pos: int = 0                        # tokens resident in the pool
-    blocks: List[int] = dataclasses.field(default_factory=list)
-    admit_seq: int = -1                 # first-admission stamp (victim order)
-    submit_time: float = 0.0
-    first_token_time: Optional[float] = None
-    preemptions: int = 0
-    # prompt as python ints, converted once at submit (seq() runs every tick)
-    prompt_tokens: List[int] = dataclasses.field(default_factory=list)
-
-    def seq(self) -> List[int]:
-        """prompt ++ generated — what must be resident before decoding."""
-        return self.prompt_tokens + self.req.out_tokens
-
-
-class PagedServer(_ServerBase):
-    """Paged-KV continuous-batching scheduler (chunked prefill + preemption).
-
-    Requests admit FIFO against the free-block budget, prefill ``chunk``
-    tokens per tick through the same compiled step decode uses, and are
-    preempted (blocks freed, requeued at the front, later recomputed) when
-    the pool runs dry — greedy decode makes the recompute path reproduce
-    identical tokens. ``max_len`` bounds prompt+generation per request;
-    ``num_blocks * block_size`` is the whole server's KV budget.
-    """
+class PagedServer(Engine):
+    """Deprecated paged scheduler; use ``Engine(cache="paged")``."""
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                  slots: int, max_len: int, num_blocks: int,
                  block_size: int = 16, chunk: int = 8,
                  eos_id: Optional[int] = None, kernel: str = "auto"):
-        super().__init__(cfg, run, mesh)
-        self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
-        self.block_size, self.chunk = block_size, chunk
-        self.num_blocks = num_blocks
-        self.max_blocks_per_seq = -(-max_len // block_size)
-        if num_blocks < self.max_blocks_per_seq:
-            raise ValueError(
-                f"num_blocks={num_blocks} cannot hold one max_len={max_len} "
-                f"request ({self.max_blocks_per_seq} blocks of {block_size})")
-
-        run_decode = dataclasses.replace(
-            run, shape=dataclasses.replace(run.shape, kind="decode",
-                                           seq_len=max_len,
-                                           global_batch=slots))
-        self.bundle = make_paged_serve_step(
-            cfg, run_decode, mesh, slots=slots, chunk=chunk,
-            num_blocks=num_blocks, block_size=block_size,
-            max_blocks_per_seq=self.max_blocks_per_seq, kernel=kernel)
-        # resolved attention path ("pallas" | "ref") + per-step live-token
-        # fraction: how much of the pool's token capacity is actually
-        # resident each tick — the occupancy knob the stash-resident kernel's
-        # bytes-read win scales with (docs/serving.md)
-        self.paged_kernel: str = self.bundle.meta["paged_kernel"]
-        self._live_frac_last = 0.0
-        self._live_frac_sum = 0.0
-        self._live_frac_ticks = 0
-        self.step = jax.jit(self.bundle.fn,
-                            in_shardings=self.bundle.in_shardings,
-                            out_shardings=self.bundle.out_shardings,
-                            donate_argnums=(1,))
-        _, self.params_shapes, _, _, self.pshard = sharding_ctx(
-            cfg, run_decode, mesh)
-
-        self.pool = BlockPool(num_blocks)
-        self.slot_entry: List[Optional[_Entry]] = [None] * slots
-        self.queue: List[_Entry] = []
-        self._finished: List[_Entry] = []
-        self._admit_counter = 0
-        self.admission_log: List[int] = []     # rids in first-admission order
-        self.preempt_count = 0
-        self.peak_active = 0
-        self.peak_blocks_used = 0
-
-    def _fresh_cache(self) -> PyTree:
-        return jax.jit(lambda: model_lib.init_paged_cache(
-            self.cfg, self.num_blocks, self.block_size))()
-
-    def pending(self) -> bool:
-        return bool(self.queue
-                    or any(e is not None for e in self.slot_entry))
-
-    def metrics(self) -> Dict[str, Any]:
-        """Scheduler + pool + transport telemetry snapshot."""
-        done = [e for e in self._entries_everywhere() if e.req.done]
-        ttfts = sorted(e.first_token_time - e.submit_time
-                       for e in done if e.first_token_time is not None)
-        return {
-            "ticks": self.ticks,
-            "active_slots": sum(e is not None for e in self.slot_entry),
-            "peak_active_slots": self.peak_active,
-            "queued": len(self.queue),
-            "completed": len(self.completed),
-            "paged_kernel": self.paged_kernel,
-            "live_token_fraction": self._live_frac_last,
-            "live_token_fraction_mean": (
-                self._live_frac_sum / self._live_frac_ticks
-                if self._live_frac_ticks else 0.0),
-            "num_blocks": self.num_blocks,
-            "block_size": self.block_size,
-            "chunk": self.chunk,
-            "free_blocks": self.pool.free_blocks,
-            "used_blocks": self.pool.used_blocks,
-            "peak_used_blocks": self.peak_blocks_used,
-            "occupancy": self.pool.used_blocks / max(1, self.num_blocks),
-            "preemptions": self.preempt_count,
-            "ttft_s": ttfts,
-            **self._transport_metrics(),
-        }
-
-    def _entries_everywhere(self) -> List[_Entry]:
-        out = list(self.queue) + [e for e in self.slot_entry if e is not None]
-        out.extend(self._finished)
-        return out
-
-    # -- request plumbing ----------------------------------------------------
-    def submit(self, req: Request) -> None:
-        # reject up front what could never finish: past this check a
-        # request's sequence always fits max_blocks_per_seq blocks, so the
-        # block table row cannot overflow and a lone request never starves
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds "
-                f"max_len={self.max_len}")
-        entry = _Entry(req=req, submit_time=time.perf_counter(),
-                       prompt_tokens=[int(t) for t in req.prompt])
-        self.queue.append(entry)
-
-    def _blocks_for(self, tokens: int) -> int:
-        return -(-tokens // self.block_size)
-
-    def _admit(self) -> None:
-        """FIFO admission: the head request admits only when a slot is free
-        AND the pool can hold its whole resident prefix plus one decode
-        token; later requests never jump the queue. ``budget`` tracks the
-        blocks already promised to entries admitted in this same call —
-        their allocation happens later in tick phase A, so reading
-        ``pool.free_blocks`` alone would over-commit the pool and trigger
-        spurious preemptions of just-admitted requests."""
-        budget = self.pool.free_blocks
-        while self.queue:
-            free_slots = [i for i, e in enumerate(self.slot_entry)
-                          if e is None]
-            if not free_slots:
-                return
-            entry = self.queue[0]
-            need = self._blocks_for(len(entry.seq()) + 1)
-            if budget < need:
-                return                      # head blocked => everyone waits
-            budget -= need
-            self.queue.pop(0)
-            if entry.admit_seq < 0:
-                entry.admit_seq = self._admit_counter
-                self._admit_counter += 1
-                self.admission_log.append(entry.req.rid)
-            self.slot_entry[free_slots[0]] = entry
-
-    def _pick_victim(self, exclude: _Entry) -> Optional[_Entry]:
-        """Youngest-admitted running entry other than ``exclude``."""
-        running = [e for e in self.slot_entry
-                   if e is not None and e is not exclude]
-        return max(running, key=lambda e: e.admit_seq) if running else None
-
-    def _preempt(self, victim: _Entry) -> None:
-        """Free the victim's blocks and requeue it in admission order: before
-        every never-admitted entry and every previously-preempted entry with
-        a younger admit stamp. (Plain front-insertion breaks FIFO when two
-        preemptions land out of stamp order — e.g. the youngest running
-        entry grows and evicts a middle-aged one, then an older entry evicts
-        the youngest.) Generated tokens are kept; on re-admission the
-        prompt+generated prefix is re-prefilled (recompute-style
-        preemption)."""
-        self.pool.release(victim.blocks)
-        victim.blocks = []
-        victim.pos = 0
-        victim.preemptions += 1
-        self.preempt_count += 1
-        self.slot_entry[self.slot_entry.index(victim)] = None
-        at = next((i for i, e in enumerate(self.queue)
-                   if e.admit_seq < 0 or e.admit_seq > victim.admit_seq),
-                  len(self.queue))
-        self.queue.insert(at, victim)
-
-    def _ensure_blocks(self, entry: _Entry, upto_tokens: int) -> None:
-        """Grow ``entry.blocks`` to cover ``upto_tokens``, preempting the
-        youngest other running request whenever the pool is dry."""
-        need = self._blocks_for(upto_tokens)
-        while len(entry.blocks) < need:
-            blk = self.pool.alloc()
-            if blk is not None:
-                entry.blocks.append(blk)
-                continue
-            victim = self._pick_victim(exclude=entry)
-            if victim is None:
-                # unreachable given the num_blocks >= max_blocks_per_seq
-                # init check: a lone request always fits
-                raise RuntimeError("block pool exhausted by a single request")
-            self._preempt(victim)
-
-    # -- tick ----------------------------------------------------------------
-    def tick(self) -> int:
-        """Admit, allocate, and advance every active slot one chunk (prefill)
-        or one token (decode). Returns the number of rows advanced."""
-        self._admit()
-
-        # phase A: chunk sizing + block allocation (may preempt victims,
-        # including entries already scheduled earlier in this loop).
-        # seq is materialized once per entry per tick — it is O(seq_len).
-        sched: List[Tuple[int, _Entry, int, List[int]]] = []
-        for slot in range(self.slots):
-            entry = self.slot_entry[slot]
-            if entry is None:
-                continue
-            seq = entry.seq()
-            n = min(self.chunk, len(seq) - entry.pos)
-            self._ensure_blocks(entry, entry.pos + n)
-            sched.append((slot, entry, n, seq))
-        sched = [item for item in sched if self.slot_entry[item[0]] is item[1]]
-        # the tick counts even when nothing is schedulable, so
-        # run_until_drained's max_ticks stays a hard bound (a queue head
-        # that can never admit must not spin forever)
-        self.ticks += 1
-        if not sched:
-            return 0
-        self.peak_active = max(self.peak_active, len(sched))
-        self.peak_blocks_used = max(self.peak_blocks_used,
-                                    self.pool.used_blocks)
-        # tokens resident after this step's writes / pool token capacity
-        live = sum(entry.pos + n for _, entry, n, _ in sched)
-        self._live_frac_last = live / (self.num_blocks * self.block_size)
-        self._live_frac_sum += self._live_frac_last
-        self._live_frac_ticks += 1
-
-        # phase B: build the fixed-shape step inputs
-        m = self.max_blocks_per_seq
-        tokens = np.zeros((self.slots, self.chunk), np.int32)
-        tables = np.full((self.slots, m), -1, np.int32)
-        starts = np.zeros((self.slots,), np.int32)
-        n_valid = np.zeros((self.slots,), np.int32)
-        for slot, entry, n, seq in sched:
-            tokens[slot, :n] = seq[entry.pos:entry.pos + n]
-            tables[slot, :len(entry.blocks)] = entry.blocks
-            starts[slot] = entry.pos
-            n_valid[slot] = n
-
-        next_tok, self.cache = self.step(
-            self.params, self.cache, jnp.asarray(tokens), jnp.asarray(tables),
-            jnp.asarray(starts), jnp.asarray(n_valid))
-        next_np = np.asarray(next_tok)
-
-        for slot, entry, n, seq in sched:
-            known = len(seq)
-            entry.pos += n
-            if entry.pos < known:
-                continue                     # mid-prefill: output discarded
-            tok = int(next_np[slot])
-            entry.req.out_tokens.append(tok)
-            if len(entry.req.out_tokens) == 1:
-                entry.first_token_time = time.perf_counter()
-            if (len(entry.req.out_tokens) >= entry.req.max_new_tokens
-                    or (self.eos_id is not None and tok == self.eos_id)):
-                entry.req.done = True
-                self.pool.release(entry.blocks)
-                entry.blocks = []
-                self.completed.append(entry.req)
-                self._finished.append(entry)
-                self.slot_entry[slot] = None
-
-        return len(sched)
+        warnings.warn(
+            "repro.runtime.server.PagedServer is deprecated; use "
+            "repro.engine.Engine(cfg, run, mesh, cache='paged', slots=..., "
+            "max_len=..., num_blocks=...) — same loop, pluggable scheduler, "
+            "streaming submit (docs/engine.md)",
+            DeprecationWarning, stacklevel=2)
+        super().__init__(cfg, run, mesh, cache="paged", slots=slots,
+                         max_len=max_len, num_blocks=num_blocks,
+                         block_size=block_size, chunk=chunk, eos_id=eos_id,
+                         kernel=kernel)

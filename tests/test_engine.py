@@ -1,0 +1,434 @@
+"""Engine API tests (ISSUE 5): legacy parity, scheduler policies,
+streaming, unified metrics, and the deprecation contract.
+
+Parity ground rules: under ``FIFOPolicy`` the engine must reproduce the
+legacy ``Server``/``PagedServer`` *schedule* — admission order, tick
+counts, preemption counts — and emit bitwise-identical greedy tokens,
+including through preemption-and-recompute, on single- and multi-device
+meshes ((1,4) and (2,2) over the conftest's 4 simulated CPU devices).
+Reordering policies (priority/SJF) must change admission order without
+changing any request's tokens (scheduling decides *when*, never *what*).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.engine import (FIFOPolicy, PriorityPolicy, SJFPolicy, Engine,
+                          Request, SchedulerState, resolve_policy)
+from repro.models import model as model_lib
+from repro.runtime.server import PagedServer, Server
+
+
+@pytest.fixture(scope="module")
+def mesh11_module():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def setup(mesh11_module):
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    with mesh11_module:
+        params = jax.jit(lambda k: model_lib.init_params(cfg, k)[0])(
+            jax.random.PRNGKey(0))
+    return cfg, run, mesh11_module, params
+
+
+def _mesh(dp: int, tp: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < dp * tp:
+        pytest.skip(f"needs {dp * tp} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:dp * tp]).reshape(dp, tp), ("data", "model"))
+
+
+def _mk_engine(setup, **kw):
+    cfg, run, mesh, params = setup
+    args = dict(cache="paged", slots=3, max_len=32, num_blocks=16,
+                block_size=4, chunk=4)
+    args.update(kw)
+    with mesh:
+        e = Engine(cfg, run, mesh, **args)
+        e.load_params(params)
+    return e
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    toks = [int(t) for t in prompt]
+    out = []
+    for _ in range(n):
+        logits, _, _ = model_lib.forward(cfg, params,
+                                         jnp.asarray([toks], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def _prompts(cfg, n, rng, lo=4, hi=12):
+    return [rng.integers(0, cfg.vocab_size,
+                         size=(int(rng.integers(lo, hi)),)).astype(np.int32)
+            for _ in range(n)]
+
+
+def _schedule_fingerprint(server_like):
+    return {
+        "outputs": {r.rid: list(r.out_tokens) for r in server_like.completed},
+        "admission_log": list(server_like.admission_log),
+        "ticks": server_like.ticks,
+        "preemptions": server_like.preempt_count,
+    }
+
+
+# ---------------------------------------------------------------------------
+# legacy parity (the acceptance criterion), (1,4) and (2,2) meshes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
+def test_paged_engine_matches_legacy_fifo_with_preemption(dp, tp):
+    """Engine(cache='paged') under FIFO == legacy PagedServer bitwise —
+    same tokens, same admission order, same tick/preemption counts — on
+    multi-device meshes, with the preemption path exercised."""
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = _mesh(dp, tp)
+    kw = dict(slots=2, max_len=32, num_blocks=10, block_size=4, chunk=4)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, 2, rng, lo=10, hi=11)
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="paged", scheduler="fifo", **kw)
+        eng.load_params()
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=14))
+        eng.run_until_drained()
+
+        legacy = PagedServer(cfg, run, mesh, **kw)
+        legacy.load_params(eng.params)
+        for rid, p in enumerate(prompts):
+            legacy.submit(Request(rid, p, max_new_tokens=14))
+        legacy.run_until_drained()
+    assert eng.preempt_count >= 1, "test did not exercise preemption"
+    assert _schedule_fingerprint(eng) == _schedule_fingerprint(legacy)
+
+
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
+def test_slots_engine_matches_legacy_fifo(dp, tp):
+    """Engine(cache='slots') under FIFO == legacy Server bitwise on
+    multi-device meshes (two admission waves over 2 slots)."""
+    cfg = get_smoke("llama3.2-1b")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = _mesh(dp, tp)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
+               for _ in range(4)]
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="slots", slots=2, max_len=32)
+        eng.load_params()
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=4))
+        done_e = eng.run_until_drained()
+
+        legacy = Server(cfg, run, mesh, slots=2, max_len=32)
+        legacy.load_params(eng.params)
+        for rid, p in enumerate(prompts):
+            legacy.submit(Request(rid, p, max_new_tokens=4))
+        done_l = legacy.run_until_drained()
+    assert len(done_e) == len(done_l) == 4
+    assert ({r.rid: r.out_tokens for r in done_e}
+            == {r.rid: r.out_tokens for r in done_l})
+    assert eng.ticks == legacy.ticks
+
+
+def test_paged_engine_matches_unbatched_greedy(setup):
+    """Single-device identity spot check: engine outputs == the unbatched
+    greedy forward (the model's definition of the right answer)."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup)
+    rng = np.random.default_rng(0)
+    prompts = _prompts(cfg, 4, rng)
+    with mesh:
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=4))
+        done = eng.run_until_drained()
+    assert len(done) == 4
+    by_rid = {r.rid: r.out_tokens for r in done}
+    for rid, p in enumerate(prompts):
+        assert by_rid[rid] == _greedy_reference(cfg, params, p, 4), rid
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies
+# ---------------------------------------------------------------------------
+
+def test_priority_policy_reorders_admission(setup):
+    """With one slot and everything queued up front, PriorityPolicy must
+    admit by priority (desc), ties by submission order — demonstrably NOT
+    the FIFO order — while every request's tokens stay greedy-exact."""
+    cfg, run, mesh, params = setup
+    priorities = [0, 5, 1, 9]
+    rng = np.random.default_rng(10)
+    prompts = _prompts(cfg, 4, rng, lo=5, hi=8)
+
+    logs = {}
+    outputs = {}
+    for policy in ("fifo", "priority"):
+        eng = _mk_engine(setup, slots=1, scheduler=policy)
+        with mesh:
+            for rid, p in enumerate(prompts):
+                eng.submit(Request(rid, p, max_new_tokens=3,
+                                   priority=priorities[rid]))
+            eng.run_until_drained()
+        logs[policy] = list(eng.admission_log)
+        outputs[policy] = {r.rid: list(r.out_tokens) for r in eng.completed}
+    assert logs["fifo"] == [0, 1, 2, 3]
+    assert logs["priority"] == [3, 1, 2, 0]       # by priority 9, 5, 1, 0
+    assert logs["priority"] != logs["fifo"]
+    # scheduling decides when, never what
+    assert outputs["priority"] == outputs["fifo"]
+    # per-request records surface the priorities
+    assert [r["priority"] for r in sorted(eng.metrics()["requests"],
+                                          key=lambda r: r["rid"])] \
+        == priorities
+
+
+def test_sjf_policy_admits_shortest_prompt_first(setup):
+    cfg, run, mesh, params = setup
+    rng = np.random.default_rng(11)
+    lens = [10, 3, 6]
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in lens]
+    eng = _mk_engine(setup, slots=1, scheduler="sjf")
+    with mesh:
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=2))
+        eng.run_until_drained()
+    assert eng.admission_log == [1, 2, 0]         # by prompt length 3, 6, 10
+    assert len(eng.completed) == 3
+
+
+def test_priority_policy_on_slots_cache(setup):
+    """Policies are backend-agnostic: the fixed-slot cache reorders too."""
+    cfg, run, mesh, params = setup
+    rng = np.random.default_rng(12)
+    prompts = [rng.integers(0, cfg.vocab_size, size=(5,)).astype(np.int32)
+               for _ in range(3)]
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="slots", slots=1, max_len=32,
+                     scheduler="priority")
+        eng.load_params(params)
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=2, priority=rid))
+        eng.run_until_drained()
+    assert eng.admission_log == [2, 1, 0]
+
+
+def test_custom_policy_object_and_bad_scheduler_rejected(setup):
+    cfg, run, mesh, params = setup
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        with mesh:
+            Engine(cfg, run, mesh, cache="paged", slots=2, max_len=32,
+                   num_blocks=8, block_size=4, scheduler="lifo")
+    with pytest.raises(TypeError, match="SchedulerPolicy"):
+        with mesh:
+            Engine(cfg, run, mesh, cache="paged", slots=2, max_len=32,
+                   num_blocks=8, block_size=4, scheduler=object())
+    # a ready policy object passes straight through
+    pol = PriorityPolicy()
+    assert resolve_policy(pol) is pol
+    eng = _mk_engine(setup, scheduler=FIFOPolicy())
+    assert eng.policy.name == "fifo"
+
+
+def test_policy_budget_protocol():
+    """budget() is the block-affordability hook: 0 when there is no pool,
+    the exact block need when there is one."""
+    req = type("R", (), {"priority": 0})()
+    entry = type("E", (), {"seq": lambda self: list(range(9)),
+                           "prompt_tokens": [], "arrival_seq": 0,
+                           "admit_seq": 0, "req": req})()
+    blocks_needed = lambda e: -(-(len(e.seq()) + 1) // 4)
+    for pol in (FIFOPolicy(), PriorityPolicy(), SJFPolicy()):
+        no_pool = SchedulerState(tick=0, free_slots=1, block_budget=None,
+                                 blocks_needed=blocks_needed)
+        pool = SchedulerState(tick=0, free_slots=1, block_budget=2,
+                              blocks_needed=blocks_needed)
+        assert pol.budget(entry, no_pool) == 0
+        assert pol.budget(entry, pool) == 3       # ceil(10 / 4)
+        # 3 needed > 2 budgeted => nobody admits
+        assert pol.admit([entry], pool) is None
+
+
+# ---------------------------------------------------------------------------
+# streaming
+# ---------------------------------------------------------------------------
+
+def test_stream_tokens_and_callbacks_no_drain(setup):
+    """handle.tokens() drives the engine itself; the stream and the
+    on_token callbacks both observe exactly the request's final tokens."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=2)
+    rng = np.random.default_rng(20)
+    prompts = _prompts(cfg, 2, rng, lo=5, hi=9)
+    with mesh:
+        h0 = eng.submit(Request(0, prompts[0], max_new_tokens=4))
+        h1 = eng.submit(Request(1, prompts[1], max_new_tokens=4))
+        cb = []
+        h0.on_token(lambda tok, i: cb.append((i, tok)))
+        streamed0 = list(h0.tokens())             # no run_until_drained
+        streamed1 = list(h1.tokens())             # already buffered by now
+    assert h0.done and h1.done
+    assert streamed0 == h0.req.out_tokens
+    assert streamed0 == _greedy_reference(cfg, params, prompts[0], 4)
+    assert streamed1 == _greedy_reference(cfg, params, prompts[1], 4)
+    assert cb == list(enumerate(streamed0))
+
+
+def test_stream_survives_preemption(setup):
+    """A preempted-and-recomputed request's stream is still exactly its
+    final tokens (kept tokens are not re-emitted)."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=2, num_blocks=10, max_len=32)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, 2, rng, lo=10, hi=11)
+    with mesh:
+        handles = [eng.submit(Request(rid, p, max_new_tokens=14))
+                   for rid, p in enumerate(prompts)]
+        streams = [list(h.tokens()) for h in handles]
+    assert eng.preempt_count >= 1, "test did not exercise preemption"
+    for rid, p in enumerate(prompts):
+        ref = _greedy_reference(cfg, params, p, 14)
+        assert streams[rid] == ref == handles[rid].req.out_tokens
+
+
+def test_on_token_late_subscriber_catches_up(setup):
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=1)
+    rng = np.random.default_rng(21)
+    prompt = _prompts(cfg, 1, rng, lo=5, hi=6)[0]
+    with mesh:
+        h = eng.submit(Request(0, prompt, max_new_tokens=4))
+        eng.run_until_drained()
+        late = []
+        h.on_token(lambda tok, i: late.append(tok))
+        assert h.result() is h.req                  # result() is a no-op now
+    assert late == h.req.out_tokens
+
+
+def test_handle_result_drives_to_completion(setup):
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=1)
+    rng = np.random.default_rng(22)
+    prompt = _prompts(cfg, 1, rng, lo=5, hi=6)[0]
+    with mesh:
+        h = eng.submit(Request(7, prompt, max_new_tokens=3))
+        req = h.result()
+    assert req.done and len(req.out_tokens) == 3
+    assert not eng.pending()
+
+
+# ---------------------------------------------------------------------------
+# unified metrics + per-request records
+# ---------------------------------------------------------------------------
+
+def test_unified_metrics_schema_both_backends(setup):
+    cfg, run, mesh, params = setup
+    core_keys = ("engine", "ticks", "active_slots", "peak_active_slots",
+                 "queued", "completed", "preemptions", "ttft_s", "requests",
+                 "transport_decisions", "transport_telemetry", "fabric")
+    paged = _mk_engine(setup)
+    with mesh:
+        slots = Engine(cfg, run, mesh, cache="slots", slots=2, max_len=32)
+        slots.load_params(params)
+    for eng, cache, step in ((paged, "paged", "engine.paged_step"),
+                             (slots, "slots", "engine.decode")):
+        m = eng.metrics()
+        for key in core_keys:
+            assert key in m, (cache, key)
+        assert m["engine"]["cache"] == cache
+        assert m["engine"]["scheduler"] == "fifo"
+        # fabric-routed placement: the registered steps resolve "local"
+        assert m["fabric"]["placements"][step] == "local"
+    # paged extras keep the legacy names
+    pm = paged.metrics()
+    for key in ("num_blocks", "block_size", "chunk", "free_blocks",
+                "used_blocks", "peak_used_blocks", "occupancy",
+                "paged_kernel", "live_token_fraction",
+                "live_token_fraction_mean"):
+        assert key in pm, key
+    assert m["fabric"]["placements"]["engine.prefill"] == "local"
+
+
+def test_fabric_records_step_calls(setup):
+    """Every tick's step invocation goes through fabric.call — the call
+    counter is the proof of the one-seam routing."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=2)
+    rng = np.random.default_rng(30)
+    with mesh:
+        for rid, p in enumerate(_prompts(cfg, 2, rng, lo=4, hi=6)):
+            eng.submit(Request(rid, p, max_new_tokens=3))
+        eng.run_until_drained()
+    m = eng.metrics()
+    assert m["fabric"]["calls"]["engine.paged_step"] >= eng.ticks
+
+
+def test_request_arrival_tick_priority_and_ttft_records(setup):
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=1)
+    rng = np.random.default_rng(31)
+    prompts = _prompts(cfg, 2, rng, lo=4, hi=6)
+    with mesh:
+        eng.submit(Request(0, prompts[0], max_new_tokens=3, priority=2))
+        eng.run_until_drained()
+        # second request arrives after the engine has ticked
+        eng.submit(Request(1, prompts[1], max_new_tokens=3))
+        eng.run_until_drained()
+    recs = {r["rid"]: r for r in eng.metrics()["requests"]}
+    assert recs[0]["arrival_tick"] == 0 and recs[0]["priority"] == 2
+    assert recs[1]["arrival_tick"] > 0 and recs[1]["priority"] == 0
+    for rec in recs.values():
+        assert rec["done"] and rec["ttft_s"] is not None
+        assert rec["first_token_tick"] >= rec["arrival_tick"]
+    # the sorted TTFT distribution matches the per-request records
+    assert eng.metrics()["ttft_s"] == sorted(
+        r["ttft_s"] for r in recs.values())
+
+
+# ---------------------------------------------------------------------------
+# deprecation contract (the pytest.ini exemptions, proven to fire)
+# ---------------------------------------------------------------------------
+
+def test_server_shim_warns(setup):
+    cfg, run, mesh, _ = setup
+    with pytest.warns(DeprecationWarning,
+                      match="repro.runtime.server.Server is deprecated"):
+        with mesh:
+            Server(cfg, run, mesh, slots=1, max_len=32)
+
+
+def test_paged_server_shim_warns(setup):
+    cfg, run, mesh, _ = setup
+    with pytest.warns(DeprecationWarning,
+                      match="repro.runtime.server.PagedServer is deprecated"):
+        with mesh:
+            PagedServer(cfg, run, mesh, slots=1, max_len=32, num_blocks=8,
+                        block_size=4)
+
+
+def test_engine_rejects_bad_cache_kind(setup):
+    cfg, run, mesh, _ = setup
+    with pytest.raises(ValueError, match="cache must be"):
+        with mesh:
+            Engine(cfg, run, mesh, cache="ring", slots=1, max_len=32)
+    with pytest.raises(ValueError, match="requires num_blocks"):
+        with mesh:
+            Engine(cfg, run, mesh, cache="paged", slots=1, max_len=32)

@@ -1,9 +1,11 @@
-"""KV-cache unit tests: ring-wrap regression + paged pool primitives."""
+"""KV-cache unit tests: ring-wrap regression + paged pool primitives +
+host-side BlockPool lifecycle guards."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.engine import BlockPool
 from repro.models.kvcache import KVCache, PagedKVCache, PagedLayout
 
 
@@ -120,3 +122,54 @@ def test_paged_idle_row_writes_nothing():
     layout = _layout(tables, [0], [0], bs)         # n_valid = 0
     pool = pool.write(k_new, k_new, layout)
     assert np.asarray(pool.k_pool).sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# host-side BlockPool lifecycle guards (ISSUE 5 satellite): double-free and
+# double-alloc must raise with the offending block id instead of silently
+# aliasing two requests onto one block
+# ---------------------------------------------------------------------------
+
+def test_blockpool_alloc_release_roundtrip():
+    pool = BlockPool(4)
+    blocks = [pool.alloc() for _ in range(4)]
+    assert sorted(blocks) == [0, 1, 2, 3]
+    assert pool.alloc() is None and pool.free_blocks == 0
+    pool.release(blocks)
+    assert pool.free_blocks == 4 and pool.used_blocks == 0
+
+
+def test_blockpool_double_free_raises_with_id():
+    pool = BlockPool(4)
+    blk = pool.alloc()
+    pool.release([blk])
+    with pytest.raises(ValueError, match=f"double-free of block {blk}"):
+        pool.release([blk])
+    # a never-allocated block is also a double-free (it is already free)
+    with pytest.raises(ValueError, match="double-free of block 0"):
+        pool.release([0])
+
+
+def test_blockpool_release_unknown_id_raises():
+    pool = BlockPool(2)
+    with pytest.raises(ValueError, match="unknown block id 7"):
+        pool.release([7])
+    with pytest.raises(ValueError, match="unknown block id -1"):
+        pool.release([-1])
+
+
+def test_blockpool_double_free_in_one_batch_raises():
+    pool = BlockPool(4)
+    a, b = pool.alloc(), pool.alloc()
+    with pytest.raises(ValueError, match=f"double-free of block {a}"):
+        pool.release([b, a, a])
+
+
+def test_blockpool_double_alloc_detected_on_corruption():
+    """If the free list is ever corrupted into handing the same id out
+    twice, alloc must raise instead of aliasing two requests' KV blocks."""
+    pool = BlockPool(2)
+    blk = pool.alloc()
+    pool._free.append(blk)              # simulate the corruption
+    with pytest.raises(RuntimeError, match=f"double-alloc of block {blk}"):
+        pool.alloc()

@@ -43,6 +43,11 @@ BLOCK_SIZE = 8
 # equal budget: 4 slots * 96 rows = 384 pool tokens = 48 blocks
 NUM_BLOCKS = SLOTS_CONTIG * MAX_LEN // BLOCK_SIZE
 POLICIES = ("fifo", "priority", "sjf")
+# backend x model-family grid (schema v2): the recurrent backend serves the
+# recurrent archs with the same request shape at a smaller count (every
+# extra arch costs a compile)
+N_RECURRENT = 6
+RECURRENT_ARCHS = ("mamba-130m", "xlstm-1.3b")
 
 
 def _requests(prompts) -> List[Request]:
@@ -82,6 +87,43 @@ def _paged_engine(cfg, run, mesh, scheduler: str) -> Engine:
                   max_len=MAX_LEN, num_blocks=NUM_BLOCKS,
                   block_size=BLOCK_SIZE, chunk=BLOCK_SIZE,
                   scheduler=scheduler)
+
+
+def _recurrent_block(arch: str) -> Dict:
+    """One backend-grid block: the recurrent backend serving ``arch``,
+    exactness checked against a one-request-at-a-time contiguous engine
+    (slots=1: no batch skew, the same reference the llama grid uses)."""
+    cfg = get_smoke(arch)
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size,
+                            size=(PROMPT_LEN + (rid % 3),)).astype(np.int32)
+               for rid in range(N_RECURRENT)]
+    reqs = [Request(rid, p, max_new_tokens=MAX_NEW, priority=rid % 3)
+            for rid, p in enumerate(prompts)]
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="recurrent", slots=2,
+                     max_len=MAX_LEN, chunk=BLOCK_SIZE)
+        eng.load_params()
+        res = _drive(eng, reqs)
+        ref = Engine(cfg, run, mesh, cache="slots", slots=1, max_len=MAX_LEN)
+        ref_out = {}
+        for r in [Request(rid, p, max_new_tokens=MAX_NEW)
+                  for rid, p in enumerate(prompts)]:
+            ref.load_params(eng.params)
+            ref.submit(r)
+            ref.run_until_drained()
+            ref_out[r.rid] = list(r.out_tokens)
+    exact = sum(res["outputs"][rid] == ref_out[rid] for rid in ref_out)
+    return {
+        "arch": arch, "backend": "recurrent", "slots": 2,
+        "state_bytes_per_slot": res["metrics"]["state_bytes_per_slot"],
+        "exact_vs_reference": f"{exact}/{N_RECURRENT}",
+        "exact": exact == N_RECURRENT,
+        **{k: v for k, v in res.items() if k not in ("outputs", "metrics")},
+    }
 
 
 def main() -> List[Row]:
@@ -160,6 +202,24 @@ def main() -> List[Row]:
         "paged_kernel": pm["paged_kernel"],
         "live_token_fraction_mean": pm["live_token_fraction_mean"],
     }
+    # backend x model-family grid (schema v2): one block per backend run —
+    # llama on slots + paged (from the runs above), recurrent archs on the
+    # recurrent backend (fresh runs, exactness vs one-at-a-time reference)
+    backends = [
+        {"arch": "llama3.2-1b", "backend": "slots", "slots": SLOTS_CONTIG,
+         "exact_vs_reference": f"{contig_exact}/{N_REQUESTS}",
+         "exact": contig_exact == N_REQUESTS,
+         **{k: v for k, v in res_c.items()
+            if k not in ("outputs", "metrics")}},
+        {"arch": "llama3.2-1b", "backend": "paged", "slots": N_REQUESTS,
+         "exact_vs_reference": f"{exact['fifo']}/{N_REQUESTS}",
+         "exact": exact["fifo"] == N_REQUESTS,
+         **{k: v for k, v in res_p.items()
+            if k not in ("outputs", "metrics")}},
+    ]
+    backends.extend(_recurrent_block(arch) for arch in RECURRENT_ARCHS)
+    report["backends"] = backends
+
     report["acceptance"] = {
         "concurrency_ok": report["concurrency_ratio"] >= 2.0,
         "outputs_ok": report["outputs_match_reference"],
@@ -167,6 +227,9 @@ def main() -> List[Row]:
         "priority_reorders": (
             res_by_policy["priority"]["admission_order"]
             != res_by_policy["fifo"]["admission_order"]),
+        # every recurrent-backend run must be bitwise exact vs reference
+        "recurrent_exact": all(b["exact"] for b in backends
+                               if b["backend"] == "recurrent"),
     }
 
     rows = [
@@ -188,6 +251,16 @@ def main() -> List[Row]:
             + (f" concurrent={concurrency_p} "
                f"x{report['concurrency_ratio']:.1f} vs contig"
                if policy == "fifo" else "")))
+    for b in backends:
+        if b["backend"] != "recurrent":
+            continue
+        rows.append(Row(
+            f"serving_recurrent_{b['arch'].replace('-', '_')}_tok_s",
+            b["wall_s"] * 1e6 / max(1, b["tokens"]),
+            f"tok/s={b['tokens_per_s']:.1f} "
+            f"ttft_p50={b['ttft_p50_s']*1e3:.0f}ms "
+            f"state_bytes/slot={b['state_bytes_per_slot']} "
+            f"exact={b['exact_vs_reference']}"))
     # the report (with the acceptance verdicts inside) writes BEFORE the
     # asserts so a failing run still leaves consistent diagnostics on disk
     write_bench_json(
@@ -195,14 +268,18 @@ def main() -> List[Row]:
         config={"n_requests": N_REQUESTS, "prompt_len": PROMPT_LEN,
                 "max_new": MAX_NEW, "max_len": MAX_LEN,
                 "slots_contig": SLOTS_CONTIG, "block_size": BLOCK_SIZE,
-                "num_blocks": NUM_BLOCKS, "policies": list(POLICIES)},
-        rows=rows, extra_metrics={"report": report})
+                "num_blocks": NUM_BLOCKS, "policies": list(POLICIES),
+                "backends": sorted({b["backend"] for b in backends})},
+        rows=rows, extra_metrics={"report": report,
+                                  "backends": report["backends"]})
 
     assert report["acceptance"]["concurrency_ok"], report["concurrency_ratio"]
     assert report["acceptance"]["outputs_ok"], \
         f"paged outputs diverged from reference: {exact}"
     assert report["acceptance"]["priority_reorders"], \
         "priority policy did not reorder admission vs fifo"
+    assert report["acceptance"]["recurrent_exact"], \
+        [b for b in backends if b["backend"] == "recurrent"]
     return rows
 
 

@@ -10,9 +10,13 @@ Every bench also writes ``BENCH_<name>.json`` at the repo root through
 ``write_bench_json`` so the perf trajectory across PRs is machine-readable.
 One common schema::
 
-    {"name": ..., "schema_version": 1, "timestamp": <iso-8601 utc>,
+    {"name": ..., "schema_version": 2, "timestamp": <iso-8601 utc>,
      "config": {...static knobs...},
      "metrics": {"rows": [{"name", "us_per_call", "derived"}, ...], ...}}
+
+Schema v2 (this PR): BENCH_serving.json gains a per-backend axis —
+``config["backends"]`` lists the sequence-state backends swept and
+``metrics["backends"]`` carries one result block per backend.
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 
-BENCH_SCHEMA_VERSION = 1
+BENCH_SCHEMA_VERSION = 2
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 
 

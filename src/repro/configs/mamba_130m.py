@@ -1,0 +1,37 @@
+"""mamba-130m: ssm, 24L d_model=768 vocab=50280.
+
+Pure selective-SSM stack (every layer a mamba block, no attention, no
+separate FFN — the block's gated up-projection carries the capacity).
+The smallest pure-recurrent arch in the zoo; the recurrent serving
+backend's reference config. [arXiv:2312.00752; unverified]
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+ARCH_ID = "mamba-130m"
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID,
+        family="ssm",
+        num_layers=24,
+        d_model=768,
+        d_ff=0,
+        vocab_size=50280,
+        attention=None,
+        ssm=SSMConfig(state_dim=16, conv_width=4, expand=2),
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name=ARCH_ID + "-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        d_ff=0,
+        vocab_size=256,
+        attention=None,
+        ssm=SSMConfig(state_dim=4, conv_width=4, expand=2),
+        remat="none",
+    )

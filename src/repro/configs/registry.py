@@ -10,6 +10,7 @@ from repro.configs import (
     hubert_xlarge,
     hymba_1p5b,
     llama32_1b,
+    mamba_130m,
     olmoe_1b_7b,
     qwen2_vl_72b,
     stablelm_3b,
@@ -19,7 +20,8 @@ from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
 
 _MODULES = (
     gemma3_4b, granite_20b, llama32_1b, stablelm_3b, deepseek_v2_lite_16b,
-    olmoe_1b_7b, hymba_1p5b, xlstm_1p3b, hubert_xlarge, qwen2_vl_72b,
+    olmoe_1b_7b, hymba_1p5b, xlstm_1p3b, mamba_130m, hubert_xlarge,
+    qwen2_vl_72b,
 )
 
 ARCHS: Dict[str, Callable[[], ModelConfig]] = {m.ARCH_ID: m.config for m in _MODULES}
@@ -27,10 +29,27 @@ SMOKES: Dict[str, Callable[[], ModelConfig]] = {m.ARCH_ID: m.smoke for m in _MOD
 
 # long_500k is only runnable with sub-quadratic attention. Pure full-attention
 # archs skip it (DESIGN.md §5). gemma3 runs it (5:1 sliding-window layers);
-# hymba (hybrid) and xlstm (recurrent) run it.
-_LONG_OK = {"gemma3-4b", "hymba-1.5b", "xlstm-1.3b"}
+# hymba (hybrid) and xlstm/mamba (recurrent) run it.
+_LONG_OK = {"gemma3-4b", "hymba-1.5b", "xlstm-1.3b", "mamba-130m"}
 # Encoder-only archs have no decode step.
 _ENCODER_ONLY = {"hubert-xlarge"}
+
+
+def default_cache_backend(cfg: ModelConfig) -> str:
+    """The serving Engine's default sequence-state backend per model family.
+
+    Recurrent stacks (xLSTM, pure SSM) carry constant-size state — the
+    recurrent backend serves them exactly AND preempts for free. Archs the
+    paged pool cannot hold (MLA latents, hybrid attn+SSM, mrope position
+    streams) fall back to the contiguous slots rows. Plain-GQA archs get
+    the paged pool (docs/serving.md has the full backend table).
+    """
+    if cfg.xlstm is not None or (cfg.ssm is not None and cfg.attention is None):
+        return "recurrent"
+    a = cfg.attention
+    if cfg.parallel_ssm_attn or (a is not None and (a.kind == "mla" or a.mrope)):
+        return "slots"
+    return "paged"
 
 
 def get_config(arch: str) -> ModelConfig:

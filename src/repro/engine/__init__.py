@@ -13,6 +13,10 @@ Public surface::
         ...
     engine.metrics()                   # unified schema, both backends
 
+``cache=`` selects the sequence-state backend ("paged"/"slots"/
+"recurrent"/"auto"); the ``SequenceState`` protocol and its three
+implementations live in ``repro.engine.state``.
+
 ``runtime/server.py``'s ``Server``/``PagedServer`` remain as deprecation
 shims over this class.
 """
@@ -20,4 +24,7 @@ from repro.engine.engine import BlockPool, Engine, Request  # noqa: F401
 from repro.engine.scheduler import (  # noqa: F401
     POLICIES, FIFOPolicy, PriorityPolicy, SchedulerPolicy, SchedulerState,
     SJFPolicy, resolve_policy)
+from repro.engine.state import (  # noqa: F401
+    PagedKVState, RecurrentState, SequenceCapacity, SequenceState,
+    SlotKVState)
 from repro.engine.stream import RequestHandle  # noqa: F401

@@ -7,9 +7,13 @@ both: ``Server`` and ``PagedServer`` each owned an admission loop, a tick
 loop, preemption logic, and a metrics dialect. ``Engine`` collapses them:
 
 * **one submit/admit/step/complete loop** (``tick``) over a pluggable
-  KV-cache backend — ``cache="paged"`` (block pool, chunked prefill,
-  preempt-and-requeue) or ``cache="slots"`` (fixed-slot contiguous cache,
-  single-request prefill);
+  sequence-state backend behind the ``SequenceState`` protocol
+  (``engine.state``) — ``cache="paged"`` (block pool, chunked prefill,
+  preempt-and-recompute), ``cache="slots"`` (fixed-slot contiguous cache,
+  single-request prefill, no preemption), or ``cache="recurrent"``
+  (constant-size SSM/xLSTM state, chunked prefill, snapshot-eviction);
+  ``cache="auto"`` picks the model family's default
+  (``registry.default_cache_backend``);
 * **pluggable scheduling** — a ``SchedulerPolicy`` object
   (``engine.scheduler``) decides admission order, victim selection, and
   block budgets; ``FIFOPolicy`` reproduces the legacy servers bitwise,
@@ -33,7 +37,8 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, List, Optional, Set, Tuple
+import warnings
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,10 +48,13 @@ from jax.sharding import Mesh
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import transport as transport_lib
 from repro.engine.scheduler import (SchedulerPolicy, SchedulerState,
-                                    resolve_policy)
+                                    _PolicyBase, resolve_policy)
+from repro.engine.state import (BlockPool, PagedKVState, RecurrentState,
+                                SequenceState, SlotKVState)
 from repro.engine.stream import RequestHandle
 from repro.models import model as model_lib
-from repro.runtime.steps import (make_paged_serve_step, make_serve_step,
+from repro.runtime.steps import (make_paged_serve_step,
+                                 make_recurrent_serve_step, make_serve_step,
                                  sharding_ctx)
 
 PyTree = Any
@@ -74,56 +82,6 @@ class Request:
     arrival_tick: int = -1              # stamped at submit
 
 
-class BlockPool:
-    """Host-side free list over the device block pool's block ids.
-
-    Guarded against lifecycle bugs: releasing a block that is already free
-    (double-free) or outside the pool raises with the offending id, and
-    ``alloc`` detects a corrupted free list (the same id handed out twice)
-    rather than silently aliasing two requests onto one block.
-    """
-
-    def __init__(self, num_blocks: int):
-        self.num_blocks = num_blocks
-        self._free: List[int] = list(range(num_blocks))
-        self._free_set: Set[int] = set(self._free)
-
-    @property
-    def free_blocks(self) -> int:
-        return len(self._free)
-
-    @property
-    def used_blocks(self) -> int:
-        return self.num_blocks - len(self._free)
-
-    def alloc(self) -> Optional[int]:
-        if not self._free:
-            return None
-        blk = self._free.pop()
-        if blk not in self._free_set:
-            raise RuntimeError(
-                f"double-alloc of block {blk}: free list is corrupted (the "
-                f"id appears more than once)")
-        self._free_set.remove(blk)
-        return blk
-
-    def release(self, blocks: List[int]) -> None:
-        # validate the whole batch before mutating so a bad id cannot leave
-        # the pool half-released (a caller retrying after the error would
-        # then hit spurious double-frees on the already-freed prefix)
-        seen: Set[int] = set()
-        for blk in blocks:
-            if not 0 <= blk < self.num_blocks:
-                raise ValueError(
-                    f"release of unknown block id {blk} (pool holds ids "
-                    f"0..{self.num_blocks - 1})")
-            if blk in self._free_set or blk in seen:
-                raise ValueError(f"double-free of block {blk}")
-            seen.add(blk)
-        self._free.extend(blocks)
-        self._free_set.update(blocks)
-
-
 @dataclasses.dataclass
 class _Entry:
     """Scheduler state for one request (states: queued -> running ->
@@ -141,6 +99,8 @@ class _Entry:
     preemptions: int = 0
     # prompt as python ints, converted once at submit (seq() runs every tick)
     prompt_tokens: List[int] = dataclasses.field(default_factory=list)
+    # recurrent backend: host snapshot of the slot's state at eviction
+    snapshot: Any = None
 
     def seq(self) -> List[int]:
         """prompt ++ generated — what must be resident before decoding."""
@@ -149,7 +109,7 @@ class _Entry:
 
 class Engine:
     """One serving engine over one mesh: pluggable scheduler, pluggable
-    KV-cache backend, streaming outputs, fabric-routed steps.
+    sequence-state backend, streaming outputs, fabric-routed steps.
 
     ``cache="paged"``: shared per-layer block pool (``num_blocks`` x
     ``block_size`` tokens), chunked prefill (``chunk`` tokens per tick)
@@ -159,8 +119,17 @@ class Engine:
 
     ``cache="slots"``: one contiguous per-slot cache of ``max_len``,
     single-request prefill on admission, one decode tick per token — the
-    legacy fixed-slot batcher, kept for MLA/SSM/xLSTM archs and as the
+    legacy fixed-slot batcher, kept for MLA/hybrid archs and as the
     decode-bench baseline (exactness caveats: docs/serving.md).
+
+    ``cache="recurrent"``: one constant-size state row per slot (SSM /
+    xLSTM stacks only), chunked prefill through a masked-recurrence step,
+    snapshot-eviction (never a recompute). Each row's recurrence is
+    bitwise its unbatched result — the exactness the slots backend cannot
+    give mixed-length batches.
+
+    ``cache="auto"``: the model family's default backend
+    (``registry.default_cache_backend``).
 
     ``scheduler`` is a policy name (``"fifo"``/``"priority"``/``"sjf"``) or
     any ``SchedulerPolicy`` object. FIFO reproduces the legacy servers
@@ -173,8 +142,18 @@ class Engine:
                  num_blocks: Optional[int] = None, block_size: int = 16,
                  chunk: int = 8, eos_id: Optional[int] = None):
         assert not cfg.is_encoder, "encoder-only arch has no decode path"
-        if cache not in ("paged", "slots"):
-            raise ValueError(f"cache must be 'paged' or 'slots', got {cache!r}")
+        if cache == "auto":
+            from repro.configs import registry as registry_lib
+            cache = registry_lib.default_cache_backend(cfg)
+        if cache not in ("paged", "slots", "recurrent"):
+            raise ValueError(
+                f"cache must be 'paged', 'slots', or 'recurrent', "
+                f"got {cache!r}")
+        if kernel != "auto" and cache != "paged":
+            raise ValueError(
+                f"kernel={kernel!r} selects a paged-attention path; it has "
+                f"no effect with cache={cache!r} — drop it or use "
+                "cache='paged'")
         self.cfg, self.run, self.mesh = cfg, run, mesh
         self.cache_kind = cache
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
@@ -221,9 +200,14 @@ class Engine:
             self._live_frac_last = 0.0
             self._live_frac_sum = 0.0
             self._live_frac_ticks = 0
-            self.pool = BlockPool(num_blocks)
             self.peak_blocks_used = 0
             self._step_name = "engine.paged_step"
+        elif cache == "recurrent":
+            self.chunk = chunk
+            self.bundle = make_recurrent_serve_step(
+                cfg, run_decode, mesh, slots=slots, chunk=chunk,
+                max_len=max_len)
+            self._step_name = "engine.recurrent_step"
         else:
             self.bundle = make_serve_step(cfg, run_decode, mesh,
                                           batch_override=slots)
@@ -237,6 +221,27 @@ class Engine:
         # onto the step's declared shardings explicitly — a layout op, not
         # a numeric one (multi-device meshes fail without it)
         self._cache_shard = self.bundle.in_shardings[1]
+
+        # --- sequence-state backend (the SequenceState protocol seam) ---
+        template_fn = lambda: jax.jit(
+            lambda: model_lib.init_cache(self.cfg, 1, self.max_len))()
+        if cache == "paged":
+            self.state: SequenceState = PagedKVState(num_blocks, block_size)
+            self.pool = self.state.pool
+        elif cache == "recurrent":
+            place = lambda t: jax.device_put(t, self._cache_shard)
+            self.state = RecurrentState(slots, template_fn, place=place)
+        else:
+            self.state = SlotKVState(slots, template_fn)
+        if not self.state.supports_preemption:
+            pv = getattr(type(self.policy), "pick_victim", None)
+            if pv is not None and pv is not _PolicyBase.pick_victim:
+                warnings.warn(
+                    f"cache='slots' has no preemption path: "
+                    f"{type(self.policy).__name__}.pick_victim will never "
+                    "be consulted (admission order still applies); use "
+                    "cache='paged' or 'recurrent' for preemption-aware "
+                    "scheduling", UserWarning, stacklevel=2)
         _, self.params_shapes, _, _, self.pshard = sharding_ctx(
             cfg, run_decode, mesh)
         self._register_fabric_steps()
@@ -333,16 +338,14 @@ class Engine:
 
     def submit(self, req: Request) -> RequestHandle:
         """Queue a request; returns its streaming ``RequestHandle``."""
-        if (self.cache_kind == "paged"
-                and len(req.prompt) + req.max_new_tokens > self.max_len):
-            # reject up front what could never finish: past this check a
-            # request's sequence always fits max_blocks_per_seq blocks, so
-            # the block table row cannot overflow and a lone request never
-            # starves
-            raise ValueError(
-                f"request {req.rid}: prompt ({len(req.prompt)}) + "
-                f"max_new_tokens ({req.max_new_tokens}) exceeds "
-                f"max_len={self.max_len}")
+        # reject up front what could never finish: past this check a
+        # request's sequence always fits the backend's capacity model
+        # (for paged: max_blocks_per_seq blocks, so the block table row
+        # cannot overflow and a lone request never starves)
+        msg = self.state.validate(len(req.prompt), req.max_new_tokens,
+                                  self.max_len)
+        if msg:
+            raise ValueError(f"request {req.rid}: {msg}")
         req.arrival_tick = self.ticks
         entry = _Entry(req=req, submit_time=time.perf_counter(),
                        arrival_seq=self._submit_counter,
@@ -357,9 +360,8 @@ class Engine:
             tick=self.ticks,
             free_slots=sum(e is None for e in self.slot_entry),
             block_budget=block_budget,
-            blocks_needed=(
-                (lambda e: self._blocks_for(len(e.seq()) + 1))
-                if self.cache_kind == "paged" else (lambda e: 0)))
+            blocks_needed=self.state.units_needed,
+            capacity=self.state.capacity())
 
     def _stamp_admitted(self, entry: _Entry) -> None:
         if entry.admit_seq < 0:
@@ -391,9 +393,7 @@ class Engine:
 
     def _complete(self, slot: int, entry: _Entry) -> None:
         entry.req.done = True
-        if entry.blocks:
-            self.pool.release(entry.blocks)
-            entry.blocks = []
+        self.state.release(entry)
         self.completed.append(entry.req)
         self._finished.append(entry)
         self.slot_entry[slot] = None
@@ -410,9 +410,9 @@ class Engine:
     def tick(self) -> int:
         """Admit + advance every active request one step. Returns the
         number of rows advanced."""
-        if self.cache_kind == "paged":
-            return self._tick_paged()
-        return self._tick_slots()
+        if self.cache_kind == "slots":
+            return self._tick_slots()
+        return self._tick_chunked()
 
     # -- slots (fixed-slot contiguous cache) backend ----------------------
 
@@ -503,20 +503,22 @@ class Engine:
         self._flush_streams()
         return len(active)
 
-    # -- paged (block-pool cache) backend ---------------------------------
+    # -- chunked (paged / recurrent) backends -----------------------------
 
     def _blocks_for(self, tokens: int) -> int:
         return -(-tokens // self.block_size)
 
-    def _admit_paged(self) -> None:
+    def _admit_chunked(self) -> None:
         """Policy-gated admission: the policy picks the next queued entry;
-        it admits only when a slot is free AND the pool can hold its whole
-        resident prefix plus one decode token. ``budget`` tracks the blocks
-        already promised to entries admitted in this same call — their
-        allocation happens later in tick phase A, so reading
-        ``pool.free_blocks`` alone would over-commit the pool and trigger
-        spurious preemptions of just-admitted requests."""
-        budget = self.pool.free_blocks
+        it admits only when a slot is free AND the backend can hold its
+        whole resident prefix plus one decode token. ``budget`` tracks the
+        capacity units already promised to entries admitted in this same
+        call — their allocation happens later in tick phase A, so reading
+        ``capacity().free_units`` alone would over-commit the pool and
+        trigger spurious preemptions of just-admitted requests. Backends
+        whose capacity is not consumable (``free_units`` None) gate on
+        free slots alone."""
+        budget = self.state.capacity().free_units
         while self.queue:
             free_slots = [i for i, e in enumerate(self.slot_entry)
                           if e is None]
@@ -527,46 +529,46 @@ class Engine:
             if idx is None:
                 return                  # policy head blocked => wait
             entry = self.queue.pop(idx)
-            # debit what the policy *reserved* (its budget() — >= the exact
-            # need, e.g. headroom-reserving policies), never less than the
-            # real need, so the round ledger cannot over-commit the pool
-            budget -= max(self.policy.budget(entry, state),
-                          self._blocks_for(len(entry.seq()) + 1))
+            if budget is not None:
+                # debit what the policy *reserved* (its budget() — >= the
+                # exact need, e.g. headroom-reserving policies), never less
+                # than the real need, so the round ledger cannot over-commit
+                budget -= max(self.policy.budget(entry, state),
+                              self.state.units_needed(entry))
             self._stamp_admitted(entry)
-            self.slot_entry[free_slots[0]] = entry
+            slot = free_slots[0]
+            self.slot_entry[slot] = entry
+            self.cache = self.state.init(entry, self.cache, slot)
 
     def _preempt(self, victim: _Entry) -> None:
-        """Free the victim's blocks and requeue it in admission order:
-        before every never-admitted entry and every previously-preempted
-        entry with a younger admit stamp. (Plain front-insertion breaks
-        FIFO when two preemptions land out of stamp order — e.g. the
-        youngest running entry grows and evicts a middle-aged one, then an
-        older entry evicts the youngest.) Generated tokens are kept; on
-        re-admission the prompt+generated prefix is re-prefilled
-        (recompute-style preemption). Reordering policies re-decide at the
+        """Evict the victim through the backend and requeue it in admission
+        order: before every never-admitted entry and every
+        previously-preempted entry with a younger admit stamp. (Plain
+        front-insertion breaks FIFO when two preemptions land out of stamp
+        order — e.g. the youngest running entry grows and evicts a
+        middle-aged one, then an older entry evicts the youngest.)
+        Generated tokens are kept. What eviction *costs* is the backend's
+        call: paged releases blocks and resets ``pos`` (re-admission
+        re-prefills — recompute), recurrent snapshots the slot's state and
+        keeps ``pos`` (re-admission resumes — never a recompute), slots
+        raises (no preemption path). Reordering policies re-decide at the
         next admission anyway, so the stamp-ordered insert is
         policy-neutral."""
-        self.pool.release(victim.blocks)
-        victim.blocks = []
-        victim.pos = 0
+        slot = self.slot_entry.index(victim)
+        self.cache = self.state.evict(victim, self.cache, slot)
         victim.preemptions += 1
         self.preempt_count += 1
-        self.slot_entry[self.slot_entry.index(victim)] = None
+        self.slot_entry[slot] = None
         at = next((i for i, e in enumerate(self.queue)
                    if e.admit_seq < 0 or e.admit_seq > victim.admit_seq),
                   len(self.queue))
         self.queue.insert(at, victim)
 
-    def _ensure_blocks(self, entry: _Entry, upto_tokens: int) -> None:
-        """Grow ``entry.blocks`` to cover ``upto_tokens``, preempting the
-        policy's victim among the other running requests whenever the pool
-        is dry."""
-        need = self._blocks_for(upto_tokens)
-        while len(entry.blocks) < need:
-            blk = self.pool.alloc()
-            if blk is not None:
-                entry.blocks.append(blk)
-                continue
+    def _ensure_capacity(self, entry: _Entry, upto_tokens: int) -> None:
+        """Grow the entry's state to cover ``upto_tokens``, preempting the
+        policy's victim among the other running requests whenever the
+        backend reports exhaustion."""
+        while not self.state.grow(entry, upto_tokens):
             running = [e for e in self.slot_entry
                        if e is not None and e is not entry]
             victim = self.policy.pick_victim(running, self._sched_state(0))
@@ -576,10 +578,11 @@ class Engine:
                 raise RuntimeError("block pool exhausted by a single request")
             self._preempt(victim)
 
-    def _tick_paged(self) -> int:
-        self._admit_paged()
+    def _tick_chunked(self) -> int:
+        self._admit_chunked()
+        paged = self.cache_kind == "paged"
 
-        # phase A: chunk sizing + block allocation (may preempt victims,
+        # phase A: chunk sizing + capacity growth (may preempt victims,
         # including entries already scheduled earlier in this loop).
         # seq is materialized once per entry per tick — it is O(seq_len).
         sched: List[Tuple[int, _Entry, int, List[int]]] = []
@@ -589,7 +592,7 @@ class Engine:
                 continue
             seq = entry.seq()
             n = min(self.chunk, len(seq) - entry.pos)
-            self._ensure_blocks(entry, entry.pos + n)
+            self._ensure_capacity(entry, entry.pos + n)
             sched.append((slot, entry, n, seq))
         sched = [item for item in sched if self.slot_entry[item[0]] is item[1]]
         # the tick counts even when nothing is schedulable, so
@@ -600,34 +603,40 @@ class Engine:
             self._flush_streams()       # leftovers from a raising flush
             return 0
         self.peak_active = max(self.peak_active, len(sched))
-        self.peak_blocks_used = max(self.peak_blocks_used,
-                                    self.pool.used_blocks)
-        # tokens resident after this step's writes / pool token capacity
-        live = sum(entry.pos + n for _, entry, n, _ in sched)
-        self._live_frac_last = live / (self.num_blocks * self.block_size)
-        self._live_frac_sum += self._live_frac_last
-        self._live_frac_ticks += 1
+        if paged:
+            self.peak_blocks_used = max(self.peak_blocks_used,
+                                        self.pool.used_blocks)
+            # tokens resident after this step's writes / pool token capacity
+            live = sum(entry.pos + n for _, entry, n, _ in sched)
+            self._live_frac_last = live / (self.num_blocks * self.block_size)
+            self._live_frac_sum += self._live_frac_last
+            self._live_frac_ticks += 1
 
         # phase B: build the fixed-shape step inputs
-        m = self.max_blocks_per_seq
         tokens = np.zeros((self.slots, self.chunk), np.int32)
-        tables = np.full((self.slots, m), -1, np.int32)
         starts = np.zeros((self.slots,), np.int32)
         n_valid = np.zeros((self.slots,), np.int32)
+        if paged:
+            tables = np.full((self.slots, self.max_blocks_per_seq), -1,
+                             np.int32)
         for slot, entry, n, seq in sched:
             tokens[slot, :n] = seq[entry.pos:entry.pos + n]
-            tables[slot, :len(entry.blocks)] = entry.blocks
+            if paged:
+                tables[slot, :len(entry.blocks)] = entry.blocks
             starts[slot] = entry.pos
             n_valid[slot] = n
 
-        next_tok, self.cache = self._step_call(
-            self.cache, jnp.asarray(tokens), jnp.asarray(tables),
-            jnp.asarray(starts), jnp.asarray(n_valid))
+        args = [self.cache, jnp.asarray(tokens)]
+        if paged:
+            args.append(jnp.asarray(tables))
+        args.extend([jnp.asarray(starts), jnp.asarray(n_valid)])
+        next_tok, self.cache = self._step_call(*args)
         next_np = np.asarray(next_tok)
 
         for slot, entry, n, seq in sched:
             known = len(seq)
             entry.pos += n
+            self.state.append(entry, n)
             if entry.pos < known:
                 continue                 # mid-prefill: output discarded
             tok = int(next_np[slot])
@@ -638,6 +647,17 @@ class Engine:
 
         self._flush_streams()
         return len(sched)
+
+    def preempt(self, rid: int) -> None:
+        """Evict a running request by id through the backend's preemption
+        path and requeue it (admission-ordered). Paged requeues recompute
+        the prefix; recurrent resumes from its state snapshot; slots
+        raises — it has no preemption path."""
+        for entry in self.slot_entry:
+            if entry is not None and entry.req.rid == rid:
+                self._preempt(entry)
+                return
+        raise KeyError(f"request {rid} is not running in any slot")
 
     # ------------------------------------------------------------------
     # metrics — one unified schema for both backends
@@ -724,4 +744,6 @@ class Engine:
                 "peak_used_blocks": self.peak_blocks_used,
                 "occupancy": self.pool.used_blocks / max(1, self.num_blocks),
             })
+        elif self.cache_kind == "recurrent":
+            out.update({"chunk": self.chunk, **self.state.metrics()})
         return out

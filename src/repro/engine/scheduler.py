@@ -9,15 +9,17 @@ points —
   ``None`` to wait. The engine calls this in a loop while slots are free,
   so a policy returning an index keeps admitting until it returns ``None``.
 * ``pick_victim(running, state)`` — which running entry to preempt when
-  the block pool runs dry (paged cache only).
-* ``budget(entry, state)`` — how many pool blocks ``entry`` must be able
-  to claim before it may admit (paged cache only; the slots cache gates on
-  free slots alone and ``budget`` is 0).
+  the backend's capacity runs dry (backends with ``supports_preemption``;
+  the slots cache never consults it).
+* ``budget(entry, state)`` — how many capacity units ``entry`` must be
+  able to claim before it may admit (consumable-capacity backends only;
+  slots/recurrent gate on free slots alone and ``budget`` is 0).
 
 ``SchedulerState`` is the read-only view the engine hands each decision:
-the current tick, how many slots are free, the block budget still
-unpromised this admission round (``None`` for the slots cache), and a
-``blocks_needed`` sizing callback.
+the current tick, how many slots are free, the capacity budget still
+unpromised this admission round (``None`` for non-consumable backends), a
+``blocks_needed`` sizing callback, and the backend's ``SequenceCapacity``
+snapshot (``capacity``).
 
 Policies are host-side and never traced — swapping one changes *order*,
 never math, so greedy outputs per request stay bitwise identical to an
@@ -45,12 +47,15 @@ class SchedulerState:
 
     tick: int                       # engine ticks completed so far
     free_slots: int                 # request rows currently unoccupied
-    # free pool blocks not yet promised to entries admitted earlier in this
-    # same admission round; None when the cache backend has no block pool
-    # (cache="slots" gates on free slots alone)
+    # free capacity units not yet promised to entries admitted earlier in
+    # this same admission round; None when the backend's capacity is not
+    # consumable (slots/recurrent gate on free slots alone)
     block_budget: Optional[int]
-    # blocks an entry needs resident to run its next step (prefix + 1 token)
+    # units an entry needs resident to run its next step (prefix + 1 token)
     blocks_needed: Callable[[Any], int]
+    # the backend's SequenceCapacity snapshot (kind/unit/total/free); None
+    # only for hand-built states in tests
+    capacity: Optional[Any] = None
 
 
 @runtime_checkable

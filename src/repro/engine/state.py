@@ -1,0 +1,249 @@
+"""Sequence-state backends for ``repro.engine.Engine``.
+
+The Two-Chains thesis applied to serving state: the engine owns one
+uniform submit/admit/tick loop (*invocation*), while what a request's
+sequence state *is* — and what admitting, growing, evicting, or migrating
+it costs — is a pluggable backend behind the ``SequenceState`` protocol
+(``repro.models.kvcache``):
+
+* ``PagedKVState``  — pool blocks; grow can fail (preempt-and-recompute);
+* ``SlotKVState``   — a contiguous cache row; no preemption path at all;
+* ``RecurrentState``— constant-size SSM/xLSTM state; eviction is a cheap
+  host snapshot, never a recompute (defined beside the cache types in
+  ``repro.models.kvcache``; re-exported here).
+
+Backends never touch the scheduler or the compiled step; the engine
+translates policy decisions into ``grow``/``evict``/``release`` calls and
+reads admission budgets from ``capacity()``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Set
+
+import jax
+import numpy as np
+
+from repro.models.kvcache import (RecurrentState, SequenceCapacity,
+                                  SequenceState, gather_slot_rows,
+                                  state_to_bytes)
+
+__all__ = ["BlockPool", "PagedKVState", "SlotKVState", "RecurrentState",
+           "SequenceCapacity", "SequenceState"]
+
+
+class BlockPool:
+    """Host-side free list over the device block pool's block ids.
+
+    Guarded against lifecycle bugs: releasing a block that is already free
+    (double-free) or outside the pool raises with the offending id, and
+    ``alloc`` detects a corrupted free list (the same id handed out twice)
+    rather than silently aliasing two requests onto one block.
+    """
+
+    def __init__(self, num_blocks: int):
+        self.num_blocks = num_blocks
+        self._free: List[int] = list(range(num_blocks))
+        self._free_set: Set[int] = set(self._free)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        blk = self._free.pop()
+        if blk not in self._free_set:
+            raise RuntimeError(
+                f"double-alloc of block {blk}: free list is corrupted (the "
+                f"id appears more than once)")
+        self._free_set.remove(blk)
+        return blk
+
+    def release(self, blocks: List[int]) -> None:
+        # validate the whole batch before mutating so a bad id cannot leave
+        # the pool half-released (a caller retrying after the error would
+        # then hit spurious double-frees on the already-freed prefix)
+        seen: Set[int] = set()
+        for blk in blocks:
+            if not 0 <= blk < self.num_blocks:
+                raise ValueError(
+                    f"release of unknown block id {blk} (pool holds ids "
+                    f"0..{self.num_blocks - 1})")
+            if blk in self._free_set or blk in seen:
+                raise ValueError(f"double-free of block {blk}")
+            seen.add(blk)
+        self._free.extend(blocks)
+        self._free_set.update(blocks)
+
+
+def _over_length(prompt_len: int, max_new: int,
+                 max_len: int) -> Optional[str]:
+    if prompt_len + max_new > max_len:
+        return (f"prompt ({prompt_len}) + max_new_tokens ({max_new}) "
+                f"exceeds max_len={max_len}")
+    return None
+
+
+class PagedKVState:
+    """``SequenceState`` over the shared per-layer block pool.
+
+    Capacity is consumable (``free_units`` = free pool blocks); ``grow``
+    allocates one block at a time and reports False when the pool runs
+    dry — the engine then preempts a policy-chosen victim. Eviction is
+    *recompute-style*: blocks go back to the pool and ``pos`` resets, so
+    re-admission re-prefills the prompt+generated prefix. The exact
+    alloc/release call sequence of the pre-protocol engine is preserved
+    (partial allocations are kept across a failed grow), which is what
+    keeps the FIFO schedule fingerprint bitwise unchanged.
+    """
+
+    kind = "paged"
+    supports_preemption = True
+
+    def __init__(self, num_blocks: int, block_size: int):
+        self.num_blocks = num_blocks
+        self.block_size = block_size
+        self.pool = BlockPool(num_blocks)
+
+    def blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    def init(self, entry: Any, cache: Any, slot: int) -> Any:
+        return cache                      # blocks attach lazily in grow()
+
+    def append(self, entry: Any, n: int) -> None:
+        return None                       # pos is the engine's ledger
+
+    def units_needed(self, entry: Any) -> int:
+        return self.blocks_for(len(entry.seq()) + 1)
+
+    def grow(self, entry: Any, upto_tokens: int) -> bool:
+        need = self.blocks_for(upto_tokens)
+        while len(entry.blocks) < need:
+            blk = self.pool.alloc()
+            if blk is None:
+                return False              # caller preempts and retries
+            entry.blocks.append(blk)
+        return True
+
+    def evict(self, entry: Any, cache: Any, slot: int) -> Any:
+        self.pool.release(entry.blocks)
+        entry.blocks = []
+        entry.pos = 0
+        return cache
+
+    def release(self, entry: Any) -> None:
+        if entry.blocks:
+            self.pool.release(entry.blocks)
+            entry.blocks = []
+
+    def gather(self, entry: Any, cache: Any, slot: int) -> Any:
+        """The request's resident tokens as a contiguous host pytree:
+        gather its blocks out of every pool leaf, merge the (blocks,
+        block_size) axes, and trim to ``entry.pos`` tokens. The block axis
+        is located structurally (shape ``[..., num_blocks, block_size,
+        ...]``) so scanned-group leaves with a leading layer-stack dim
+        resolve correctly."""
+        blocks = np.asarray(entry.blocks, np.int64)
+
+        def take(leaf):
+            arr = np.asarray(leaf)
+            for ax in range(arr.ndim - 1):
+                if (arr.shape[ax] == self.num_blocks
+                        and arr.shape[ax + 1] == self.block_size):
+                    got = np.take(arr, blocks, axis=ax)
+                    merged = got.reshape(
+                        arr.shape[:ax] + (len(blocks) * self.block_size,)
+                        + arr.shape[ax + 2:])
+                    idx = (slice(None),) * ax + (slice(0, entry.pos),)
+                    return merged[idx]
+            return arr
+        return jax.tree.map(take, cache)
+
+    def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
+        return state_to_bytes(self.gather(entry, cache, slot))
+
+    def capacity(self) -> SequenceCapacity:
+        return SequenceCapacity(kind="paged", unit="blocks",
+                                total_units=self.num_blocks,
+                                free_units=self.pool.free_blocks)
+
+    def metrics(self) -> Dict[str, Any]:
+        return {"free_blocks": self.pool.free_blocks,
+                "used_blocks": self.pool.used_blocks}
+
+    def validate(self, prompt_len: int, max_new: int,
+                 max_len: int) -> Optional[str]:
+        return _over_length(prompt_len, max_new, max_len)
+
+
+class SlotKVState:
+    """``SequenceState`` over one contiguous ``max_len`` cache row per slot.
+
+    The legacy fixed-slot batcher's state model: capacity is the slot rows
+    themselves (not consumable — ``free_units`` is None), prefill scatters
+    a freshly filled row in at admission (the engine keeps that step: it
+    needs the model forward), and there is **no preemption path**: a slot
+    row has no snapshot or recompute seam, so ``evict`` raises instead of
+    silently corrupting the row. ``SchedulerPolicy.pick_victim`` is never
+    consulted on this backend (the engine warns at construction when a
+    policy overrides it).
+    """
+
+    kind = "slots"
+    supports_preemption = False
+
+    def __init__(self, slots: int, template_fn: Callable[[], Any]):
+        self.slots = slots
+        self._template_fn = template_fn
+        self._template: Any = None
+
+    @property
+    def template(self) -> Any:
+        if self._template is None:
+            self._template = jax.tree.map(np.asarray, self._template_fn())
+        return self._template
+
+    def init(self, entry: Any, cache: Any, slot: int) -> Any:
+        return cache                      # engine's prefill scatter fills it
+
+    def append(self, entry: Any, n: int) -> None:
+        return None
+
+    def units_needed(self, entry: Any) -> int:
+        return 0
+
+    def grow(self, entry: Any, upto_tokens: int) -> bool:
+        return True                       # the row always covers max_len
+
+    def evict(self, entry: Any, cache: Any, slot: int) -> Any:
+        raise RuntimeError(
+            "cache='slots' cannot preempt: a slot row has no snapshot or "
+            "recompute path (SchedulerPolicy.pick_victim is never consulted "
+            "on this backend) — use cache='paged' (recompute) or "
+            "cache='recurrent' (state snapshot)")
+
+    def release(self, entry: Any) -> None:
+        return None
+
+    def gather(self, entry: Any, cache: Any, slot: int) -> Any:
+        return gather_slot_rows(cache, self.template, slot, self.slots)
+
+    def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
+        return state_to_bytes(self.gather(entry, cache, slot))
+
+    def capacity(self) -> SequenceCapacity:
+        return SequenceCapacity(kind="slots", unit="slots",
+                                total_units=self.slots, free_units=None)
+
+    def metrics(self) -> Dict[str, Any]:
+        return {}
+
+    def validate(self, prompt_len: int, max_new: int,
+                 max_len: int) -> Optional[str]:
+        return _over_length(prompt_len, max_new, max_len)

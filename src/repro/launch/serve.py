@@ -3,13 +3,17 @@
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 12 --slots 4 --max-new 16
 
-  # paged scheduler (block-pool KV cache + chunked prefill):
+  # paged backend (block-pool KV cache + chunked prefill):
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --paged --slots 12 --blocks 48 --block-size 8 --chunk 8
+      --cache paged --slots 12 --blocks 48 --block-size 8 --chunk 8
+
+  # recurrent backend (constant-size SSM/xLSTM state, exact batching):
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba-130m --smoke \
+      --cache recurrent --slots 4 --chunk 8
 
   # priority scheduling + per-token streaming:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-      --paged --scheduler priority --stream --requests 4
+      --cache paged --scheduler priority --stream --requests 4
 """
 from __future__ import annotations
 
@@ -22,7 +26,8 @@ import numpy as np
 
 from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
-from repro.configs.registry import ARCHS, get_config, get_smoke
+from repro.configs.registry import (ARCHS, default_cache_backend, get_config,
+                                    get_smoke)
 from repro.engine import Engine, Request
 from repro.launch.mesh import make_production_mesh
 
@@ -36,9 +41,14 @@ def main() -> None:
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--prompt-len", type=int, default=16)
     p.add_argument("--max-new", type=int, default=16)
+    p.add_argument("--cache", choices=("auto", "paged", "slots", "recurrent"),
+                   default=None,
+                   help="sequence-state backend: paged (block pool), slots "
+                        "(fixed-slot contiguous), recurrent (constant-size "
+                        "SSM/xLSTM state), or auto (the model family's "
+                        "default). Default: slots, or paged with --paged")
     p.add_argument("--paged", action="store_true",
-                   help="use the paged (block-pool) cache backend "
-                        "(cache='paged'); default is the fixed-slot cache")
+                   help="alias for --cache paged (kept for scripts)")
     p.add_argument("--scheduler", choices=("fifo", "priority", "sjf"),
                    default="fifo",
                    help="scheduler policy: fifo (submission order), "
@@ -68,6 +78,22 @@ def main() -> None:
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     if cfg.is_encoder:
         raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+
+    # resolve the backend, then refuse incoherent flag combinations instead
+    # of silently ignoring them (a --paged-kernel that never engages looks
+    # like a benchmark of the kernel while benchmarking the dense path)
+    if args.paged and args.cache not in (None, "paged"):
+        p.error(f"--paged conflicts with --cache {args.cache}")
+    cache = args.cache or ("paged" if args.paged else "slots")
+    if cache == "auto":
+        cache = default_cache_backend(cfg)
+        print(f"[serve] --cache auto -> {cache!r} for {args.arch}")
+    if args.paged_kernel != "auto" and cache != "paged":
+        p.error(f"--paged-kernel {args.paged_kernel} has no effect with "
+                f"--cache {cache}; drop it or use --cache paged")
+    if cache not in ("paged",) and (args.blocks or args.block_size != 16):
+        p.error(f"--blocks/--block-size configure the paged pool and have "
+                f"no effect with --cache {cache}")
     if args.smoke:
         mesh = compat.make_mesh((1, 1), ("data", "model"))
         sharding = ShardingConfig(fsdp_params=False, seq_axis=None)
@@ -78,7 +104,7 @@ def main() -> None:
 
     rng = np.random.default_rng(0)
     with mesh:
-        if args.paged:
+        if cache == "paged":
             # default: half the contiguous budget, floored at one full
             # max_len sequence (the engine rejects anything smaller)
             max_blocks_per_seq = -(-args.max_len // args.block_size)
@@ -90,6 +116,10 @@ def main() -> None:
                             block_size=args.block_size, chunk=args.chunk,
                             scheduler=args.scheduler,
                             kernel=args.paged_kernel)
+        elif cache == "recurrent":
+            engine = Engine(cfg, run, mesh, cache="recurrent",
+                            slots=args.slots, max_len=args.max_len,
+                            chunk=args.chunk, scheduler=args.scheduler)
         else:
             engine = Engine(cfg, run, mesh, cache="slots", slots=args.slots,
                             max_len=args.max_len, scheduler=args.scheduler)
@@ -119,16 +149,21 @@ def main() -> None:
         dt = time.perf_counter() - t0
 
     total_tokens = sum(len(r.out_tokens) for r in done)
-    kind = "paged" if args.paged else "slots"
+    kind = cache
     m = engine.metrics()
     print(f"[serve:{kind}/{args.scheduler}] {len(done)}/{args.requests} "
           f"requests, {total_tokens} tokens in {dt:.2f}s "
           f"({total_tokens/dt:.1f} tok/s, {engine.ticks} ticks)")
     print(f"[serve:{kind}] admission order: {engine.admission_log}")
-    if args.paged:
+    if cache == "paged":
         print(f"[serve:paged] attention kernel={m['paged_kernel']} "
               f"live-token fraction last={m['live_token_fraction']:.3f} "
               f"mean={m['live_token_fraction_mean']:.3f}")
+    elif cache == "recurrent":
+        print(f"[serve:recurrent] state bytes/slot="
+              f"{m['state_bytes_per_slot']} snapshots "
+              f"taken={m['snapshots_taken']} "
+              f"restored={m['snapshots_restored']}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out_tokens[:8]}...")
     if engine.fabric is not None:

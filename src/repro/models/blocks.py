@@ -25,7 +25,7 @@ from repro.models import ssm as ssm_mod
 from repro.models import xlstm as xlstm_mod
 from repro.models.common import ParamBuilder, rms_norm
 from repro.models.kvcache import (KVCache, MLACache, PagedKVCache,
-                                  PagedLayout, SSMCache)
+                                  PagedLayout, RecurrentLayout, SSMCache)
 
 Cache = Optional[Dict[str, Any]]
 
@@ -42,6 +42,14 @@ def init_block(b: ParamBuilder, bt: str, cfg: ModelConfig) -> None:
         return
     if bt in ("slstm",):
         xlstm_mod.init_slstm(b.scope("slstm"), d, cfg.xlstm)
+        return
+    if bt == "ssm":
+        # pure selective-SSM block (mamba): norm -> SSM residual, plus an
+        # optional MLP residual when the arch carries one (d_ff > 0)
+        ssm_mod.init_ssm(b.scope("ssm"), d, cfg.ssm)
+        if cfg.d_ff:
+            b.param("ln2", (d,), ("embed",), init="zeros")
+            mlp_mod.init_mlp(b.scope("mlp"), d, cfg.d_ff, cfg.mlp_gated)
         return
     b.param("ln2", (d,), ("embed",), init="zeros")
     a = cfg.attention
@@ -71,6 +79,9 @@ def init_block_cache(bt: str, cfg: ModelConfig, batch: int, max_len: int,
     if bt in ("slstm",):
         kc = xlstm_mod.slstm_init_cache(cfg.d_model, cfg.xlstm, batch, dtype)
         return {"state": kc.state, "c": kc.extra[0], "n": kc.extra[1], "m": kc.extra[2]}
+    if bt == "ssm":
+        sc = ssm_mod.ssm_init_cache(cfg.d_model, cfg.ssm, batch, dtype)
+        return {"conv": sc.conv, "state": sc.state}
     if bt.startswith("mla"):
         c["c_kv"] = jnp.zeros((batch, max_len, a.kv_lora_rank), dtype)
         c["k_rope"] = jnp.zeros((batch, max_len, a.qk_rope_head_dim), dtype)
@@ -93,6 +104,12 @@ def init_block_cache(bt: str, cfg: ModelConfig, batch: int, max_len: int,
 # subsystem supports (ISSUE 2: GQA first; MLA/SSM/xLSTM archs stay on the
 # contiguous Server).
 PAGED_BLOCK_TYPES = ("attn_full", "attn_local", "attn_moe")
+
+# Block types whose per-request state is constant-size (conv history +
+# recurrent state, no seq-length axis) — the ones the recurrent serving
+# backend supports. Hybrid blocks carry seq-sized KV leaves alongside the
+# SSM state, so they are excluded (use cache='slots' for those archs).
+RECURRENT_BLOCK_TYPES = ("mlstm", "slstm", "ssm")
 
 
 def init_paged_block_cache(bt: str, cfg: ModelConfig, num_blocks: int,
@@ -123,6 +140,7 @@ def apply_block(
     moe_transport=None,
     paged: Optional[PagedLayout] = None,
     paged_kernel: str = "auto",
+    recurrent: Optional[RecurrentLayout] = None,
 ) -> Tuple[jax.Array, Cache, jax.Array]:
     a = cfg.attention
     zero = jnp.zeros((), jnp.float32)
@@ -131,13 +149,21 @@ def apply_block(
         return _apply_block_paged(bt, params, x, cfg, cache, paged,
                                   moe_transport, paged_kernel)
 
+    if recurrent is not None and bt not in RECURRENT_BLOCK_TYPES:
+        raise ValueError(
+            f"block type {bt!r} has no recurrent serving path — only "
+            f"{RECURRENT_BLOCK_TYPES} carry constant-size state; use "
+            "cache='paged' or 'slots' for this arch")
+    valid = recurrent.token_valid(x.shape[1]) if recurrent is not None else None
+
     if bt == "mlstm":
         h = rms_norm(x, params["ln1"], cfg.norm_eps)
         kc = None
         if cache is not None:
             kc = SSMCache(cache["conv"], cache["state"],
                           (cache["n"], cache["m"]), length)
-        y, nkc = xlstm_mod.mlstm_forward(params["mlstm"], h, cfg.xlstm, cache=kc)
+        y, nkc = xlstm_mod.mlstm_forward(params["mlstm"], h, cfg.xlstm,
+                                         cache=kc, valid=valid)
         new_cache = None
         if nkc is not None:
             new_cache = {"conv": nkc.conv, "state": nkc.state,
@@ -151,12 +177,29 @@ def apply_block(
             kc = SSMCache(cache.get("conv", jnp.zeros((x.shape[0], 0, 0), x.dtype)),
                           cache["state"], (cache["c"], cache["n"], cache["m"]),
                           length)
-        y, nkc = xlstm_mod.slstm_forward(params["slstm"], h, cfg.xlstm, cache=kc)
+        y, nkc = xlstm_mod.slstm_forward(params["slstm"], h, cfg.xlstm,
+                                         cache=kc, valid=valid)
         new_cache = None
         if nkc is not None:
             new_cache = {"state": nkc.state, "c": nkc.extra[0],
                          "n": nkc.extra[1], "m": nkc.extra[2]}
         return x + y, new_cache, zero
+
+    if bt == "ssm":
+        h = rms_norm(x, params["ln1"], cfg.norm_eps)
+        sc = None
+        if cache is not None:
+            sc = SSMCache(cache["conv"], cache["state"], None, length)
+        y, nsc = ssm_mod.ssm_forward(params["ssm"], h, cfg.ssm,
+                                     cache=sc, valid=valid)
+        new_cache = None
+        if nsc is not None:
+            new_cache = {"conv": nsc.conv, "state": nsc.state}
+        x = x + y
+        if cfg.d_ff:
+            h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
+            x = x + mlp_mod.mlp(params["mlp"], h2, cfg.act, cfg.mlp_gated)
+        return x, new_cache, zero
 
     # ---- attention (+ optional parallel SSM) sub-layer ----
     h = rms_norm(x, params["ln1"], cfg.norm_eps)

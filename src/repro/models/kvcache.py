@@ -16,10 +16,14 @@ contexts (EXPERIMENTS.md §Perf).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional, Tuple
+import json
+import struct
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Protocol,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @jax.tree_util.register_dataclass
@@ -217,3 +221,302 @@ class SSMCache:
     state: jax.Array                 # (B, ...) recurrent state
     extra: Any                       # e.g. sLSTM normalizer / mLSTM (n, m) terms
     length: jax.Array
+
+
+class RecurrentLayout(NamedTuple):
+    """Per-step serving view for recurrent (SSM/xLSTM) stacks.
+
+    The recurrent counterpart of ``PagedLayout`` minus the block tables:
+    state is constant-size per request, so the only per-step facts are
+    where each row is in its sequence and how many of the ``chunk`` token
+    columns are real.
+
+    starts: (B,) int32 — tokens already absorbed into the state per row.
+    n_valid: (B,) int32 — real token columns this step (decode rows 1,
+        prefill rows up to ``chunk``, idle rows 0).
+    """
+
+    starts: jax.Array
+    n_valid: jax.Array
+
+    def token_positions(self, chunk: int) -> jax.Array:
+        return (self.starts[:, None]
+                + jnp.arange(chunk, dtype=jnp.int32)[None, :])
+
+    def token_valid(self, chunk: int) -> jax.Array:
+        return (jnp.arange(chunk, dtype=jnp.int32)[None, :]
+                < self.n_valid[:, None])
+
+
+# ---------------------------------------------------------------------------
+# state serialization (the migration seam: ROADMAP item 3)
+# ---------------------------------------------------------------------------
+
+_STATE_MAGIC = b"RST1"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    if name == "bfloat16":
+        return np.dtype(jnp.bfloat16)
+    return np.dtype(name)
+
+
+def state_to_bytes(tree: Any) -> bytes:
+    """Pack a pytree of arrays into one buffer: a JSON header (per-leaf
+    dtype + shape, in ``tree_leaves`` order) followed by the raw bytes.
+
+    The tree *structure* does not travel — sender and receiver agree on it
+    out of band (same model config), exactly like the GOT layout hash of
+    docs/fabric.md; only values cross the wire. bf16 round-trips exactly
+    (raw ml_dtypes bytes, no float32 detour)."""
+    arrs = [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
+    header = json.dumps([{"dtype": a.dtype.name, "shape": list(a.shape)}
+                         for a in arrs]).encode("utf-8")
+    parts = [_STATE_MAGIC, struct.pack("<I", len(header)), header]
+    parts.extend(np.ascontiguousarray(a).tobytes() for a in arrs)
+    return b"".join(parts)
+
+
+def state_from_bytes(buf: bytes, like: Any) -> Any:
+    """Inverse of ``state_to_bytes``. ``like`` supplies the tree structure
+    (arrays or ShapeDtypeStructs); leaf dtype/shape mismatches between the
+    buffer and ``like`` raise rather than silently reinterpreting bytes."""
+    if buf[:4] != _STATE_MAGIC:
+        raise ValueError("state buffer does not start with the RST1 magic")
+    (hlen,) = struct.unpack("<I", buf[4:8])
+    header = json.loads(buf[8:8 + hlen].decode("utf-8"))
+    like_leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(header) != len(like_leaves):
+        raise ValueError(
+            f"state buffer holds {len(header)} leaves, template has "
+            f"{len(like_leaves)}")
+    off = 8 + hlen
+    out = []
+    for meta, ref in zip(header, like_leaves):
+        dtype = _np_dtype(meta["dtype"])
+        shape = tuple(meta["shape"])
+        if (tuple(ref.shape) != shape
+                or np.dtype(ref.dtype).name != dtype.name):
+            raise ValueError(
+                f"state leaf mismatch: buffer has {meta['dtype']}{shape}, "
+                f"template expects "
+                f"{np.dtype(ref.dtype).name}{tuple(ref.shape)}")
+        n = int(np.prod(shape, dtype=np.int64)) * dtype.itemsize
+        arr = np.frombuffer(buf[off:off + n], dtype=dtype).reshape(shape)
+        off += n
+        out.append(jnp.asarray(arr))
+    if off != len(buf):
+        raise ValueError(f"state buffer has {len(buf) - off} trailing bytes")
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def ssm_cache_to_bytes(cache: SSMCache) -> bytes:
+    """Serialize one ``SSMCache`` (conv + state + extra + length)."""
+    return state_to_bytes(cache)
+
+
+def ssm_cache_from_bytes(buf: bytes, like: SSMCache) -> SSMCache:
+    """Rebuild an ``SSMCache`` from ``ssm_cache_to_bytes`` output; ``like``
+    provides the structure (an init-shaped cache works)."""
+    return state_from_bytes(buf, like)
+
+
+# ---------------------------------------------------------------------------
+# SequenceState — the per-request sequence-state backend protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SequenceCapacity:
+    """What a backend's admission-limiting resource looks like.
+
+    ``free_units is None`` means the resource is not consumable (a slot
+    row or constant-size state exists per slot regardless of sequence
+    length) and admission is gated on free slots alone."""
+
+    kind: str                        # backend name ("paged"/"slots"/...)
+    unit: str                        # "blocks" | "slots"
+    total_units: Optional[int]
+    free_units: Optional[int]
+
+
+@runtime_checkable
+class SequenceState(Protocol):
+    """Pluggable per-request sequence-state backend for the Engine.
+
+    The engine owns requests and the tick loop; the backend owns what a
+    request's *state* is and what it costs: pool blocks (``PagedKVState``),
+    a contiguous cache row (``SlotKVState``), or constant-size recurrent
+    state (``RecurrentState``). Entries are duck-typed scheduler records
+    (``pos``/``blocks``/``snapshot``/``seq()``); ``cache`` is the live
+    device pytree, threaded through because several backends rebuild it.
+    """
+
+    kind: str
+    supports_preemption: bool
+
+    def init(self, entry: Any, cache: Any, slot: int) -> Any:
+        """Prepare ``slot`` for ``entry`` at admission; returns the cache."""
+
+    def append(self, entry: Any, n: int) -> None:
+        """Host-side accounting after ``n`` tokens entered the state."""
+
+    def gather(self, entry: Any, cache: Any, slot: int) -> Any:
+        """Materialize the request's state as a host pytree."""
+
+    def units_needed(self, entry: Any) -> int:
+        """Capacity units required to advance this entry one step."""
+
+    def grow(self, entry: Any, upto_tokens: int) -> bool:
+        """Reserve capacity for ``upto_tokens``; False when exhausted."""
+
+    def evict(self, entry: Any, cache: Any, slot: int) -> Any:
+        """Release/park the entry's state for requeue; returns the cache."""
+
+    def release(self, entry: Any) -> None:
+        """Drop all state owned by a finished entry."""
+
+    def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
+        """The migration seam: the request's state as one buffer."""
+
+    def capacity(self) -> SequenceCapacity: ...
+
+    def metrics(self) -> Dict[str, Any]: ...
+
+    def validate(self, prompt_len: int, max_new: int,
+                 max_len: int) -> Optional[str]:
+        """Reject-at-submit check; an error string or None."""
+
+
+def slot_axis(live_shape: Tuple[int, ...], one_shape: Tuple[int, ...],
+              slots: int) -> Optional[int]:
+    """Locate the batch (slot) axis of a cache leaf structurally: the first
+    axis where the live leaf has ``slots`` extent, the one-row template has
+    extent 1, and every leading dim matches. (Same rule as the Engine's
+    prefill scatter: positional guesses mistake the layer-stack dim for
+    batch.) Returns None for leaves with no per-slot axis (scalars)."""
+    if len(live_shape) != len(one_shape):
+        return None
+    for ax in range(len(live_shape)):
+        if (live_shape[ax] == slots and one_shape[ax] == 1
+                and live_shape[:ax] == one_shape[:ax]):
+            return ax
+    return None
+
+
+def gather_slot_rows(cache: Any, template: Any, slot: int, slots: int) -> Any:
+    """Slice one slot's rows out of a batched cache (host numpy pytree).
+    Leaves without a slot axis (the shared length scalar) copy through."""
+    def take(live, one):
+        ax = slot_axis(tuple(live.shape), tuple(np.shape(one)), slots)
+        if ax is None:
+            return np.asarray(live)
+        return np.asarray(jax.lax.dynamic_slice_in_dim(live, slot, 1, axis=ax))
+    return jax.tree.map(take, cache, template)
+
+
+def scatter_slot_rows(cache: Any, row: Any, slot: int, slots: int) -> Any:
+    """Write one-row state back into ``slot`` of a batched cache. Leaves
+    without a slot axis are left untouched."""
+    def put(live, one):
+        ax = slot_axis(tuple(live.shape), tuple(np.shape(one)), slots)
+        if ax is None:
+            return live
+        start = [0] * live.ndim
+        start[ax] = slot
+        return jax.lax.dynamic_update_slice(
+            live, jnp.asarray(one).astype(live.dtype), tuple(start))
+    return jax.tree.map(put, cache, row)
+
+
+class RecurrentState:
+    """``SequenceState`` over constant-size recurrent state (SSM/xLSTM).
+
+    A request's entire sequence state is its ``SSMCache`` rows — O(1) in
+    sequence length — so there is no consumable pool: ``grow`` always
+    succeeds and admission is gated on free slots alone. Eviction is a
+    cheap host snapshot of the slot's rows (``entry.snapshot``); on
+    re-admission the snapshot is scattered back and decoding resumes where
+    it stopped — never a recompute, which is what makes preemption (and
+    ROADMAP item 3's migration) nearly free for these model families.
+
+    ``template_fn`` returns a one-row init cache (NOT zeros: mLSTM carries
+    ``m = -inf``, sLSTM ``n = 1``); it also clears a freed slot's stale
+    state before a fresh request runs, since recurrent updates would
+    otherwise integrate the previous occupant's state.
+    """
+
+    kind = "recurrent"
+    supports_preemption = True
+
+    def __init__(self, slots: int, template_fn: Callable[[], Any],
+                 place: Optional[Callable[[Any], Any]] = None):
+        self.slots = slots
+        self._template_fn = template_fn
+        self._template: Any = None
+        self._place = place if place is not None else (lambda t: t)
+        self.snapshots_taken = 0
+        self.snapshots_restored = 0
+
+    @property
+    def template(self) -> Any:
+        if self._template is None:
+            self._template = jax.tree.map(np.asarray, self._template_fn())
+        return self._template
+
+    def state_bytes_per_slot(self) -> int:
+        return sum(leaf.nbytes
+                   for leaf in jax.tree_util.tree_leaves(self.template)
+                   if getattr(leaf, "ndim", 0) > 0)
+
+    def init(self, entry: Any, cache: Any, slot: int) -> Any:
+        row = getattr(entry, "snapshot", None)
+        restored = row is not None
+        if row is None:
+            row = self.template
+        cache = scatter_slot_rows(cache, row, slot, self.slots)
+        if restored:
+            entry.snapshot = None
+            self.snapshots_restored += 1
+        return self._place(cache)
+
+    def append(self, entry: Any, n: int) -> None:
+        return None
+
+    def gather(self, entry: Any, cache: Any, slot: int) -> Any:
+        return gather_slot_rows(cache, self.template, slot, self.slots)
+
+    def units_needed(self, entry: Any) -> int:
+        return 0
+
+    def grow(self, entry: Any, upto_tokens: int) -> bool:
+        return True
+
+    def evict(self, entry: Any, cache: Any, slot: int) -> Any:
+        # snapshot covers seq[:entry.pos]; pos is deliberately kept so
+        # re-admission resumes (feed the next unseen token) instead of
+        # re-prefilling — the opposite of the paged recompute path
+        entry.snapshot = self.gather(entry, cache, slot)
+        self.snapshots_taken += 1
+        return cache
+
+    def release(self, entry: Any) -> None:
+        if getattr(entry, "snapshot", None) is not None:
+            entry.snapshot = None
+
+    def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
+        return state_to_bytes(self.gather(entry, cache, slot))
+
+    def capacity(self) -> SequenceCapacity:
+        return SequenceCapacity(kind="recurrent", unit="slots",
+                                total_units=self.slots, free_units=None)
+
+    def metrics(self) -> Dict[str, Any]:
+        return {
+            "state_bytes_per_slot": self.state_bytes_per_slot(),
+            "snapshots_taken": self.snapshots_taken,
+            "snapshots_restored": self.snapshots_restored,
+        }
+
+    def validate(self, prompt_len: int, max_new: int,
+                 max_len: int) -> Optional[str]:
+        return None                  # constant-size state: no length limit

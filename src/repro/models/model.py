@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import blocks as blocks_mod
 from repro.models.common import ParamBuilder, rms_norm, softcap, stack_axes
-from repro.models.kvcache import PagedLayout
+from repro.models.kvcache import PagedLayout, RecurrentLayout
 
 PyTree = Any
 
@@ -46,6 +46,10 @@ def layer_plan(cfg: ModelConfig) -> List[Tuple[Tuple[str, ...], int]]:
                 groups.append((("mlstm",) * (L % k), 1))
             return groups
         return [(("mlstm",), L)]
+
+    if cfg.ssm is not None and cfg.attention is None:
+        # pure selective-SSM stack (mamba): every layer is the same block
+        return [(("ssm",), L)]
 
     a = cfg.attention
     if cfg.family == "moe":
@@ -199,6 +203,7 @@ def forward(
     constrain=None,                          # activation sharding constraint
     paged: Optional[PagedLayout] = None,     # serving: block-table cache view
     paged_kernel: str = "auto",              # paged attention: pallas|ref|auto
+    recurrent: Optional[RecurrentLayout] = None,  # serving: valid-prefix layout
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     # ``constrain(x)`` pins (B, S, d) activations to the batch sharding at
     # the embedding, between layer groups, and inside the scanned body —
@@ -227,6 +232,11 @@ def forward(
         # per-request (starts) and lengths live in the scheduler
         length = None
         positions = paged.token_positions(S)
+    elif recurrent is not None:
+        # constant-size state: positions are per-request (starts); the
+        # shared length scalar is frozen — host-side entry.pos is the truth
+        length = cache["length"]
+        positions = recurrent.token_positions(S)
     else:
         length = cache["length"] if cache is not None else None
         if positions is None:
@@ -259,7 +269,7 @@ def forward(
                     x_c, cfg, cache=c_in, length=length,
                     positions=positions, mrope_positions=mrope_positions,
                     moe_transport=moe_transport, paged=paged,
-                    paged_kernel=paged_kernel)
+                    paged_kernel=paged_kernel, recurrent=recurrent)
                 x_c = constrain(x_c)
                 new_lc.append(c_out)
             return (x_c, aux_c + aux), new_lc
@@ -270,7 +280,15 @@ def forward(
         # DUS(DS(stacked)) — in place on the donated cache buffer. Paged
         # steps always unroll for the same reason: the pool is the dominant
         # buffer and must update in place on the donated argument.
-        unroll = cache is not None and (S == 1 or paged is not None)
+        # Pure-recurrent stacks (xLSTM, SSM-only) always scan: the state is
+        # constant-size (double-buffering is cheap) and scan-vs-unroll round
+        # differently at 1 bf16 ulp — keeping every path (prefill, S==1
+        # decode, masked serving chunks) on the scan is what makes chunked
+        # recurrent serving bitwise-identical to the contiguous reference.
+        pure_recurrent = all(
+            bt in blocks_mod.RECURRENT_BLOCK_TYPES for bt in pattern)
+        unroll = cache is not None and (
+            paged is not None or (S == 1 and not pure_recurrent))
         if repeats > 1 and unroll:
             new_pat_cache = pat_cache
             for r in range(repeats):
@@ -302,6 +320,10 @@ def forward(
     if cache is not None:
         if paged is not None:
             new_cache = {"groups": new_groups}
+        elif recurrent is not None:
+            # per-request progress is host-side (entry.pos); the shared
+            # scalar stays frozen so slot rows never skew
+            new_cache = {"length": cache["length"], "groups": new_groups}
         else:
             new_cache = {"length": length + S, "groups": new_groups}
     return logits, new_cache, aux_total

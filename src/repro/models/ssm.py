@@ -31,22 +31,42 @@ def init_ssm(b: ParamBuilder, d_model: int, s: SSMConfig) -> None:
 
 
 def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
-                 history: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
-    """Depthwise causal conv. x: (B,S,C); w: (W,C). Returns (out, new_history)."""
+                 history: Optional[jax.Array] = None,
+                 n_valid: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B,S,C); w: (W,C). Returns (out, new_history).
+
+    ``n_valid`` (B,) enables per-row history advance for masked serving
+    batches: row b's real tokens occupy columns [0, n_valid[b]) and the new
+    history must be the last W-1 of (history ++ valid tokens) — the default
+    tail slice would absorb the padding columns.
+    """
     width = w.shape[0]
     if history is None:
         history = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
     xp = jnp.concatenate([history, x], axis=1)            # (B, S+W-1, C)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width)) + b
-    new_hist = xp[:, xp.shape[1] - (width - 1):, :]
+    if n_valid is None:
+        new_hist = xp[:, xp.shape[1] - (width - 1):, :]
+    else:
+        idx = (n_valid[:, None]
+               + jnp.arange(width - 1, dtype=jnp.int32)[None, :])
+        new_hist = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
     return out, new_hist
 
 
 def ssm_forward(
     params, x: jax.Array, s: SSMConfig, *,
     cache: Optional[SSMCache] = None,
+    valid: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, Optional[SSMCache]]:
-    """x: (B, S, d) -> (B, S, d). cache!=None => recurrent decode continuation."""
+    """x: (B, S, d) -> (B, S, d). cache!=None => recurrent decode continuation.
+
+    ``valid`` (B, S) bool masks serving batches where rows carry different
+    numbers of real tokens (valid-prefix layout): state updates at invalid
+    columns are gated off, so each row's recurrence is bitwise what it
+    would be with its tokens alone — the property the recurrent serving
+    backend's exactness rests on.
+    """
     B, S, d = x.shape
     inner = s.expand * d
     dt_rank = s.dt_rank or -(-d // 16)
@@ -54,7 +74,10 @@ def ssm_forward(
     xz = jnp.einsum("bsd,di->bsi", x, params["in_proj"])
     x_in, z = xz[..., :inner], xz[..., inner:]
     hist = cache.conv if cache is not None else None
-    x_c, new_hist = _causal_conv(x_in, params["conv_w"], params["conv_b"], hist)
+    n_valid = (jnp.sum(valid, axis=1).astype(jnp.int32)
+               if valid is not None else None)
+    x_c, new_hist = _causal_conv(x_in, params["conv_w"], params["conv_b"],
+                                 hist, n_valid=n_valid)
     x_c = jax.nn.silu(x_c)
 
     proj = jnp.einsum("bsi,ir->bsr", x_c, params["x_proj"])
@@ -69,16 +92,24 @@ def ssm_forward(
           else jnp.zeros((B, inner, s.state_dim), jnp.float32))
 
     def step(h, inputs):
-        dt_t, b_t, c_t, x_t = inputs                            # (B,i),(B,n),(B,n),(B,i)
+        if valid is None:
+            dt_t, b_t, c_t, x_t = inputs                        # (B,i),(B,n),(B,n),(B,i)
+            v_t = None
+        else:
+            dt_t, b_t, c_t, x_t, v_t = inputs
         dt_f = dt_t.astype(jnp.float32)
         da = jnp.exp(dt_f[:, :, None] * a[None])                # (B,i,n)
         dbx = (dt_f * x_t.astype(jnp.float32))[:, :, None] * b_t.astype(jnp.float32)[:, None, :]
-        h = da * h + dbx
-        y_t = jnp.einsum("bin,bn->bi", h, c_t.astype(jnp.float32))
-        return h, y_t
+        h_up = da * h + dbx
+        if v_t is not None:
+            h_up = jnp.where(v_t[:, None, None], h_up, h)
+        y_t = jnp.einsum("bin,bn->bi", h_up, c_t.astype(jnp.float32))
+        return h_up, y_t
 
     xs = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b_in, 1, 0),
           jnp.moveaxis(c_in, 1, 0), jnp.moveaxis(x_c, 1, 0))
+    if valid is not None:
+        xs = xs + (jnp.moveaxis(valid, 1, 0),)
     h_last, ys = jax.lax.scan(step, h0, xs)
     y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)                  # (B,S,i)
     y = y + x_c * params["d_skip"]

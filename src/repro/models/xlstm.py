@@ -36,11 +36,15 @@ def init_mlstm(b: ParamBuilder, d_model: int, x: XLSTMConfig) -> None:
     b.param("down_proj", (inner, d_model), ("ff", "embed"), fan_in=inner)
 
 
-def _mlstm_scan(q, k, v, i_raw, f_raw, state=None):
+def _mlstm_scan(q, k, v, i_raw, f_raw, state=None, valid=None):
     """Stabilized mLSTM recurrence.
 
     q,k,v: (B,S,H,dh); i_raw,f_raw: (B,S,H). Returns (y (B,S,H,dh), state).
     state = (C (B,H,dh,dh), n (B,H,dh), m (B,H)) all float32.
+
+    ``valid`` (B,S) bool gates the state update per row/step (masked
+    serving batches): invalid columns leave (C, n, m) untouched so each
+    row advances by exactly its own tokens.
     """
     B, S, H, dh = q.shape
     if state is None:
@@ -52,7 +56,11 @@ def _mlstm_scan(q, k, v, i_raw, f_raw, state=None):
 
     def step(carry, inp):
         c, n, m = carry
-        q_t, k_t, v_t, i_t, f_t = inp                       # (B,H,dh)x3,(B,H)x2
+        if valid is None:
+            q_t, k_t, v_t, i_t, f_t = inp                   # (B,H,dh)x3,(B,H)x2
+            v_col = None
+        else:
+            q_t, k_t, v_t, i_t, f_t, v_col = inp
         f_log = jax.nn.log_sigmoid(f_t.astype(jnp.float32))
         i_log = i_t.astype(jnp.float32)
         m_new = jnp.maximum(f_log + m, i_log)
@@ -60,17 +68,23 @@ def _mlstm_scan(q, k, v, i_raw, f_raw, state=None):
         f_p = jnp.exp(f_log + m - m_new)
         kf = k_t.astype(jnp.float32) * (dh ** -0.5)
         vf = v_t.astype(jnp.float32)
-        c = f_p[..., None, None] * c + i_p[..., None, None] * (
+        c_up = f_p[..., None, None] * c + i_p[..., None, None] * (
             kf[..., :, None] * vf[..., None, :])            # (B,H,dh,dh)
-        n = f_p[..., None] * n + i_p[..., None] * kf
+        n_up = f_p[..., None] * n + i_p[..., None] * kf
         qf = q_t.astype(jnp.float32)
-        num = jnp.einsum("bhde,bhd->bhe", c, qf)
-        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)),
+        num = jnp.einsum("bhde,bhd->bhe", c_up, qf)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n_up, qf)),
                           jnp.exp(-m_new))[..., None]
         y_t = num / den
-        return (c, n, m_new), y_t
+        if v_col is not None:
+            c_up = jnp.where(v_col[:, None, None, None], c_up, c)
+            n_up = jnp.where(v_col[:, None, None], n_up, n)
+            m_new = jnp.where(v_col[:, None], m_new, m)
+        return (c_up, n_up, m_new), y_t
 
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (q, k, v, i_raw, f_raw))
+    if valid is not None:
+        xs = xs + (jnp.moveaxis(valid, 1, 0),)
     (c, n, m), ys = jax.lax.scan(step, (c0, n0, m0), xs)
     return jnp.moveaxis(ys, 0, 1), (c, n, m)
 
@@ -173,7 +187,8 @@ def _group_norm_heads(y: jax.Array, scale: jax.Array, heads: int) -> jax.Array:
 
 
 def mlstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
-                  cache: Optional[SSMCache] = None
+                  cache: Optional[SSMCache] = None,
+                  valid: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, Optional[SSMCache]]:
     B, S, d = x.shape
     inner = int(d * xc.proj_factor_mlstm)
@@ -188,7 +203,15 @@ def mlstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
     x_c = sum(xp[:, i:i + S, :] * params["conv_w"][i]
               for i in range(xc.conv_width)) + params["conv_b"]
     x_c = jax.nn.silu(x_c)
-    new_hist = xp[:, xp.shape[1] - (xc.conv_width - 1):, :]
+    if valid is None:
+        new_hist = xp[:, xp.shape[1] - (xc.conv_width - 1):, :]
+    else:
+        # per-row history: last W-1 of (history ++ valid tokens); the tail
+        # slice would absorb this step's padding columns
+        n_val = jnp.sum(valid, axis=1).astype(jnp.int32)
+        idx = (n_val[:, None]
+               + jnp.arange(xc.conv_width - 1, dtype=jnp.int32)[None, :])
+        new_hist = jnp.take_along_axis(xp, idx[:, :, None], axis=1)
 
     xh = x_c.reshape(B, S, h, dh)
     q = jnp.einsum("bshd,hde->bshe", xh, params["wq"])
@@ -202,13 +225,14 @@ def mlstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
         c_prev = cache.state
         n_prev, m_prev = cache.extra
         state = (c_prev, n_prev, m_prev)
-    if S >= 2 * xc.chunk:
+    if valid is None and S >= 2 * xc.chunk:
         # chunk-parallel form (§Perf B1): MXU einsums + O(S/chunk) state
-        # materialization instead of an O(S) elementwise recurrence
+        # materialization instead of an O(S) elementwise recurrence; masked
+        # batches stay on the scan — per-step gating has no chunked form
         y, new_state = _mlstm_chunked(q, k, v, i_raw, f_raw, state,
                                       chunk=xc.chunk)
     else:
-        y, new_state = _mlstm_scan(q, k, v, i_raw, f_raw, state)
+        y, new_state = _mlstm_scan(q, k, v, i_raw, f_raw, state, valid=valid)
 
     y = _group_norm_heads(y.reshape(B, S, inner), params["out_norm"], h)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
@@ -257,7 +281,8 @@ def init_slstm(b: ParamBuilder, d_model: int, x: XLSTMConfig) -> None:
 
 
 def slstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
-                  cache: Optional[SSMCache] = None
+                  cache: Optional[SSMCache] = None,
+                  valid: Optional[jax.Array] = None
                   ) -> Tuple[jax.Array, Optional[SSMCache]]:
     B, S, d = x.shape
     h = xc.num_heads
@@ -276,8 +301,13 @@ def slstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
 
     r_rec = params["r_rec"].astype(jnp.float32)
 
-    def step(carry, w_t):
+    def step(carry, inp):
         h_prev, c, n, m = carry                             # (B,d) f32
+        if valid is None:
+            w_t = inp
+            v_col = None
+        else:
+            w_t, v_col = inp
         hh = h_prev.reshape(B, h, dh)
         rec = jnp.einsum("bhd,hdg->bhg", hh, r_rec).reshape(B, 4 * d)
         raw = w_t.astype(jnp.float32) + rec
@@ -288,13 +318,20 @@ def slstm_forward(params, x: jax.Array, xc: XLSTMConfig, *,
         m_new = jnp.maximum(jnp.max(f_h, -1) + m, jnp.max(i_h, -1))  # (B,h)
         i_p = jnp.exp(i_h - m_new[..., None]).reshape(B, d)
         f_p = jnp.exp(f_h + (m - m_new)[..., None]).reshape(B, d)
-        c = f_p * c + i_p * jnp.tanh(z_r)
-        n = f_p * n + i_p
-        h_new = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1e-6)
-        return (h_new, c, n, m_new), h_new
+        c_up = f_p * c + i_p * jnp.tanh(z_r)
+        n_up = f_p * n + i_p
+        h_new = jax.nn.sigmoid(o_r) * c_up / jnp.maximum(n_up, 1e-6)
+        if v_col is not None:
+            h_out = jnp.where(v_col[:, None], h_new, h_prev)
+            c_up = jnp.where(v_col[:, None], c_up, c)
+            n_up = jnp.where(v_col[:, None], n_up, n)
+            m_new = jnp.where(v_col[:, None], m_new, m)
+            return (h_out, c_up, n_up, m_new), h_new
+        return (h_new, c_up, n_up, m_new), h_new
 
-    (h_last, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0),
-                                         jnp.moveaxis(w, 1, 0))
+    xs = (jnp.moveaxis(w, 1, 0) if valid is None
+          else (jnp.moveaxis(w, 1, 0), jnp.moveaxis(valid, 1, 0)))
+    (h_last, c, n, m), ys = jax.lax.scan(step, (h0, c0, n0, m0), xs)
     y = jnp.moveaxis(ys, 0, 1)                              # (B,S,d) f32
     var = jnp.mean(jnp.square(y.reshape(B, S, h, dh)), -1, keepdims=True)
     y = (y.reshape(B, S, h, dh) * jax.lax.rsqrt(var + 1e-6)).reshape(B, S, d)

@@ -26,8 +26,9 @@ from repro.configs.base import ModelConfig, OptimizerConfig, RunConfig, ShapeCon
 from repro.data.synthetic import batch_shapes
 from repro.fabric import Fabric
 from repro.kernels import paged_attention as paged_attention_lib
+from repro.models import blocks as blocks_mod
 from repro.models import model as model_lib
-from repro.models.kvcache import PagedLayout
+from repro.models.kvcache import PagedLayout, RecurrentLayout
 from repro.optim.adamw import AdamWState, adamw_init, adamw_update
 from repro.optim.grad import clip_by_global_norm
 from repro.optim.schedule import warmup_cosine
@@ -449,6 +450,77 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                   fabric=fabric, block_size=block_size,
                   num_blocks=num_blocks, chunk=chunk, slots=slots,
                   paged_kernel=paged_kernel),
+    )
+
+
+# ---------------------------------------------------------------------------
+# recurrent serve step (serving: constant-size conv+state carry, decode +
+# chunked prefill in one compiled shape — mamba/xLSTM archs)
+# ---------------------------------------------------------------------------
+
+def make_recurrent_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
+                              slots: int, chunk: int, max_len: int
+                              ) -> StepBundle:
+    """One step through per-slot recurrent state for ``slots`` request rows.
+
+    fn(params, cache, tokens (slots, chunk), starts (slots,), n_valid
+    (slots,)) -> (next_token (slots,), new_cache). Same contract as the
+    paged step minus block tables: rows carry a valid-prefix token layout
+    and every state update at an invalid column is gated off inside the
+    recurrence, so each row's scan is bitwise what it would be with its
+    tokens alone. The cache is O(slots) regardless of sequence length —
+    eviction is a cheap state snapshot, never a recompute.
+    """
+    assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    bts = set(model_lib.flat_block_types(cfg))
+    bad = sorted(bts - set(blocks_mod.RECURRENT_BLOCK_TYPES))
+    if bad:
+        raise ValueError(
+            f"recurrent serving supports block types "
+            f"{blocks_mod.RECURRENT_BLOCK_TYPES}, got {bad} — these carry "
+            "seq-sized KV state; use cache='paged' or 'slots' for this arch")
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+    transport_log: list = []
+    fabric, transport = _bundle_fabric(cfg, mesh, rules,
+                                       kind="recurrent_decode",
+                                       log_choice=transport_log)
+    constrain = act_constrain(
+        rules, mesh, slots % mesh_util.dp_extent(rules, mesh) == 0)
+
+    def recurrent_step(params, cache, tokens, starts, n_valid):
+        layout = RecurrentLayout(starts, n_valid)
+        logits, new_cache, _ = model_lib.forward(
+            cfg, params, tokens, cache=cache, recurrent=layout,
+            moe_transport=transport, constrain=constrain)
+        last = jnp.maximum(n_valid - 1, 0)
+        last_logits = jnp.take_along_axis(
+            logits, last[:, None, None], axis=1)[:, 0]        # (slots, V)
+        next_tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    cache_shapes = jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, slots, max_len))
+    cache_shard = jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        mesh_util.cache_spec_tree(cache_shapes, rules, mesh, batch=slots,
+                                  seq_sharded=False),
+        is_leaf=lambda x: isinstance(x, P))
+    rep = NamedSharding(mesh, P())
+    abstract = (params_shapes, cache_shapes,
+                jax.ShapeDtypeStruct((slots, chunk), jnp.int32),
+                jax.ShapeDtypeStruct((slots,), jnp.int32),
+                jax.ShapeDtypeStruct((slots,), jnp.int32))
+    in_sh = (pshard, cache_shard, rep, rep, rep)
+
+    return StepBundle(
+        fn=recurrent_step,
+        in_shardings=in_sh,
+        out_shardings=(rep, cache_shard),
+        abstract_inputs=abstract,
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes,
+                  kind="recurrent_decode", cache=cache_shapes,
+                  transport_log=transport_log, fabric=fabric,
+                  chunk=chunk, slots=slots),
     )
 
 

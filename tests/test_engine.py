@@ -432,3 +432,207 @@ def test_engine_rejects_bad_cache_kind(setup):
     with pytest.raises(ValueError, match="requires num_blocks"):
         with mesh:
             Engine(cfg, run, mesh, cache="paged", slots=1, max_len=32)
+
+
+# ---------------------------------------------------------------------------
+# SequenceState backends (ISSUE 6): conformance, recurrent exactness,
+# preemption semantics
+# ---------------------------------------------------------------------------
+
+def _fake_entry(seq_len=5):
+    class E:
+        pos = 0
+        blocks = []
+        snapshot = None
+        def __init__(self):
+            self.blocks = []
+        def seq(self):
+            return list(range(seq_len))
+    return E()
+
+
+def test_sequence_state_conformance_lifecycle():
+    """Every backend satisfies the SequenceState protocol and runs the
+    same admit/append/grow/evict/serialize lifecycle; only the *cost
+    semantics* differ (consumable blocks vs slot rows vs snapshots)."""
+    from repro.engine import (PagedKVState, RecurrentState, SequenceCapacity,
+                              SequenceState, SlotKVState)
+
+    template_fn = lambda: {"state": jnp.full((1, 4), 2.0, jnp.float32),
+                           "length": jnp.zeros((), jnp.int32)}
+    slots_cache = {"state": jnp.zeros((3, 4), jnp.float32),
+                   "length": jnp.zeros((), jnp.int32)}
+    paged_cache = {"pool": np.arange(8 * 4 * 2, dtype=np.float32)
+                   .reshape(8, 4, 2)}
+
+    backends = {
+        "paged": (PagedKVState(num_blocks=8, block_size=4), paged_cache),
+        "slots": (SlotKVState(slots=3, template_fn=template_fn), slots_cache),
+        "recurrent": (RecurrentState(slots=3, template_fn=template_fn),
+                      slots_cache),
+    }
+    for kind, (st8, cache) in backends.items():
+        assert isinstance(st8, SequenceState), kind
+        assert st8.kind == kind
+        e = _fake_entry()
+        # admission: validate -> init -> grow -> append
+        if kind == "paged":
+            assert st8.validate(5, 100, 32) is not None  # over max_len
+        else:
+            # slots validates length; recurrent state is O(1) — no limit
+            expect = None if kind == "recurrent" else "exceeds"
+            msg = st8.validate(5, 100, 32)
+            assert (msg is None) == (expect is None), kind
+        cache = st8.init(e, cache, slot=0)
+        assert st8.grow(e, upto_tokens=5) is True
+        e.pos = 5
+        st8.append(e, 5)
+        cap = st8.capacity()
+        assert isinstance(cap, SequenceCapacity)
+        assert cap.kind == kind and cap.total_units > 0
+        buf = st8.serialize(e, cache, slot=0)
+        assert isinstance(buf, bytes) and buf[:4] == b"RST1"
+        # eviction semantics diverge per backend:
+        if kind == "paged":
+            held = list(e.blocks)
+            assert len(held) == 2                      # ceil((5+?)/4) grown
+            st8.evict(e, cache, slot=0)
+            assert e.blocks == [] and e.pos == 0       # recompute path
+            assert st8.capacity().free_units == 8
+        elif kind == "slots":
+            with pytest.raises(RuntimeError, match="cannot preempt"):
+                st8.evict(e, cache, slot=0)
+            assert cap.free_units is None              # not consumable
+        else:
+            cache2 = st8.evict(e, cache, slot=0)
+            assert e.pos == 5                          # resume, not recompute
+            assert e.snapshot is not None
+            assert st8.snapshots_taken == 1
+            # re-admission restores the snapshot into a different slot
+            # (init had templated slot 0 to 2.0 — that is what was
+            # snapshotted and must land in slot 2)
+            cache2 = st8.init(e, cache2, slot=2)
+            assert e.snapshot is None
+            assert st8.snapshots_restored == 1
+            np.testing.assert_array_equal(
+                np.asarray(cache2["state"][2]), np.full(4, 2.0))
+        st8.release(e)
+
+
+def test_recurrent_state_template_clears_stale_slot():
+    """A freed slot's rows must be re-templated before a fresh request
+    runs: recurrent updates integrate whatever state is resident."""
+    from repro.engine import RecurrentState
+    template_fn = lambda: {"state": jnp.full((1, 4), 2.0, jnp.float32)}
+    st8 = RecurrentState(slots=2, template_fn=template_fn)
+    cache = {"state": jnp.full((2, 4), 9.0, jnp.float32)}   # stale occupant
+    cache = st8.init(_fake_entry(), cache, slot=1)
+    np.testing.assert_array_equal(np.asarray(cache["state"]),
+                                  [[9.0] * 4, [2.0] * 4])
+
+
+@pytest.mark.parametrize("arch", ["mamba-130m", "xlstm-1.3b"])
+def test_recurrent_engine_greedy_identity_with_requeue(arch):
+    """Acceptance: recurrent serving emits greedy tokens bitwise-identical
+    to the unbatched plain-cache reference — through chunked prefill
+    (prompt lengths on and off the chunk boundary), queue-forced requeue
+    (3 requests on 2 slots), and an explicit mid-decode preemption."""
+    cfg = get_smoke(arch)
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    rng = np.random.default_rng(3)
+    lens = [4, 5, 7]                      # 4 == chunk: full-chunk prefill
+    prompts = [rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+               for n in lens]
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="recurrent", slots=2, max_len=48,
+                     chunk=4)
+        eng.load_params()
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=6))
+        # two ticks in, force-evict slot 0's request: its snapshot must
+        # resume (never recompute) with identical tokens
+        eng.tick(); eng.tick()
+        victim = next(e.req.rid for e in eng.slot_entry if e is not None)
+        eng.preempt(victim)
+        eng.run_until_drained()
+        assert eng.preempt_count >= 1
+        assert eng.state.snapshots_taken >= 1
+        assert eng.state.snapshots_restored >= 1
+
+        def ref_greedy(prompt, n):
+            cache = model_lib.init_cache(cfg, 1, 48)
+            logits, cache, _ = model_lib.forward(
+                cfg, eng.params, jnp.asarray([list(prompt)], jnp.int32),
+                cache=cache)
+            out = [int(jnp.argmax(logits[0, -1]))]
+            for _ in range(n - 1):
+                logits, cache, _ = model_lib.forward(
+                    cfg, eng.params, jnp.asarray([[out[-1]]], jnp.int32),
+                    cache=cache)
+                out.append(int(jnp.argmax(logits[0, -1])))
+            return out
+
+        done = {r.rid: r.out_tokens for r in eng.completed}
+        for rid, p in enumerate(prompts):
+            assert done[rid] == ref_greedy(p, 6), f"rid {rid} len {len(p)}"
+
+
+def test_slots_cache_warns_when_policy_overrides_pick_victim(setup):
+    """Regression (ISSUE 6 satellite 1): cache='slots' has no preemption
+    path, so a policy that customizes pick_victim must warn instead of
+    being silently ignored — and the default FIFO must stay silent."""
+    import warnings as _w
+    cfg, run, mesh, params = setup
+    with mesh:
+        with pytest.warns(UserWarning, match="pick_victim will never be "
+                                             "consulted"):
+            Engine(cfg, run, mesh, cache="slots", slots=1, max_len=32,
+                   scheduler="priority")
+        with _w.catch_warnings():
+            _w.simplefilter("error", UserWarning)
+            Engine(cfg, run, mesh, cache="slots", slots=1, max_len=32,
+                   scheduler="fifo")
+
+
+def test_recurrent_cache_rejects_attention_arch(setup):
+    cfg, run, mesh, _ = setup             # llama: attention stack
+    with pytest.raises(ValueError, match="recurrent serving supports"):
+        with mesh:
+            Engine(cfg, run, mesh, cache="recurrent", slots=1, max_len=32)
+
+
+def test_kernel_flag_requires_paged_cache(setup):
+    cfg, run, mesh, _ = setup
+    for cache in ("slots", "recurrent"):
+        with pytest.raises(ValueError, match="paged-attention path"):
+            with mesh:
+                Engine(cfg, run, mesh, cache=cache, slots=1, max_len=32,
+                       kernel="pallas")
+
+
+def test_default_cache_backend_per_family():
+    from repro.configs.registry import default_cache_backend, get_smoke as gs
+    expect = {
+        "llama3.2-1b": "paged",          # plain GQA -> block pool
+        "gemma3-4b": "paged",
+        "mamba-130m": "recurrent",       # pure SSM -> constant-size state
+        "xlstm-1.3b": "recurrent",
+        "hymba-1.5b": "slots",           # hybrid attn+SSM: pool can't hold
+        "deepseek-v2-lite-16b": "slots", # MLA latents
+        "qwen2-vl-72b": "slots",         # mrope position streams
+    }
+    for arch, want in expect.items():
+        assert default_cache_backend(gs(arch)) == want, arch
+
+
+def test_engine_cache_auto_resolves_per_family():
+    cfg = get_smoke("mamba-130m")
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="auto", slots=1, max_len=32)
+    assert eng.cache_kind == "recurrent"
+    assert eng.state.kind == "recurrent"

@@ -133,3 +133,51 @@ def test_rebind_preserves_layout(names):
         t.bind(n, object())
     assert t.layout_hash() == h0
     assert [t.index_of(n) for n in names] == idx_before
+
+
+# ---------------------------------------------------------------------------
+# SSMCache state serialization (ISSUE 6 satellite: the migration seam)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 3), st.integers(1, 7), st.integers(1, 9),
+       st.integers(0, 2**32 - 1))
+def test_ssm_cache_bytes_roundtrip_odd_shapes(batch, width, inner, seed):
+    """ssm_cache_to_bytes / ssm_cache_from_bytes over arbitrary odd shapes:
+    bf16 conv rows and f32 state (plus tupled extras) must come back
+    bitwise, with no padding leak between leaves."""
+    from repro.models.kvcache import (SSMCache, ssm_cache_from_bytes,
+                                      ssm_cache_to_bytes)
+    rng = np.random.default_rng(seed)
+    cache = SSMCache(
+        conv=_rand_bf16(rng, (batch, width, inner)),
+        state=jnp.asarray(rng.standard_normal((batch, inner, 4)), jnp.float32),
+        extra=(jnp.asarray(rng.standard_normal((batch, inner)), jnp.float32),
+               _rand_bf16(rng, (batch, 3))),
+        length=jnp.asarray(int(rng.integers(0, 1000)), jnp.int32),
+    )
+    buf = ssm_cache_to_bytes(cache)
+    like = jax.tree.map(
+        lambda t: jax.ShapeDtypeStruct(t.shape, t.dtype), cache)
+    back = ssm_cache_from_bytes(buf, like)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 2**32 - 1))
+def test_state_bytes_rejects_shape_and_dtype_skew(inner, seed):
+    """A buffer deserialized against the wrong template must raise, not
+    silently reinterpret bytes (the receiver's config is the contract)."""
+    from repro.models.kvcache import state_from_bytes, state_to_bytes
+    rng = np.random.default_rng(seed)
+    tree = {"s": _rand_bf16(rng, (2, inner))}
+    buf = state_to_bytes(tree)
+    with pytest.raises(ValueError, match="state leaf mismatch"):
+        state_from_bytes(buf, {"s": jax.ShapeDtypeStruct((2, inner + 1),
+                                                         jnp.bfloat16)})
+    with pytest.raises(ValueError, match="state leaf mismatch"):
+        state_from_bytes(buf, {"s": jax.ShapeDtypeStruct((2, inner),
+                                                         jnp.float32)})

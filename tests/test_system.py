@@ -19,12 +19,12 @@ from repro.runtime.trainer import Trainer, TrainerConfig
 
 def test_cell_matrix_accounting():
     cells = list(all_cells())
-    assert len(cells) == 40                       # 10 archs x 4 shapes
+    assert len(cells) == 44                       # 11 archs x 4 shapes
     skips = [(a, s) for a, s, ok, _ in cells if not ok]
     assert len(skips) == 8
     assert ("hubert-xlarge", "decode_32k") in skips
     assert ("hubert-xlarge", "long_500k") in skips
-    for arch in ("gemma3-4b", "hymba-1.5b", "xlstm-1.3b"):
+    for arch in ("gemma3-4b", "hymba-1.5b", "xlstm-1.3b", "mamba-130m"):
         ok, _ = cell_status(arch, "long_500k")
         assert ok, arch
     for arch in ("llama3.2-1b", "granite-20b", "stablelm-3b",

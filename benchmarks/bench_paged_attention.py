@@ -2,19 +2,36 @@
 
 The kernel's claim (ISSUE 4 / paper §VII-B): KV traffic scales with *live*
 tokens, not allocated pool capacity, because live blocks stream pool->VMEM
-through the block table while the ref path materializes and re-reads every
-request's full ``max_blocks * block_size`` logical view. The sweep runs
-occupancy x block_size cells; each cell reports
+through the block table while the ref path materializes and re-reads a
+dense logical view. Since the satellite-3 bound (ISSUE 7) the ref path is
+no longer charged the full ``max_blocks * block_size`` capacity: eager
+callers slice the gathered view to the block-rounded LONGEST live sequence
+(``max_resident``), so the honest model is
 
-  us_per_call  — one attention step, CPU wall-clock (kernel runs under the
-                 Pallas interpreter off-TPU, so the µs column is
-                 rank-correlated evidence only; bytes are the result)
-  derived      — modeled HBM KV bytes read per step for both paths and the
-                 ratio (``kernels.paged_attention.modeled_hbm_bytes``)
+  ref    = 2 * B * t_max * row_bytes     (materialize + read, every slot
+                                          padded to the straggler's length)
+  pallas =     sum_b t_b  * row_bytes    (each request's own live blocks,
+                                          read once)
 
-and the whole sweep lands in ``BENCH_paged_attention.json``. The ISSUE
-acceptance bar — >= 4x modeled read reduction at <= 25% occupancy — is
-asserted here as well as in tests/test_paged_attention.py.
+Uniform lengths therefore give only the ~2x double-pass factor; the >= 4x
+reduction at <= 25% pool occupancy comes from length *skew* — one
+straggler pins ``t_max`` for every slot while short rows cost the kernel a
+single block each. The sweep runs both shapes:
+
+  uniform cells — all slots at the same length; documents the 2x bound
+                  (``acceptance`` does not apply; the old unbounded model
+                  claimed 4x here and the benchmark never measured it)
+  skew cells    — one straggler + decode-short rows; the acceptance bar
+                  (>= 4x modeled read reduction at <= 25% pool occupancy)
+                  is asserted on these, mirroring
+                  tests/test_paged_attention.py
+
+Each cell reports ``us_per_call`` (one attention step, CPU wall-clock; the
+ref runs EAGER so its timed path takes the same bounded slice the bytes
+model describes, the kernel runs under the Pallas interpreter off-TPU, so
+the µs column is rank-correlated evidence only; bytes are the result) and
+the modeled HBM KV bytes for both paths. The whole sweep lands in
+``BENCH_paged_attention.json``.
 
   PYTHONPATH=src python -m benchmarks.bench_paged_attention
 """
@@ -23,8 +40,8 @@ from __future__ import annotations
 from typing import List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
+import jax.numpy as jnp
 
 from repro.kernels.paged_attention import (modeled_hbm_bytes, paged_attention,
                                            paged_attention_ref)
@@ -34,23 +51,15 @@ SLOTS = 4
 CHUNK = 4
 KV_HEADS, GROUP, HEAD_DIM = 2, 4, 64       # H = 8 query heads
 MAX_BLOCKS = 8                             # per-request table slots
-OCCUPANCIES = (0.125, 0.25, 0.5, 1.0)      # live fraction of the table
+UNIFORM_OCCUPANCIES = (0.125, 0.25, 0.5, 1.0)   # live fraction, all slots
+STRAGGLER_FRACS = (0.5, 1.0)               # straggler's fraction of capacity
 BLOCK_SIZES = (8, 16)
 DTYPE_BYTES = 2                            # pools are bf16 in serving
 
-# jit the ref cell: the fixed-shape serve-step configuration the bytes model
-# describes (eager ref would slice T to the max_resident bound and the timed
-# path would not match the modeled one). Module-level so the compile cache
-# is shared across sweep cells of the same block_size.
-_REF_JIT = jax.jit(paged_attention_ref,
-                   static_argnames=("block_size", "window", "scale"))
 
-
-def _cell(rng, bs: int, occupancy: float):
-    """One decode-shaped attention step at the given per-request occupancy."""
+def _cell(rng, bs: int, seq_lens: List[int]):
+    """One decode-shaped attention step with per-slot resident lengths."""
     H = KV_HEADS * GROUP
-    t_cap = MAX_BLOCKS * bs
-    seq_len = max(1, int(round(occupancy * t_cap)))
     num_blocks = SLOTS * MAX_BLOCKS
     q = jnp.asarray(rng.normal(size=(SLOTS, CHUNK, H, HEAD_DIM)) * 0.3,
                     jnp.bfloat16)
@@ -59,19 +68,21 @@ def _cell(rng, bs: int, occupancy: float):
     v_pool = jnp.asarray(rng.normal(size=(num_blocks, bs, KV_HEADS, HEAD_DIM))
                          * 0.3, jnp.bfloat16)
     tables = np.full((SLOTS, MAX_BLOCKS), -1, np.int32)
-    live_blocks = -(-seq_len // bs)
     perm = rng.permutation(num_blocks)
-    for b in range(SLOTS):
-        tables[b, :live_blocks] = perm[b * MAX_BLOCKS:
-                                       b * MAX_BLOCKS + live_blocks]
-    starts = jnp.full((SLOTS,), seq_len - 1, jnp.int32)   # decode rows
+    for b, seq_len in enumerate(seq_lens):
+        live = -(-seq_len // bs)
+        tables[b, :live] = perm[b * MAX_BLOCKS: b * MAX_BLOCKS + live]
+    starts = jnp.asarray([s - 1 for s in seq_lens], jnp.int32)  # decode rows
     n_valid = jnp.ones((SLOTS,), jnp.int32)
     tables = jnp.asarray(tables)
-    seq_lens = [seq_len] * SLOTS
 
-    t_ref = time_fn(lambda: _REF_JIT(q, k_pool, v_pool, tables, starts,
-                                     n_valid, block_size=bs),
-                    iters=10, max_s=5.0)
+    # the ref is timed EAGER: that is the path the bounded bytes model
+    # describes (under jit the max_resident bound is a tracer and the ref
+    # falls back to the full fixed-shape view — the very configuration the
+    # kernel exists to replace, not the one being priced here)
+    t_ref = time_fn(lambda: paged_attention_ref(
+        q, k_pool, v_pool, tables, starts, n_valid, block_size=bs),
+        iters=5, max_s=5.0)
     t_pal = time_fn(lambda: paged_attention(
         q, k_pool, v_pool, tables, starts, n_valid, block_size=bs),
         iters=5, max_s=5.0)
@@ -82,44 +93,66 @@ def _cell(rng, bs: int, occupancy: float):
                                 kernel=kern)
         for kern in ("ref", "pallas")
     }
-    return seq_len, t_ref, t_pal, model
+    pool_occ = sum(-(-s // bs) for s in seq_lens) / num_blocks
+    return t_ref, t_pal, model, pool_occ
 
 
 def main() -> List[Row]:
     rng = np.random.default_rng(0)
     rows: List[Row] = []
     cells = []
+
+    def run_cell(bs, shape, label, seq_lens, acceptance_applies):
+        t_ref, t_pal, model, pool_occ = _cell(rng, bs, seq_lens)
+        ratio = model["ref"] / max(1, model["pallas"])
+        name = f"paged_attention/bs{bs}/{label}"
+        rows.append(Row(f"{name}/ref", t_ref,
+                        f"kv_read={model['ref']/2**10:.1f}KiB "
+                        f"(2 passes, every slot at t_max)"))
+        rows.append(Row(f"{name}/pallas", t_pal,
+                        f"kv_read={model['pallas']/2**10:.1f}KiB "
+                        f"reduction={ratio:.1f}x "
+                        f"(1 pass over each slot's live blocks)"))
+        cells.append({"block_size": bs, "shape": shape, "label": label,
+                      "seq_lens": seq_lens, "pool_occupancy": pool_occ,
+                      "ref_us": t_ref, "pallas_us": t_pal,
+                      "ref_bytes": model["ref"],
+                      "pallas_bytes": model["pallas"],
+                      "bytes_reduction": ratio,
+                      "acceptance_applies": acceptance_applies,
+                      "acceptance_ok": (not acceptance_applies
+                                        or pool_occ > 0.25
+                                        or ratio >= 4.0)})
+
     for bs in BLOCK_SIZES:
-        for occ in OCCUPANCIES:
-            seq_len, t_ref, t_pal, model = _cell(rng, bs, occ)
-            ratio = model["ref"] / max(1, model["pallas"])
-            name = f"paged_attention/bs{bs}/occ{occ:g}"
-            rows.append(Row(f"{name}/ref", t_ref,
-                            f"kv_read={model['ref']/2**10:.1f}KiB "
-                            f"(2 passes over capacity)"))
-            rows.append(Row(f"{name}/pallas", t_pal,
-                            f"kv_read={model['pallas']/2**10:.1f}KiB "
-                            f"reduction={ratio:.1f}x "
-                            f"(1 pass over {seq_len} live tokens)"))
-            cells.append({"block_size": bs, "occupancy": occ,
-                          "seq_len": seq_len, "ref_us": t_ref,
-                          "pallas_us": t_pal,
-                          "ref_bytes": model["ref"],
-                          "pallas_bytes": model["pallas"],
-                          "bytes_reduction": ratio,
-                          "acceptance_ok": occ > 0.25 or ratio >= 4.0})
+        cap = MAX_BLOCKS * bs
+        for occ in UNIFORM_OCCUPANCIES:
+            seq = max(1, int(round(occ * cap)))
+            run_cell(bs, "uniform", f"uniform{occ:g}", [seq] * SLOTS,
+                     acceptance_applies=False)
+        for frac in STRAGGLER_FRACS:
+            lens = [int(frac * cap)] + [1] * (SLOTS - 1)
+            run_cell(bs, "skew", f"skew{frac:g}", lens,
+                     acceptance_applies=True)
+
     # report first, assert after — a failing run still leaves diagnostics
     write_bench_json(
         "paged_attention",
         config={"slots": SLOTS, "chunk": CHUNK, "kv_heads": KV_HEADS,
                 "group": GROUP, "head_dim": HEAD_DIM,
                 "max_blocks": MAX_BLOCKS, "block_sizes": list(BLOCK_SIZES),
-                "occupancies": list(OCCUPANCIES),
+                "uniform_occupancies": list(UNIFORM_OCCUPANCIES),
+                "straggler_fracs": list(STRAGGLER_FRACS),
                 "dtype_bytes": DTYPE_BYTES,
                 "backend": jax.default_backend()},
         rows=rows, extra_metrics={"cells": cells})
     bad = [c for c in cells if not c["acceptance_ok"]]
     assert not bad, f"modeled bytes-read reduction < 4x at <=25% occ: {bad}"
+    # the bounded ref model is exactly 2x on uniform cells — a drift guard
+    # against re-introducing the unbounded capacity charge
+    for c in cells:
+        if c["shape"] == "uniform":
+            assert abs(c["bytes_reduction"] - 2.0) < 1e-9, c
     return rows
 
 

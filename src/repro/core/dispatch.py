@@ -16,7 +16,11 @@ function invocation, mapped onto expert parallelism (DESIGN.md §3).
 
 All transports produce results numerically identical to
 ``models.moe.moe_ffn_oracle`` modulo capacity-drop boundaries (validated in
-tests on a multi-device subprocess).
+tests on a multi-device subprocess). Every body is token-mask-aware
+(ISSUE 7): an optional (N,) bool mask routes masked-out tokens — paged
+serving's padding columns — to the drop slot with zero gates, the same
+rule the oracle applies, so padding can never steal expert capacity from a
+real token on any transport.
 
 This module now holds the **per-shard bodies** only; the transport factory
 lives in ``repro.fabric.moe`` (reached via ``Fabric.moe_transport`` /
@@ -79,6 +83,21 @@ def _sp_slice(xf: jax.Array, tp_axis: str) -> Tuple[jax.Array, int]:
     return jax.lax.dynamic_slice_in_dim(xf, rank * n_loc, n_loc, 0), n_loc
 
 
+def _mask_route(ids: jax.Array, gates: jax.Array,
+                tm: Optional[jax.Array], num_experts: int
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Apply a (N,) token mask to routing the way ``moe_ffn_oracle`` does:
+    masked-out tokens (paged serving's padding columns) get an out-of-range
+    expert id — all-zero one_hot in ``build_dispatch``, so rank 0 and the
+    drop slot, consuming **no capacity** — and zero gates, so they also
+    contribute nothing on combine. This is the transports' half of the
+    PR-2 token-mask contract (the oracle's half lives in ``models.moe``)."""
+    if tm is None:
+        return ids, gates
+    return (jnp.where(tm[:, None], ids, jnp.int32(num_experts)),
+            gates * tm[:, None])
+
+
 def _aux_pmean(aux: jax.Array, tp_axis: str,
                dp_axes: Tuple[str, ...]) -> jax.Array:
     """Mean the per-shard aux losses over the tensor axis, then every data
@@ -89,17 +108,19 @@ def _aux_pmean(aux: jax.Array, tp_axis: str,
     return aux
 
 
-def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
-                tp_axis: str, dp_axes: Tuple[str, ...]):
+def _local_body(router, wg, wu, wd, shared, xf, tm=None, *, m: MoEConfig,
+                act: str, tp_axis: str, dp_axes: Tuple[str, ...]):
     """Local Function mode: token all-to-all to resident experts."""
     tp = compat.axis_size(tp_axis)
     e_loc = wg.shape[0]                       # experts resident on this rank
     e = m.num_experts
     xloc, n_loc = _sp_slice(xf, tp_axis)
+    tloc = _sp_slice(tm, tp_axis)[0] if tm is not None else None
 
     r = route_topk(xloc, router, m)
+    ids, gates = _mask_route(r.expert_ids, r.gates, tloc, e)
     cap = expert_capacity(n_loc, m)
-    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
+    slot, keep, _ = build_dispatch(ids, gates, e, cap)
     buf = _scatter_buckets(xloc, slot, e * cap)             # (E*cap, d)
 
     # ship token buckets to expert owners (the jam put)
@@ -115,7 +136,7 @@ def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
     ret = jax.lax.all_to_all(back, tp_axis, 0, 0, tiled=False)
     rows = ret.reshape(e * cap, d)
 
-    y_loc = _combine(rows, slot, keep, r.gates, xf.dtype)
+    y_loc = _combine(rows, slot, keep, gates, xf.dtype)
     if shared is not None:
         y_loc = y_loc + _shared_expert(shared, xloc, act)
 
@@ -123,7 +144,7 @@ def _local_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
     return y, _aux_pmean(r.aux_loss + r.z_loss, tp_axis, dp_axes)
 
 
-def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
+def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, tm=None, *,
                    m: MoEConfig, act: str, tp_axis: str,
                    dp_axes: Tuple[str, ...]):
     """Injected Function mode: expert weights arrive pre-gathered (the
@@ -131,16 +152,18 @@ def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
     cache in ``make_jam_transport``); tokens stay put."""
     e = m.num_experts
     xloc, n_loc = _sp_slice(xf, tp_axis)
+    tloc = _sp_slice(tm, tp_axis)[0] if tm is not None else None
 
     r = route_topk(xloc, router, m)
+    ids, gates = _mask_route(r.expert_ids, r.gates, tloc, e)
     cap = expert_capacity(n_loc, m)
-    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
+    slot, keep, _ = build_dispatch(ids, gates, e, cap)
     buf = _scatter_buckets(xloc, slot, e * cap).reshape(e, cap, -1)
 
     out = expert_ffn(wg_full, wu_full, wd_full, buf, act)   # (E, cap, d)
     rows = out.reshape(e * cap, -1)
 
-    y_loc = _combine(rows, slot, keep, r.gates, xf.dtype)
+    y_loc = _combine(rows, slot, keep, gates, xf.dtype)
     if shared is not None:
         y_loc = y_loc + _shared_expert(shared, xloc, act)
 
@@ -148,8 +171,8 @@ def _injected_body(router, wg_full, wu_full, wd_full, shared, xf, *,
     return y, _aux_pmean(r.aux_loss + r.z_loss, tp_axis, dp_axes)
 
 
-def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
-             tp_axis: str, dp_axes: Tuple[str, ...]):
+def _tp_body(router, wg, wu, wd, shared, xf, tm=None, *, m: MoEConfig,
+             act: str, tp_axis: str, dp_axes: Tuple[str, ...]):
     """Fallback: full token set everywhere; each rank serves only its
     resident experts; partial results combined with psum."""
     tp = compat.axis_size(tp_axis)
@@ -159,16 +182,18 @@ def _tp_body(router, wg, wu, wd, shared, xf, *, m: MoEConfig, act: str,
     n = xf.shape[0]
 
     r = route_topk(xf, router, m)
+    ids, gates = _mask_route(r.expert_ids, r.gates, tm, e)
     cap = expert_capacity(n, m)
-    # global slots, then mask to my expert range
-    slot, keep, _ = build_dispatch(r.expert_ids, r.gates, e, cap)
-    owner = r.expert_ids // e_loc
+    # global slots, then mask to my expert range (a masked token's id is e,
+    # so its owner is out of every rank's range: nobody computes it)
+    slot, keep, _ = build_dispatch(ids, gates, e, cap)
+    owner = ids // e_loc
     mine = keep & (owner == rank)
     slot_loc = jnp.where(mine, slot - rank * e_loc * cap, e_loc * cap)
     buf = _scatter_buckets(xf, slot_loc, e_loc * cap).reshape(e_loc, cap, -1)
     out = expert_ffn(wg, wu, wd, buf, act)
     rows = out.reshape(e_loc * cap, -1)
-    y_part = _combine(rows, slot_loc, mine, r.gates, xf.dtype)
+    y_part = _combine(rows, slot_loc, mine, gates, xf.dtype)
     y = jax.lax.psum(y_part, tp_axis)
     if shared is not None:
         # shared weights + tokens are replicated over tp, so adding the

@@ -115,7 +115,12 @@ class Engine:
     ``block_size`` tokens), chunked prefill (``chunk`` tokens per tick)
     through the same compiled step as decode, block-budget-gated admission,
     preempt-and-requeue (recompute) on pool exhaustion. ``kernel`` selects
-    the paged-attention path (docs/serving.md).
+    the paged-attention path (docs/serving.md); on multi-device meshes the
+    pallas kernel lowers through ``shard_map`` (kv heads over the tensor
+    axis, request rows over the data axes, scheduler arrays replicated) —
+    device count never forces the ``ref`` fallback, and MoE archs serve on
+    any mesh (the step threads the real-token mask through every jam
+    transport).
 
     ``cache="slots"``: one contiguous per-slot cache of ``max_len``,
     single-request prefill on admission, one decode tick per token — the

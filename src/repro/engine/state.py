@@ -148,21 +148,34 @@ class PagedKVState:
         block_size) axes, and trim to ``entry.pos`` tokens. The block axis
         is located structurally (shape ``[..., num_blocks, block_size,
         ...]``) so scanned-group leaves with a leading layer-stack dim
-        resolve correctly."""
+        resolve correctly. A leaf where *more than one* adjacent dim pair
+        matches ``(num_blocks, block_size)`` — e.g. a head or layer-stack
+        dim that happens to collide — is ambiguous, and gathering the wrong
+        axis would serialize garbage; that raises instead of silently
+        taking the first match."""
         blocks = np.asarray(entry.blocks, np.int64)
 
         def take(leaf):
             arr = np.asarray(leaf)
-            for ax in range(arr.ndim - 1):
-                if (arr.shape[ax] == self.num_blocks
-                        and arr.shape[ax + 1] == self.block_size):
-                    got = np.take(arr, blocks, axis=ax)
-                    merged = got.reshape(
-                        arr.shape[:ax] + (len(blocks) * self.block_size,)
-                        + arr.shape[ax + 2:])
-                    idx = (slice(None),) * ax + (slice(0, entry.pos),)
-                    return merged[idx]
-            return arr
+            axes = [ax for ax in range(arr.ndim - 1)
+                    if (arr.shape[ax] == self.num_blocks
+                        and arr.shape[ax + 1] == self.block_size)]
+            if not axes:
+                return arr
+            if len(axes) > 1:
+                raise ValueError(
+                    f"ambiguous block axis in paged-cache leaf of shape "
+                    f"{arr.shape}: dims {axes} all match (num_blocks="
+                    f"{self.num_blocks}, block_size={self.block_size}); "
+                    f"resize the pool (num_blocks/block_size) so the pair "
+                    f"is unique, or reshape the colliding leaf dims")
+            ax = axes[0]
+            got = np.take(arr, blocks, axis=ax)
+            merged = got.reshape(
+                arr.shape[:ax] + (len(blocks) * self.block_size,)
+                + arr.shape[ax + 2:])
+            idx = (slice(None),) * ax + (slice(0, entry.pos),)
+            return merged[idx]
         return jax.tree.map(take, cache)
 
     def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:

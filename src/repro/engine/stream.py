@@ -74,12 +74,17 @@ class RequestHandle:
     def tokens(self, max_ticks: int = 10_000) -> Iterator[int]:
         """Yield this request's tokens as the engine produces them,
         ticking the engine whenever nothing new is buffered. Raises
-        ``RuntimeError`` after ``max_ticks`` engine ticks without the
-        request completing (the same bound ``run_until_drained`` uses)."""
+        ``RuntimeError`` after ``max_ticks`` consecutive engine ticks
+        **without progress** (no new token for this request) — a stall
+        bound, not a lifetime bound: a slow-but-progressing generation
+        (chunked prefill, preemption/recompute churn) streams past any
+        total tick count as long as tokens keep arriving."""
         i = 0
-        ticked = 0
+        ticked = 0                      # ticks since this request progressed
         while True:
             out = self.req.out_tokens
+            if i < len(out):
+                ticked = 0              # progress: reset the stall counter
             while i < len(out):
                 yield out[i]
                 i += 1
@@ -90,8 +95,8 @@ class RequestHandle:
                 return
             if ticked >= max_ticks:
                 raise RuntimeError(
-                    f"request {self.req.rid} still incomplete after "
-                    f"{max_ticks} engine ticks (streaming bound)")
+                    f"request {self.req.rid} made no progress in "
+                    f"{max_ticks} engine ticks (streaming stall bound)")
             self._engine.tick()
             ticked += 1
 

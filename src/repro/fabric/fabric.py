@@ -197,9 +197,9 @@ class Fabric:
                     f"weight_reuse={prev_reuse}; pass a different name= to "
                     f"register a second MoE transport configuration")
 
-            def transport(params, x, m, act):
+            def transport(params, x, m, act, token_mask=None):
                 return self.call(name, x, state=params, placement=mode,
-                                 moe=m, act=act)
+                                 moe=m, act=act, token_mask=token_mask)
             return transport
         self._moe_registrations[name] = (weight_reuse, log_choice)
         return register_moe(self, name=name, mode=mode,

@@ -62,16 +62,27 @@ def register_moe(fabric, *, name: str = "moe.ffn", mode: str = "local",
         return fn(wg, wu, wd)
 
     def invoke(payload: jax.Array, state, placement: str, *,
-               moe: MoEConfig, act: str = "silu"
+               moe: MoEConfig, act: str = "silu",
+               token_mask: Optional[jax.Array] = None
                ) -> Tuple[jax.Array, jax.Array]:
         params, x, m = state, payload, moe
         if params is None:
             raise ValueError(f"collective {name!r} needs state= (the MoE "
                              f"layer params)")
         b, s, d = x.shape
+        dp_ext = 1
+        for ax in dp_axes:
+            dp_ext *= mesh.shape[ax]
+        # serving batches need not divide the dp extent (slots is an engine
+        # policy knob, the mesh is hardware): when rows don't divide,
+        # replicate them instead of refusing — the same divisibility
+        # fallback the sharded paged-attention kernel applies. The cost
+        # model then prices the full (replicated) token count.
+        row_dp = dp_axes if b % dp_ext == 0 else ()
+        row_spec = dp_spec if row_dp else None
         chosen, est = choose_transport_mode(
             m, d_model=d, batch=b, seq=s, mesh_shape=dict(mesh.shape),
-            dp_axes=dp_axes, tp_axis=tp_axis, mode=placement,
+            dp_axes=row_dp, tp_axis=tp_axis, mode=placement,
             dtype_bytes=x.dtype.itemsize, weight_reuse=weight_reuse,
             label="jam", log_choice=log_choice)
         if est is not None:
@@ -83,9 +94,10 @@ def register_moe(fabric, *, name: str = "moe.ffn", mode: str = "local",
         shared = ({k: params[k] for k in _SHARED_KEYS}
                   if m.num_shared > 0 else None)
 
-        def wrapped(router, wg, wu, wd, shared_p, xb):
+        def wrapped(router, wg, wu, wd, shared_p, xb, tm):
             xf = xb.reshape(-1, d)
-            y, aux = body(router, wg, wu, wd, shared_p, xf)
+            tf = None if tm is None else tm.reshape(-1)
+            y, aux = body(router, wg, wu, wd, shared_p, xf, tf)
             return y.reshape(xb.shape), aux
 
         weights = (params["w_gate"], params["w_up"], params["w_down"])
@@ -102,19 +114,24 @@ def register_moe(fabric, *, name: str = "moe.ffn", mode: str = "local",
 
         sh_spec = (None if shared is None
                    else {k: P(None, None) for k in _SHARED_KEYS})
+        # the token mask shards exactly like the tokens it describes —
+        # rows over dp, replicated over tp (the bodies slice it alongside
+        # the token block per tp rank)
+        tm_spec = None if token_mask is None else P(row_spec, None)
         fn = sharded_call(
             wrapped, mesh,
             in_specs=(P(None, None), in_w_spec, in_w_spec, in_w_spec,
-                      sh_spec, P(dp_spec, None, None)),
-            out_specs=(P(dp_spec, None, None), P()),
+                      sh_spec, P(row_spec, None, None), tm_spec),
+            out_specs=(P(row_spec, None, None), P()),
             label=f"jam.{chosen}")
-        return fn(params["router"], *weights, shared, x)
+        return fn(params["router"], *weights, shared, x, token_mask)
 
     fabric.register_collective(name, invoke,
                                placements=("local", "injected", "tp", "auto"))
 
-    def transport(params, x: jax.Array, m: MoEConfig, act: str):
+    def transport(params, x: jax.Array, m: MoEConfig, act: str,
+                  token_mask: Optional[jax.Array] = None):
         return fabric.call(name, x, state=params, placement=mode,
-                           moe=m, act=act)
+                           moe=m, act=act, token_mask=token_mask)
 
     return transport

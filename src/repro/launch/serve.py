@@ -14,6 +14,11 @@
   # priority scheduling + per-token streaming:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --cache paged --scheduler priority --stream --requests 4
+
+  # multi-device paged serving (the shard_map'd Pallas kernel):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
+      --cache paged --mesh 2x2 --paged-kernel pallas --chunk 4
 """
 from __future__ import annotations
 
@@ -68,9 +73,17 @@ def main() -> None:
     p.add_argument("--paged-kernel", choices=("auto", "pallas", "ref"),
                    default="auto",
                    help="paged attention path: the stash-resident Pallas "
-                        "block-table kernel, the gather-then-dense "
-                        "reference, or auto (pallas wherever TPU semantics "
-                        "are available)")
+                        "block-table kernel (single- or multi-device — it "
+                        "lowers through shard_map on meshes), the "
+                        "gather-then-dense reference, or auto (pallas "
+                        "wherever TPU semantics are available, any device "
+                        "count)")
+    p.add_argument("--mesh", default=None, metavar="DPxTP",
+                   help="smoke-mode mesh shape, e.g. 2x2 or 1x4 (axes "
+                        "data x model; needs dp*tp local devices — on CPU "
+                        "set XLA_FLAGS=--xla_force_host_platform_device_"
+                        "count=N). Default: 1x1. Ignored without --smoke "
+                        "(production uses make_production_mesh)")
     p.add_argument("--metrics-json", action="store_true",
                    help="print the final Engine.metrics() dict as JSON")
     args = p.parse_args()
@@ -95,9 +108,22 @@ def main() -> None:
         p.error(f"--blocks/--block-size configure the paged pool and have "
                 f"no effect with --cache {cache}")
     if args.smoke:
-        mesh = compat.make_mesh((1, 1), ("data", "model"))
+        dp, tp = 1, 1
+        if args.mesh:
+            try:
+                dp, tp = (int(t) for t in args.mesh.lower().split("x"))
+            except ValueError:
+                p.error(f"--mesh wants DPxTP (e.g. 2x2), got {args.mesh!r}")
+            if dp * tp > len(jax.devices()):
+                p.error(f"--mesh {args.mesh} needs {dp * tp} devices, have "
+                        f"{len(jax.devices())} (on CPU: XLA_FLAGS="
+                        f"--xla_force_host_platform_device_count={dp * tp})")
+        mesh = compat.make_mesh((dp, tp), ("data", "model"))
         sharding = ShardingConfig(fsdp_params=False, seq_axis=None)
     else:
+        if args.mesh:
+            p.error("--mesh is smoke-only; production uses "
+                    "make_production_mesh()")
         mesh = make_production_mesh()
         sharding = ShardingConfig(fsdp_params=False, seq_axis="model")
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"], sharding=sharding)

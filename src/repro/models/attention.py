@@ -300,7 +300,7 @@ def gqa_paged_attention(
     cache: PagedKVCache,
     layout: PagedLayout,
     window: Optional[int] = None,
-    kernel: str = "auto",
+    kernel="auto",
 ) -> Tuple[jax.Array, PagedKVCache]:
     """One serving step through a paged cache.
 
@@ -312,6 +312,10 @@ def gqa_paged_attention(
     pool->VMEM, the logical view never exists in HBM) or the gather-then-
     dense oracle (``kernel="ref"``). ``"auto"`` picks pallas wherever TPU
     semantics are available (``kernels.paged_attention.resolve_kernel``).
+    ``kernel`` may also be a *callable* with ``paged_attention_ref``'s
+    signature — that is how ``runtime.steps`` threads the shard_map'd
+    multi-device lowering (``make_sharded_paged_attention``) down here
+    without the model layer knowing about meshes.
     Columns beyond ``n_valid`` produce garbage outputs that the caller
     discards (their cache writes are dropped), which is what lets decode and
     prefill share one compiled shape — the ISSUE-2 "decode-shaped step, no
@@ -330,9 +334,12 @@ def gqa_paged_attention(
         k = apply_rope(k, positions, a.rope_theta, a.rotary_pct)
 
     new_cache = cache.write(k, v, layout)
-    kind = paged_kernel.resolve_kernel(kernel)
-    fn = (paged_kernel.paged_attention if kind == "pallas"
-          else paged_kernel.paged_attention_ref)
+    if callable(kernel):
+        fn = kernel
+    else:
+        kind = paged_kernel.resolve_kernel(kernel)
+        fn = (paged_kernel.paged_attention if kind == "pallas"
+              else paged_kernel.paged_attention_ref)
     out = fn(q.astype(x.dtype), new_cache.k_pool, new_cache.v_pool,
              layout.block_tables, layout.starts, layout.n_valid,
              block_size=layout.block_size, window=window,

@@ -139,7 +139,7 @@ def apply_block(
     mrope_positions: Optional[jax.Array] = None,
     moe_transport=None,
     paged: Optional[PagedLayout] = None,
-    paged_kernel: str = "auto",
+    paged_kernel="auto",         # str kind or a sharded-kernel callable
     recurrent: Optional[RecurrentLayout] = None,
 ) -> Tuple[jax.Array, Cache, jax.Array]:
     a = cfg.attention
@@ -254,7 +254,7 @@ def apply_block(
 
 def _apply_block_paged(bt: str, params, x: jax.Array, cfg: ModelConfig,
                        cache: Cache, paged: PagedLayout,
-                       moe_transport, paged_kernel: str = "auto"
+                       moe_transport, paged_kernel="auto"
                        ) -> Tuple[jax.Array, Cache, jax.Array]:
     """Paged-serving variant: GQA attention through the block pool.
 
@@ -276,8 +276,8 @@ def _apply_block_paged(bt: str, params, x: jax.Array, cfg: ModelConfig,
     h2 = rms_norm(x, params["ln2"], cfg.norm_eps)
     if bt.endswith("_moe"):
         # mask the padding columns out of routing so they cannot steal
-        # expert capacity from real tokens (honored by the oracle path;
-        # jam transports route everything — docs/serving.md caveat)
+        # expert capacity from real tokens (same drop-slot rule on the
+        # oracle and every jam transport — docs/fabric.md)
         y_ffn, aux = moe_mod.moe_ffn(params["moe"], h2, cfg.moe, cfg.act,
                                      transport=moe_transport,
                                      token_mask=paged.token_valid(x.shape[1]))

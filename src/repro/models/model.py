@@ -202,7 +202,7 @@ def forward(
     compute_dtype=jnp.bfloat16,
     constrain=None,                          # activation sharding constraint
     paged: Optional[PagedLayout] = None,     # serving: block-table cache view
-    paged_kernel: str = "auto",              # paged attention: pallas|ref|auto
+    paged_kernel="auto",         # paged attention: pallas|ref|auto|callable
     recurrent: Optional[RecurrentLayout] = None,  # serving: valid-prefix layout
 ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
     # ``constrain(x)`` pins (B, S, d) activations to the batch sharding at

@@ -145,15 +145,13 @@ def moe_ffn(params, x: jax.Array, m: MoEConfig, act: str = "silu",
             ) -> Tuple[jax.Array, jax.Array]:
     """MoE FFN with pluggable jam transport (None => single-device oracle).
 
-    ``token_mask`` is honored by the oracle path only; the jam transports
-    route every token (all tokens are real in training). Combining a mask
-    with a transport is refused — silently dropping the mask would let
-    padding tokens steal expert capacity (docs/serving.md).
+    ``token_mask`` (B, S) bool marks real tokens; both paths honor it with
+    the same routing rule (masked tokens hit the drop slot with zero gates,
+    consuming no expert capacity — see ``core.dispatch._mask_route``), so
+    paged MoE serving works on any mesh (docs/fabric.md).
     """
     if transport is None:
         return moe_ffn_oracle(params, x, m, act, token_mask=token_mask)
-    if token_mask is not None:
-        raise NotImplementedError(
-            "jam transports are not token-mask-aware; serve MoE paged on a "
-            "single tensor shard (docs/serving.md)")
-    return transport(params, x, m, act)
+    if token_mask is None:
+        return transport(params, x, m, act)
+    return transport(params, x, m, act, token_mask=token_mask)

@@ -381,34 +381,33 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
     ``kernel`` selects the paged-attention path (``"pallas"``: the
     stash-resident block-table kernel; ``"ref"``: gather-then-dense;
     ``"auto"``: pallas wherever TPU semantics are available). The resolved
-    choice lands in ``meta["paged_kernel"]``. On multi-device meshes
-    ``auto`` stays on ``ref``: the kernel has no GSPMD partitioning rule
-    yet, so sharding it is the documented follow-up (docs/serving.md).
+    choice lands in ``meta["paged_kernel"]``. On multi-device meshes the
+    pallas path lowers through ``make_sharded_paged_attention`` — kv heads
+    shard over the tensor axis (matching ``paged_cache_spec_tree``'s pool
+    sharding), request rows over the data axes, scheduler arrays stay
+    replicated at the step boundary and are sliced per dp shard inside the
+    shard_map (docs/serving.md#the-paged-attention-kernel).
+
+    MoE archs on a >1-shard tensor axis serve through the token-mask-aware
+    jam transports: the padding-column mask from ``PagedLayout.token_valid``
+    threads into ``core.dispatch``'s shard bodies so padding can never
+    steal expert capacity from real tokens (docs/fabric.md).
     """
     assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
     paged_kernel = paged_attention_lib.resolve_kernel(
         kernel, n_devices=mesh.devices.size)
+    kernel_fn = paged_kernel
     if paged_kernel == "pallas" and mesh.devices.size > 1:
-        raise NotImplementedError(
-            "the pallas paged-attention kernel has no multi-device "
-            "partitioning rule yet; use kernel='auto'/'ref' on >1 "
-            "device meshes (docs/serving.md)")
-    rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
+        # the multi-device lowering: same kernel, shard_map'd through the
+        # sharded_call seam; the model layer just sees a callable
+        kernel_fn = paged_attention_lib.make_sharded_paged_attention(
+            mesh, dp_axes=rules.dp_axes, tp_axis=rules.tp_axis)
     transport_log: list = []
     # weight_reuse stays 1 for the same reason as make_serve_step: the step
     # is compiled once and every executed tick re-runs the traced gather
     fabric, transport = _bundle_fabric(cfg, mesh, rules, kind="paged_decode",
                                        log_choice=transport_log)
-    if transport is not None:
-        # the jam transports route every token — padding columns would
-        # silently steal expert capacity from real tokens, breaking the
-        # scheduler's output-identity guarantee. Refuse rather than serve
-        # wrong answers; threading the token mask through core.dispatch is
-        # the ROADMAP follow-up (docs/serving.md).
-        raise NotImplementedError(
-            "paged MoE serving on a multi-shard tensor axis needs "
-            "token-mask-aware jam transports; use the contiguous Server "
-            "or a tp=1 mesh (docs/serving.md)")
     constrain = act_constrain(
         rules, mesh, slots % mesh_util.dp_extent(rules, mesh) == 0)
 
@@ -416,7 +415,7 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
         layout = PagedLayout(block_tables, starts, n_valid, block_size)
         logits, new_cache, _ = model_lib.forward(
             cfg, params, tokens, cache=cache, paged=layout,
-            paged_kernel=paged_kernel,
+            paged_kernel=kernel_fn,
             moe_transport=transport, constrain=constrain)
         last = jnp.maximum(n_valid - 1, 0)
         last_logits = jnp.take_along_axis(

@@ -323,6 +323,59 @@ def test_on_token_late_subscriber_catches_up(setup):
     assert late == h.req.out_tokens
 
 
+def test_stream_max_ticks_is_stall_bound_not_lifetime_bound():
+    """Regression (ISSUE 7 satellite): tokens(max_ticks=) must bound ticks
+    *without progress* and reset whenever a token arrives — the old
+    counter bounded request lifetime, so any slow-but-progressing stream
+    (here: one token every 3rd tick) died once total ticks passed the
+    bound even though it was never stalled."""
+    from repro.engine.stream import RequestHandle
+
+    class StubReq:
+        rid, done = 0, False
+        def __init__(self):
+            self.out_tokens = []
+
+    class StubEngine:
+        def __init__(self, req, period, total):
+            self.req, self.period, self.total, self.ticks = \
+                req, period, total, 0
+        def pending(self):
+            return not self.req.done
+        def tick(self):
+            self.ticks += 1
+            if self.period and self.ticks % self.period == 0:
+                self.req.out_tokens.append(len(self.req.out_tokens))
+                self.req.done = len(self.req.out_tokens) >= self.total
+
+    # 8 tokens, one every 3rd tick: 24 total ticks, max stall window 2.
+    # max_ticks=4 < 24 would have killed this stream under the old rule.
+    req = StubReq()
+    eng = StubEngine(req, period=3, total=8)
+    assert list(RequestHandle(eng, req).tokens(max_ticks=4)) == list(range(8))
+    assert eng.ticks == 24
+    # a genuine stall (no token ever) must still trip the bound
+    stalled = StubReq()
+    h = RequestHandle(StubEngine(stalled, period=0, total=1), stalled)
+    with pytest.raises(RuntimeError, match="no progress in 5 engine ticks"):
+        list(h.tokens(max_ticks=5))
+
+
+def test_stream_max_ticks_allows_slow_chunked_prefill(setup):
+    """End-to-end shape of the same bug: a 12-token prompt over chunk=4
+    spends several ticks prefilling before the first token; a small
+    max_ticks must survive the whole generation as long as every stall
+    window stays under it."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, slots=1)
+    rng = np.random.default_rng(23)
+    prompt = _prompts(cfg, 1, rng, lo=12, hi=13)[0]
+    with mesh:
+        h = eng.submit(Request(0, prompt, max_new_tokens=6))
+        streamed = list(h.tokens(max_ticks=4))
+    assert streamed == _greedy_reference(cfg, params, prompt, 6)
+
+
 def test_handle_result_drives_to_completion(setup):
     cfg, run, mesh, params = setup
     eng = _mk_engine(setup, slots=1)
@@ -517,6 +570,28 @@ def test_sequence_state_conformance_lifecycle():
             np.testing.assert_array_equal(
                 np.asarray(cache2["state"][2]), np.full(4, 2.0))
         st8.release(e)
+
+
+def test_paged_gather_ambiguous_block_axis_raises():
+    """Regression (ISSUE 7 satellite): ``PagedKVState.gather`` locates the
+    pool's (num_blocks, block_size) axis pair structurally; a leaf where
+    two adjacent dim pairs both match (e.g. a head dim colliding with the
+    pool geometry) must raise instead of silently gathering the first
+    match and serializing garbage."""
+    from repro.engine import PagedKVState
+
+    st8 = PagedKVState(num_blocks=4, block_size=4)
+    e = _fake_entry()
+    e.blocks, e.pos = [0, 2], 6
+    # (4, 4, 4, 2): dims (0,1) and (1,2) both look like the block pair
+    with pytest.raises(ValueError, match="ambiguous block axis"):
+        st8.gather(e, {"pool": np.zeros((4, 4, 4, 2), np.float32)}, slot=0)
+    # unique pair (dims 1,2 of a scanned-stack leaf) still resolves
+    leaf = np.arange(3 * 4 * 4 * 2, dtype=np.float32).reshape(3, 4, 4, 2)
+    out = st8.gather(e, {"pool": leaf}, slot=0)
+    assert out["pool"].shape == (3, 6, 2)
+    np.testing.assert_array_equal(
+        out["pool"], leaf[:, [0, 2]].reshape(3, 8, 2)[:, :6])
 
 
 def test_recurrent_state_template_clears_stale_slot():

@@ -1,0 +1,296 @@
+"""Multi-device paged attention (ISSUE 7).
+
+The single-device fallback had been hiding real bugs behind two
+``NotImplementedError`` guards; this suite pins the fixes:
+
+  1. sharded kernel — ``make_sharded_paged_attention`` lowers the Pallas
+     kernel through the PR-1 ``sharded_call`` seam (request rows -> dp,
+     KV heads -> tp, block tables / starts / n_valid replicated at the
+     step boundary and dp-sliced inside). Outputs must match the
+     single-device oracle on (1,4), (2,2) and (4,1) meshes, window
+     on/off, including the replicated fallbacks when a dim doesn't
+     divide the axis;
+  2. engine identity — Engine greedy outputs under ``kernel="pallas"``
+     on multi-device meshes equal the unbatched single-device reference,
+     through preemption-and-recompute;
+  3. the tp>1 paged-MoE refusal is gone — the jam transports are
+     token-mask-aware (``core.dispatch._mask_route``), so MoE archs
+     serve paged on any mesh and still match the unbatched forward.
+
+Plus the HLO acceptance (the compiled sharded step carries no dense
+``(slots, T, K, D)`` logical-KV buffer, in full or per-shard form) and
+the ``resolve_kernel`` device-count policy.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.engine import Engine, Request
+from repro.kernels.paged_attention import (make_sharded_paged_attention,
+                                           paged_attention_ref,
+                                           resolve_kernel,
+                                           sharded_paged_specs)
+from repro.launch.hlo_cost import has_buffer_shape
+from repro.models import model as model_lib
+
+from test_paged_attention import TOL, _assert_valid_close, _case
+
+needs4 = pytest.mark.skipif(len(jax.devices()) < 4,
+                            reason="needs 4 simulated devices (conftest)")
+
+
+def _mesh(dp: int, tp: int) -> Mesh:
+    devs = jax.devices()
+    if len(devs) < dp * tp:
+        pytest.skip(f"needs {dp * tp} devices, have {len(devs)}")
+    return Mesh(np.array(devs[:dp * tp]).reshape(dp, tp), ("data", "model"))
+
+
+def _run_cfg(cfg):
+    return RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                     sharding=ShardingConfig(fsdp_params=False,
+                                             seq_axis=None))
+
+
+def _greedy_reference(cfg, params, prompt, n):
+    """Unbatched greedy forward on HOST copies of the params — the
+    single-device reference must not itself compute distributed (eager
+    forward over mesh-sharded params runs under GSPMD, whose psum ordering
+    noise can flip an MoE router near-tie and change tokens wholesale)."""
+    params = jax.device_get(params)
+    toks = [int(t) for t in prompt]
+    out = []
+    for _ in range(n):
+        logits, _, _ = model_lib.forward(cfg, params,
+                                         jnp.asarray([toks], jnp.int32))
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return out
+
+
+def _prompts(cfg, n, rng, lo=4, hi=12):
+    return [rng.integers(0, cfg.vocab_size,
+                         size=(int(rng.integers(lo, hi)),)).astype(np.int32)
+            for _ in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# sharded kernel differential vs the single-device oracle
+# ---------------------------------------------------------------------------
+
+@needs4
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2), (4, 1)])
+@pytest.mark.parametrize("window", [None, 12])
+def test_sharded_kernel_matches_ref(dp, tp, window):
+    """B=4 divides every dp; K=2 divides tp=2 but NOT tp=4, so (1,4) also
+    exercises the replicated-heads fallback (redundant compute, no
+    collectives) — results must be identical either way."""
+    mesh = _mesh(dp, tp)
+    rng = np.random.default_rng(hash((dp, tp, window or 0)) % 2**32)
+    args = _case(rng, bs=8, B=4, C=4, K=2, G=2, D=16, M=3, window=window)
+    call = make_sharded_paged_attention(mesh)
+    with mesh:
+        y = call(*args, block_size=8, window=window)
+    yr = paged_attention_ref(*args, block_size=8, window=window)
+    assert y.shape == yr.shape
+    _assert_valid_close(y, yr, args[5], **TOL)
+
+
+@needs4
+def test_sharded_specs_divisibility_rules():
+    """dp engages iff batch divides the dp extent, tp iff kv_heads divides
+    the tp extent — the same rules ``paged_cache_spec_tree`` shards the
+    pool by, so q-head slices always align with resident pool shards."""
+    mesh = _mesh(2, 2)
+    assert sharded_paged_specs(mesh, batch=4, kv_heads=2) == ("data", "model")
+    assert sharded_paged_specs(mesh, batch=3, kv_heads=2) == (None, "model")
+    assert sharded_paged_specs(mesh, batch=4, kv_heads=3) == ("data", None)
+    assert sharded_paged_specs(mesh, batch=3, kv_heads=3) == (None, None)
+
+
+@needs4
+def test_sharded_kernel_matches_ref_property():
+    """Hypothesis sweep on the (2,2) mesh: tables with holes and pool-block
+    reuse, n_valid in {0, 1, C}, window on/off — both the sharded and the
+    replicated-fallback geometries (odd B / odd K) must match the oracle."""
+    pytest.importorskip("hypothesis", reason="hypothesis not installed")
+    from hypothesis import given, settings, strategies as st
+
+    mesh = _mesh(2, 2)
+    call = make_sharded_paged_attention(mesh)
+
+    @settings(max_examples=12, deadline=None)
+    @given(st.data())
+    def run(data):
+        bs = data.draw(st.sampled_from([8, 16]), label="block_size")
+        B = data.draw(st.sampled_from([2, 3, 4]), label="B")
+        C = data.draw(st.sampled_from([1, 4]), label="C")
+        K = data.draw(st.sampled_from([1, 2]), label="K")
+        G = data.draw(st.sampled_from([1, 2]), label="G")
+        M = data.draw(st.integers(2, 4), label="M")
+        window = data.draw(
+            st.one_of(st.none(), st.integers(2, 2 * bs)), label="window")
+        seed = data.draw(st.integers(0, 2**31 - 1), label="seed")
+        holes = data.draw(st.booleans(), label="holes")
+        rng = np.random.default_rng(seed)
+        args = _case(rng, bs=bs, B=B, C=C, K=K, G=G, D=16, M=M,
+                     window=window, holes=holes)
+        with mesh:
+            y = call(*args, block_size=bs, window=window)
+        yr = paged_attention_ref(*args, block_size=bs, window=window)
+        _assert_valid_close(y, yr, args[5], **TOL)
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# resolve_kernel device-count policy
+# ---------------------------------------------------------------------------
+
+def test_resolve_kernel_multidevice_under_tpu_semantics(monkeypatch):
+    """ISSUE 7 acceptance: ``auto`` picks pallas for ANY device count when
+    the platform has TPU kernel semantics — multi-device no longer demotes
+    to ref (that was the old guard, not a capability limit)."""
+    from repro.kernels.paged_attention import ops
+    monkeypatch.setattr(ops, "_on_tpu", lambda: True)
+    for n in (1, 4, 256):
+        assert resolve_kernel("auto", n_devices=n) == "pallas"
+    # explicit kinds are never overridden by device count
+    assert resolve_kernel("pallas", n_devices=4) == "pallas"
+    assert resolve_kernel("ref", n_devices=4) == "ref"
+
+
+# ---------------------------------------------------------------------------
+# compiled sharded step: no dense logical-KV buffer (full or per-shard)
+# ---------------------------------------------------------------------------
+
+@needs4
+def test_sharded_step_hlo_no_logical_kv():
+    from repro.runtime.steps import make_paged_serve_step
+
+    cfg = get_smoke("llama3.2-1b")
+    run = _run_cfg(cfg)
+    mesh = _mesh(2, 2)
+    geom = dict(slots=4, chunk=4, num_blocks=16, block_size=4,
+                max_blocks_per_seq=8)
+    texts = {}
+    with mesh:
+        for kern in ("ref", "pallas"):
+            b = make_paged_serve_step(cfg, run, mesh, kernel=kern, **geom)
+            assert b.meta["paged_kernel"] == kern
+            texts[kern] = (jax.jit(b.fn, in_shardings=b.in_shardings,
+                                   out_shardings=b.out_shardings)
+                           .lower(*b.abstract_inputs).compile().as_text())
+    a = cfg.attention
+    T = geom["max_blocks_per_seq"] * geom["block_size"]
+    # GSPMD may keep the dense view whole or shard it over dp/tp — every
+    # variant counts as a materialization
+    variants = [(s, T, k, a.head_dim)
+                for s in (geom["slots"], geom["slots"] // 2)
+                for k in (a.num_kv_heads, max(1, a.num_kv_heads // 2))]
+    assert any(has_buffer_shape(texts["ref"], v) for v in variants), \
+        "oracle step lost its materialization — the check is vacuous"
+    for v in variants:
+        assert not has_buffer_shape(texts["pallas"], v), \
+            f"sharded pallas step still materializes a logical KV view {v}"
+
+
+# ---------------------------------------------------------------------------
+# Engine greedy identity under kernel="pallas", preemption included
+# ---------------------------------------------------------------------------
+
+@needs4
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
+def test_engine_pallas_greedy_identity_with_preemption(dp, tp):
+    """ISSUE 7 acceptance: Engine greedy outputs under kernel='pallas' on
+    (1,4)/(2,2) meshes == the single-device unbatched reference, with the
+    preempt-and-recompute path exercised (2 slots, pool of 10 blocks,
+    2 long requests)."""
+    cfg = get_smoke("llama3.2-1b")
+    run = _run_cfg(cfg)
+    mesh = _mesh(dp, tp)
+    rng = np.random.default_rng(3)
+    prompts = _prompts(cfg, 2, rng, lo=10, hi=11)
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="paged", kernel="pallas",
+                     slots=2, max_len=32, num_blocks=10, block_size=4,
+                     chunk=4)
+        eng.load_params()
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=14))
+        done = eng.run_until_drained()
+    assert eng.preempt_count >= 1, "test did not exercise preemption"
+    assert eng.metrics()["paged_kernel"] == "pallas"
+    by_rid = {r.rid: r.out_tokens for r in done}
+    for rid, p in enumerate(prompts):
+        assert by_rid[rid] == _greedy_reference(cfg, eng.params, p, 14), rid
+
+
+@needs4
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
+def test_engine_pallas_matches_ref_kernel_schedule(dp, tp):
+    """Same mesh, same requests: kernel='pallas' and kernel='ref' must
+    produce identical tokens AND an identical schedule (the kernel choice
+    is a lowering detail, never a scheduling input)."""
+    cfg = get_smoke("llama3.2-1b")
+    run = _run_cfg(cfg)
+    mesh = _mesh(dp, tp)
+    rng = np.random.default_rng(9)
+    prompts = _prompts(cfg, 3, rng, lo=5, hi=9)
+    fps = {}
+    for kern in ("ref", "pallas"):
+        with mesh:
+            eng = Engine(cfg, run, mesh, cache="paged", kernel=kern,
+                         slots=3, max_len=32, num_blocks=16, block_size=4,
+                         chunk=4)
+            eng.load_params()
+            for rid, p in enumerate(prompts):
+                eng.submit(Request(rid, p, max_new_tokens=4))
+            eng.run_until_drained()
+        fps[kern] = {
+            "outputs": {r.rid: list(r.out_tokens) for r in eng.completed},
+            "admission_log": list(eng.admission_log),
+            "ticks": eng.ticks,
+        }
+    assert fps["pallas"] == fps["ref"]
+
+
+# ---------------------------------------------------------------------------
+# tp>1 paged MoE: the NotImplementedError is gone, outputs stay exact
+# ---------------------------------------------------------------------------
+
+@needs4
+@pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
+def test_moe_paged_engine_tp_matches_reference(dp, tp):
+    """attn_moe blocks through the paged path on tp>1 meshes: the jam
+    transports' token-mask routing (padding columns -> drop slot, zero
+    gates) must reproduce the unbatched greedy forward exactly under
+    dropless capacity — this exact configuration used to raise
+    NotImplementedError."""
+    cfg = get_smoke("olmoe-1b-7b")
+    if cfg.moe.num_experts % tp:
+        pytest.skip(f"{cfg.moe.num_experts} experts not divisible by tp={tp}")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=4.0))
+    run = _run_cfg(cfg)
+    mesh = _mesh(dp, tp)
+    rng = np.random.default_rng(6)
+    prompts = _prompts(cfg, 3, rng, lo=5, hi=10)
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="paged", slots=3, max_len=32,
+                     num_blocks=12, block_size=4, chunk=4)
+        eng.load_params()
+        for rid, p in enumerate(prompts):
+            eng.submit(Request(rid, p, max_new_tokens=4))
+        done = eng.run_until_drained()
+    by_rid = {r.rid: r.out_tokens for r in done}
+    for rid, p in enumerate(prompts):
+        assert by_rid[rid] == _greedy_reference(cfg, eng.params, p, 4), rid

@@ -95,6 +95,42 @@ def test_moe_layer_outputs_match_across_transports(arch, dp, tp):
             assert err < 5e-4, (arch, mode, dp, tp, err)
 
 
+@needs4
+@pytest.mark.parametrize("arch", MOE_SMOKES)
+@pytest.mark.parametrize("dp,tp", LAYOUTS)
+def test_masked_moe_layer_outputs_match_oracle(arch, dp, tp):
+    """Token-mask contract (ISSUE 7): paged serving hands every transport a
+    (B, S) mask of real tokens; masked-out padding columns must route to
+    the drop slot with zero gates — the oracle's rule — so each transport
+    reproduces the masked oracle on real-token rows. (Masked rows are
+    discarded by the serving contract and not compared.) This is what
+    makes tp>1 paged MoE serving legal on every transport."""
+    cfg = _moe_smoke(arch)
+    m = cfg.moe
+    if m.num_experts % tp:
+        pytest.skip(f"{m.num_experts} experts not divisible by ep={tp}")
+    params, x = _layer_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(42)
+    mask = jnp.asarray(rng.random((x.shape[0], x.shape[1])) < 0.6)
+    y_ref, aux_ref = moe_lib.moe_ffn_oracle(params, x, m, cfg.act,
+                                            token_mask=mask)
+    mesh = _mesh(dp, tp)
+    keep = np.asarray(mask)[:, :, None]
+    with mesh:
+        for mode in MODES:
+            tr = make_jam_transport(mesh, dp_axes=("data",), tp_axis="model",
+                                    mode=mode)
+            y, _ = tr(params, x, m, cfg.act, token_mask=mask)
+            err = float(jnp.abs(jnp.where(keep, y - y_ref, 0.0)).max())
+            assert err < 5e-4, (arch, mode, dp, tp, err)
+            # a masked call must not perturb the unmasked path (training
+            # regression guard: the mask arg is optional end to end)
+            y_plain, _ = tr(params, x, m, cfg.act)
+            y_oracle, _ = moe_lib.moe_ffn_oracle(params, x, m, cfg.act)
+            err = float(jnp.abs(y_plain - y_oracle).max())
+            assert err < 5e-4, (arch, mode, dp, tp, err)
+
+
 def _two_step_loss(cfg, mesh, mode: str, seq: int, batch: int) -> float:
     cfg = dataclasses.replace(
         cfg, moe=dataclasses.replace(cfg.moe, transport=mode))

@@ -1,0 +1,219 @@
+"""Router tier vs one oversubscribed engine — skewed traffic.
+
+The ISSUE 8 acceptance benchmark: the same skewed request mix (a head of
+long prompts that grow well past their admission reserve, then a tail of
+short ones) served two ways:
+
+* **single**: one engine whose ``slots`` oversubscribe its block pool —
+  the classic over-committed deployment. Admission reserves only
+  ``blocks_for(prompt+1)``, so the co-scheduled long head outgrows the
+  pool mid-decode and preempts itself into recompute churn; and because
+  the step is fixed-shape, every tick pays full-batch compute even while
+  the pool gates occupancy below ``slots``. The short tail queues behind
+  the thrash (p99 TTFT).
+* **cluster**: a ``Router`` over two replicas with the same per-engine
+  pool but right-sized slots, rebalancing queued work on
+  oversubscription. The long head splits across replicas, each replica's
+  residents fit their pool at full growth, and the tail streams through
+  the spare slot — no recompute, no dead batch rows, no convoy.
+
+The registry smoke model is dispatch-bound on CPU (a batch-6 step costs
+the same as batch-3), which would let the single engine pack rows for
+free; the bench widens it until a step is compute-bound — the regime
+the framework targets — so slot occupancy costs real wall time. Each
+system is warmed (compile + first-touch) outside the timed window.
+
+Both systems run the same model, scheduler (fifo), chunk, block
+geometry, and request set; outputs are asserted identical request-by-
+request (placement and migration never change tokens). Reported per
+system: aggregate tok/s and the TTFT distribution, into the standardized
+``BENCH_cluster.json``. Acceptance: cluster > single on aggregate tok/s
+AND cluster p99 TTFT < single p99 TTFT.
+
+  PYTHONPATH=src python -m benchmarks.bench_cluster
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.cluster import MigrateOnOversubscription, Replica, Router
+from repro.engine import Engine, Request
+from benchmarks.common import Row, emit, write_bench_json
+
+ARCH = "llama3.2-1b"
+D_MODEL, D_FF, N_LAYERS, HEAD_DIM = 384, 1536, 4, 96
+N_LONG, LONG_PROMPT, LONG_NEW = 4, 40, 24     # grow 6 -> 8 blocks each
+N_SHORT, SHORT_PROMPT, SHORT_NEW = 12, 8, 8   # 2 blocks, zero growth
+MAX_LEN = 64
+BLOCK_SIZE = 8
+NUM_BLOCKS = 18          # per engine: holds 3 longs at admission (6 blocks
+#                          each), NOT at full growth (8 each) -> churn when
+#                          one engine co-schedules the whole long head
+SINGLE_SLOTS = 6         # oversubscribes the 18-block pool under growth
+REPLICA_SLOTS = 3        # 2 longs + a short lane fit 18 blocks at growth
+CHUNK = 8
+WARMUP_RID = 900         # warmup requests; excluded from every metric
+
+
+def _cfg():
+    cfg = get_smoke(ARCH)
+    return dataclasses.replace(
+        cfg, d_model=D_MODEL, d_ff=D_FF, num_layers=N_LAYERS,
+        attention=dataclasses.replace(cfg.attention, head_dim=HEAD_DIM))
+
+
+def _prompts(cfg) -> List[np.ndarray]:
+    rng = np.random.default_rng(0)
+    longs = [rng.integers(0, cfg.vocab_size, size=(LONG_PROMPT,))
+             .astype(np.int32) for _ in range(N_LONG)]
+    shorts = [rng.integers(0, cfg.vocab_size, size=(SHORT_PROMPT,))
+              .astype(np.int32) for _ in range(N_SHORT)]
+    return longs + shorts          # skew: the long head arrives first
+
+
+def _requests(prompts) -> List[Request]:
+    return [Request(rid, p,
+                    max_new_tokens=LONG_NEW if rid < N_LONG else SHORT_NEW)
+            for rid, p in enumerate(prompts)]
+
+
+def _warmup_req(cfg, rid: int) -> Request:
+    prompt = np.arange(SHORT_PROMPT, dtype=np.int32) % cfg.vocab_size
+    return Request(rid, prompt, max_new_tokens=2)
+
+
+def _ttft_stats(records) -> Dict[str, float]:
+    lat = sorted(r["ttft_s"] for r in records
+                 if r["rid"] < WARMUP_RID and r["ttft_s"] is not None)
+    if not lat:
+        return {"p50_s": 0.0, "p99_s": 0.0}
+    return {"p50_s": lat[len(lat) // 2],
+            "p99_s": lat[min(len(lat) - 1, int(len(lat) * 0.99))]}
+
+
+def _mk_engine(cfg, run, mesh, *, slots: int, engine_id: str) -> Engine:
+    return Engine(cfg, run, mesh, cache="paged", slots=slots,
+                  max_len=MAX_LEN, num_blocks=NUM_BLOCKS,
+                  block_size=BLOCK_SIZE, chunk=CHUNK, engine_id=engine_id,
+                  placement="auto")
+
+
+def main() -> List[Row]:
+    cfg = _cfg()
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False,
+                                            seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    prompts = _prompts(cfg)
+
+    with mesh:
+        # ---- single oversubscribed engine --------------------------------
+        single = _mk_engine(cfg, run, mesh, slots=SINGLE_SLOTS,
+                            engine_id="single")
+        single.inject_params()
+        params = single.params
+        single.submit(_warmup_req(cfg, WARMUP_RID))
+        single.run_until_drained()                 # compile outside timing
+        single_reqs = _requests(prompts)
+        for r in single_reqs:
+            single.submit(r)
+        t0 = time.perf_counter()
+        single.run_until_drained()
+        single_dt = time.perf_counter() - t0
+        sm = single.metrics()
+
+        # ---- 2-replica router, same per-engine pool ----------------------
+        reps = [Replica(_mk_engine(cfg, run, mesh, slots=REPLICA_SLOTS,
+                                   engine_id=f"replica-{i}"), model=ARCH)
+                for i in range(2)]
+        for rep in reps:
+            rep.engine.inject_params(params)   # one warm weight tree
+        router = Router(reps, rebalance=MigrateOnOversubscription())
+        for i in range(2):                     # one warmup lands per replica
+            router.submit(_warmup_req(cfg, WARMUP_RID + 1 + i), model=ARCH)
+        router.run_until_drained()
+        cluster_reqs = _requests(prompts)
+        for r in cluster_reqs:
+            router.submit(r, model=ARCH)
+        t0 = time.perf_counter()
+        router.run_until_drained()
+        cluster_dt = time.perf_counter() - t0
+        cm = router.metrics()
+
+    # routing/migration must never change tokens
+    for s, c in zip(single_reqs, cluster_reqs):
+        assert s.out_tokens == c.out_tokens, (
+            f"rid {s.rid}: cluster tokens diverge from single-engine run")
+
+    total_tokens = sum(len(r.out_tokens) for r in single_reqs)
+    s_tokps = total_tokens / single_dt
+    c_tokps = total_tokens / cluster_dt
+    s_ttft = _ttft_stats(sm["requests"])
+    c_ttft = _ttft_stats([rec for m in cm["replicas"].values()
+                          for rec in m["requests"]])
+    single_block = {
+        "tokens": total_tokens, "wall_s": single_dt, "tok_per_s": s_tokps,
+        "ticks": sm["ticks"], "preemptions": sm["preemptions"],
+        "ttft": s_ttft,
+    }
+    cluster_block = {
+        "tokens": total_tokens, "wall_s": cluster_dt, "tok_per_s": c_tokps,
+        "ticks": sum(m["ticks"] for m in cm["replicas"].values()),
+        "preemptions": cm["totals"]["preemptions"],
+        "migrations": cm["totals"]["migrations"],
+        "handoff_bytes": cm["router"]["handoff_bytes"],
+        "ttft": c_ttft,
+    }
+    rows = [
+        Row("single_oversubscribed", single_dt * 1e6,
+            f"{s_tokps:.1f}tok/s p99_ttft={s_ttft['p99_s'] * 1e3:.0f}ms "
+            f"preempt={sm['preemptions']}"),
+        Row("router_2_replicas", cluster_dt * 1e6,
+            f"{c_tokps:.1f}tok/s p99_ttft={c_ttft['p99_s'] * 1e3:.0f}ms "
+            f"migrations={cm['totals']['migrations']}"),
+    ]
+    emit(rows)
+    print(f"# speedup={c_tokps / s_tokps:.2f}x "
+          f"p99_ttft_ratio={c_ttft['p99_s'] / max(s_ttft['p99_s'], 1e-9):.2f}")
+
+    assert c_tokps > s_tokps, (
+        f"router did not beat the oversubscribed engine on aggregate "
+        f"throughput: {c_tokps:.1f} vs {s_tokps:.1f} tok/s")
+    assert c_ttft["p99_s"] < s_ttft["p99_s"], (
+        f"router did not beat the oversubscribed engine on p99 TTFT: "
+        f"{c_ttft['p99_s']:.3f}s vs {s_ttft['p99_s']:.3f}s")
+
+    write_bench_json(
+        "cluster",
+        config={
+            "arch": ARCH, "scheduler": "fifo",
+            "model": {"d_model": D_MODEL, "d_ff": D_FF,
+                      "num_layers": N_LAYERS, "head_dim": HEAD_DIM},
+            "requests": {"long": [N_LONG, LONG_PROMPT, LONG_NEW],
+                         "short": [N_SHORT, SHORT_PROMPT, SHORT_NEW]},
+            "max_len": MAX_LEN, "block_size": BLOCK_SIZE,
+            "num_blocks_per_engine": NUM_BLOCKS,
+            "single_slots": SINGLE_SLOTS, "replica_slots": REPLICA_SLOTS,
+            "replicas": 2, "chunk": CHUNK,
+            "rebalance": "oversubscription",
+        },
+        rows=rows,
+        extra_metrics={
+            "single": single_block,
+            "cluster": cluster_block,
+            "speedup_tok_per_s": c_tokps / s_tokps,
+            "p99_ttft_ratio": c_ttft["p99_s"] / max(s_ttft["p99_s"], 1e-9),
+            "outputs_identical": True,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    main()

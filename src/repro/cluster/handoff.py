@@ -1,0 +1,128 @@
+"""Migration handoff wire format — tickets over mailbox frames.
+
+A live migration is a function injection whose "function state" is the
+request's sequence state: the source engine serializes it into a
+``MigrationTicket`` (``engine.export_request``) and the router ships it to
+the target as a train of active-message frames in the paper's mailbox
+format (``core.message``), exactly the frames a cross-host fabric would
+DMA. ``encode_handoff`` packs one ticket into ``HANDOFF_SPEC`` frames;
+``decode_handoff`` validates every frame's SIG (magic + checksum — the
+mailbox arrival signal) and train metadata (func_id, dense elem_ids, a
+consistent train length) before reassembling, so a truncated, reordered,
+or corrupted handoff is a loud error, never a silently wrong restore.
+
+Layout: the ticket's JSON metadata and its raw state buffer are
+concatenated behind a fixed 8-byte length prefix, split into
+``payload_words``-sized chunks, and each chunk rides the USR section of
+one frame — ``elem_id`` is the chunk index, ``seq_no`` the train length,
+``FLAG_INJECTED`` marks tickets that carry state bytes.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.core.message import (FLAG_INJECTED, HDR_ELEM_ID, HDR_FLAGS,
+                                HDR_FUNC_ID, HDR_SEQ_NO, FrameSpec,
+                                frame_valid, pack_frame)
+from repro.engine.engine import MigrationTicket
+
+__all__ = ["MIGRATE_FUNC_ID", "HANDOFF_SPEC", "encode_handoff",
+           "decode_handoff"]
+
+# func_id of the migration handler in the cluster's frame lane — far above
+# the dense per-lane jam ids so a handoff frame can never be mistaken for
+# a registered compute jam by a shared dispatcher.
+MIGRATE_FUNC_ID = 0x7C
+
+# 1008 payload words + header/GOT/SIG = 1024 words: 4 KiB frames, the
+# paper's 64 B alignment times 64. Big enough that a recurrent ticket
+# (state is O(KB), sequence-length independent) usually fits one frame.
+HANDOFF_SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=1008)
+
+_PREFIX = struct.Struct("<II")          # (meta_bytes, state_bytes)
+
+
+def encode_handoff(ticket: MigrationTicket) -> List[np.ndarray]:
+    """Pack a ticket into an ordered train of mailbox frames."""
+    meta = json.dumps({
+        "rid": ticket.rid, "cache_kind": ticket.cache_kind,
+        "priority": ticket.priority,
+        "max_new_tokens": ticket.max_new_tokens,
+        "prompt": [int(t) for t in ticket.prompt],
+        "out_tokens": [int(t) for t in ticket.out_tokens],
+        "pos": ticket.pos,
+    }).encode("utf-8")
+    state = ticket.state or b""
+    blob = _PREFIX.pack(len(meta), len(state)) + meta + state
+    pad = -len(blob) % 4
+    words = np.frombuffer(blob + b"\x00" * pad, dtype="<i4")
+
+    pw = HANDOFF_SPEC.payload_words
+    n_frames = max(1, -(-len(words) // pw))
+    flags = FLAG_INJECTED if ticket.state is not None else 0
+    frames = []
+    for i in range(n_frames):
+        chunk = words[i * pw:(i + 1) * pw]
+        if len(chunk) < pw:
+            chunk = np.concatenate(
+                [chunk, np.zeros(pw - len(chunk), np.int32)])
+        frames.append(np.asarray(pack_frame(
+            HANDOFF_SPEC, func_id=MIGRATE_FUNC_ID, elem_id=i,
+            seq_no=n_frames, flags=flags,
+            payload_words=np.ascontiguousarray(chunk))))
+    return frames
+
+
+def decode_handoff(frames: Sequence[np.ndarray]) -> MigrationTicket:
+    """Validate + reassemble a frame train back into a ticket."""
+    if not frames:
+        raise ValueError("empty handoff: no frames to decode")
+    o_usr = HANDOFF_SPEC.offsets()["usr"]
+    pw = HANDOFF_SPEC.payload_words
+    chunks = []
+    for i, frame in enumerate(frames):
+        arr = np.asarray(frame)
+        if arr.shape != (HANDOFF_SPEC.total_words,):
+            raise ValueError(
+                f"handoff frame {i}: shape {arr.shape}, expected "
+                f"({HANDOFF_SPEC.total_words},)")
+        if not bool(frame_valid(HANDOFF_SPEC, arr)):
+            raise ValueError(
+                f"handoff frame {i}: bad magic or SIG checksum (corrupt "
+                f"or torn frame — refusing to restore from it)")
+        if int(arr[HDR_FUNC_ID]) != MIGRATE_FUNC_ID:
+            raise ValueError(
+                f"handoff frame {i}: func_id={int(arr[HDR_FUNC_ID])} is "
+                f"not the migration handler ({MIGRATE_FUNC_ID})")
+        if int(arr[HDR_ELEM_ID]) != i:
+            raise ValueError(
+                f"handoff frame {i}: elem_id={int(arr[HDR_ELEM_ID])} — "
+                f"the train is reordered or missing a frame")
+        if int(arr[HDR_SEQ_NO]) != len(frames):
+            raise ValueError(
+                f"handoff frame {i}: train length {int(arr[HDR_SEQ_NO])} "
+                f"!= {len(frames)} frames received (truncated handoff)")
+        chunks.append(arr[o_usr:o_usr + pw])
+    blob = np.concatenate(chunks).astype("<i4").tobytes()
+    meta_len, state_len = _PREFIX.unpack_from(blob)
+    if _PREFIX.size + meta_len + state_len > len(blob):
+        raise ValueError(
+            f"handoff declares {meta_len}+{state_len} payload bytes but "
+            f"the train carries only {len(blob) - _PREFIX.size}")
+    meta = json.loads(blob[_PREFIX.size:_PREFIX.size + meta_len])
+    off = _PREFIX.size + meta_len
+    state = blob[off:off + state_len] if state_len else None
+    has_state = any(int(np.asarray(f)[HDR_FLAGS]) & FLAG_INJECTED
+                    for f in frames)
+    if has_state != (state is not None):
+        raise ValueError("handoff FLAG_INJECTED disagrees with the "
+                         "declared state length")
+    return MigrationTicket(
+        rid=meta["rid"], cache_kind=meta["cache_kind"],
+        priority=meta["priority"], max_new_tokens=meta["max_new_tokens"],
+        prompt=list(meta["prompt"]), out_tokens=list(meta["out_tokens"]),
+        pos=meta["pos"], state=state)

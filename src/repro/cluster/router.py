@@ -1,0 +1,460 @@
+"""``Router`` — one submit surface over N engine replicas, with live
+request migration (ROADMAP item 3; funcX's federated endpoints + rFaaS
+leases applied to serving).
+
+The router owns a table ``rid -> engine_id`` and four verbs:
+
+* ``submit(req)`` places the request on one replica via the fabric cost
+  model (warm-params-lease bytes first — a replica whose rFaaS lease
+  already holds the model serves for free, a cold one charges the weight
+  tree) plus per-replica load (queue depth + active slots, then pool
+  occupancy), and returns a ``ClusterHandle`` that survives migration.
+* ``tick()`` advances every busy replica one engine tick, then applies
+  the rebalance policy (``cluster.policy``).
+* ``migrate(rid, dst)`` performs a live handoff: export the request's
+  sequence state as a ``MigrationTicket``, round-trip it through real
+  mailbox frames (``cluster.handoff`` — the wire a cross-host fabric
+  would DMA), import on the target, and rebind the cluster handle. The
+  migrated request resumes with greedy output bitwise identical to never
+  having moved (tests/test_cluster.py, per cache backend).
+* ``drain(engine_id)`` migrates everything off a replica (shutdown path),
+  raising if any request would be stranded.
+
+Replicas are heterogeneous — each brings its own mesh, cache backend, and
+model tag; routing and migration stay within matching (model,
+cache_kind): weights differ across models and sequence-state bytes are
+only meaningful to their own backend. ``metrics()`` merges the router's
+decisions with every replica's ``Engine.metrics()`` (keyed by the
+engine's stable ``engine_id``) into one surface.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Iterator, List, Optional, Sequence, Union
+
+from repro.cluster.handoff import (HANDOFF_SPEC, decode_handoff,
+                                   encode_handoff)
+from repro.core.costmodel import TransportEstimate
+from repro.engine.engine import Engine, Request
+from repro.engine.stream import RequestHandle
+
+__all__ = ["Replica", "Router", "ClusterHandle"]
+
+
+@dataclasses.dataclass
+class Replica:
+    """One engine behind the router, plus its routing attributes.
+
+    ``model`` tags which weights the engine serves (requests and
+    migrations never cross model tags); ``draining`` replicas accept no
+    new placements and are emptied by ``Router.drain``.
+    """
+
+    engine: Engine
+    model: str = "default"
+    draining: bool = False
+
+    @property
+    def engine_id(self) -> str:
+        return self.engine.engine_id
+
+    @property
+    def cache_kind(self) -> str:
+        return self.engine.cache_kind
+
+    def free_slots(self) -> int:
+        return sum(e is None for e in self.engine.slot_entry)
+
+    def occupancy(self) -> float:
+        cap = self.engine.state.capacity()
+        if cap.free_units is None:
+            used = self.engine.slots - self.free_slots()
+            return used / max(1, self.engine.slots)
+        return 1.0 - cap.free_units / max(1, cap.total_units)
+
+    def load(self) -> Dict[str, Any]:
+        return {"queue_depth": len(self.engine.queue),
+                "active": self.engine.slots - self.free_slots(),
+                "slots": self.engine.slots,
+                "occupancy": self.occupancy()}
+
+
+class ClusterHandle:
+    """Client-side view of one routed request — the migration-transparent
+    counterpart of ``engine.stream.RequestHandle``.
+
+    The handle tracks the request *through the router's table*: after a
+    migration it is rebound to the target engine's handle, the token
+    stream continues from where it was (tickets carry ``out_tokens``, so
+    the prefix is preserved verbatim), and callbacks fire exactly once
+    per token — the rebind replays nothing a subscriber already saw.
+    """
+
+    def __init__(self, router: "Router", rid: int):
+        self._router = router
+        self.rid = rid
+        self._bound: Optional[RequestHandle] = None
+        self._callbacks: List[Any] = []
+        self._delivered = 0             # cluster-level delivery cursor
+
+    @property
+    def req(self) -> Request:
+        return self._bound.req
+
+    @property
+    def done(self) -> bool:
+        return self._bound.req.done
+
+    @property
+    def engine_id(self) -> str:
+        """The replica currently serving (or last to serve) the request."""
+        return self._router._table[self.rid]
+
+    def _bind(self, handle: RequestHandle) -> None:
+        """(Re)attach to an engine-level handle. The engine handle replays
+        all buffered tokens to a new subscriber, so the relay drops
+        indices below the cluster-level cursor — after a migration the
+        target's replay of the preserved prefix is filtered out and
+        subscribers see each index exactly once."""
+        self._bound = handle
+
+        def relay(tok: int, i: int) -> None:
+            if i < self._delivered:
+                return
+            self._delivered = i + 1
+            for fn in list(self._callbacks):
+                fn(tok, i)
+
+        handle.on_token(relay)
+
+    def on_token(self, fn) -> "ClusterHandle":
+        """Register ``fn(token, index)``; already-produced tokens are
+        replayed immediately (same contract as the engine handle)."""
+        for i, tok in enumerate(self.req.out_tokens):
+            fn(tok, i)
+        self._callbacks.append(fn)
+        return self
+
+    def tokens(self, max_ticks: int = 10_000) -> Iterator[int]:
+        """Yield tokens as the *cluster* produces them, driving
+        ``router.tick()`` when nothing new is buffered. ``max_ticks`` is
+        a stall bound (cluster ticks without progress for this request,
+        reset on every token). Migration is invisible here: the generator
+        re-reads the currently bound request each round."""
+        i = 0
+        stalled = 0
+        while True:
+            out = self.req.out_tokens   # re-read: migration swaps req
+            if i < len(out):
+                stalled = 0
+            while i < len(out):
+                yield out[i]
+                i += 1
+            if self.done:
+                return
+            if not self._router.pending():
+                return
+            if stalled >= max_ticks:
+                raise RuntimeError(
+                    f"request {self.rid} made no progress in {max_ticks} "
+                    f"cluster ticks (streaming stall bound)")
+            self._router.tick()
+            stalled += 1
+
+    def result(self, max_ticks: int = 10_000) -> Request:
+        """Drive the cluster until this request completes; return it.
+        ``max_ticks`` is the stall bound ``tokens()`` applies."""
+        for _ in self.tokens(max_ticks=max_ticks):
+            pass
+        if not self.req.done:
+            raise RuntimeError(
+                f"request {self.rid} vanished from the cluster before "
+                f"completing ({len(self.req.out_tokens)} tokens buffered)")
+        return self.req
+
+    def __repr__(self) -> str:
+        return (f"ClusterHandle(rid={self.rid}, on={self.engine_id}, "
+                f"tokens={len(self.req.out_tokens)}, done={self.done})")
+
+
+class Router:
+    """Route requests over replicas; migrate them live when it helps."""
+
+    def __init__(self, replicas: Sequence[Union[Replica, Engine]], *,
+                 rebalance=None, name: str = "cluster"):
+        if not replicas:
+            raise ValueError("a router needs at least one replica")
+        self.name = name
+        self.replicas: List[Replica] = [
+            r if isinstance(r, Replica) else Replica(r) for r in replicas]
+        self._by_id: Dict[str, Replica] = {}
+        for r in self.replicas:
+            if r.engine_id in self._by_id:
+                raise ValueError(
+                    f"duplicate engine_id {r.engine_id!r}: give each "
+                    f"replica a distinct Engine(engine_id=...)")
+            self._by_id[r.engine_id] = r
+        self.rebalance = rebalance
+        self._table: Dict[int, str] = {}            # rid -> engine_id
+        self._handles: Dict[int, ClusterHandle] = {}
+        self.placements: List[Dict[str, Any]] = []  # submit decisions
+        self.migrations: List[Dict[str, Any]] = []  # executed handoffs
+        self.rebalance_events = 0
+        self.handoff_frames = 0
+        self.handoff_bytes = 0
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+
+    def _estimate(self, replica: Replica, req: Request) -> TransportEstimate:
+        """Fabric cost model for placing ``req`` on ``replica``: the
+        request payload ships either way (local_bytes); a cold replica
+        additionally charges injecting the weight tree, a warm params
+        lease charges nothing (the rFaaS lease already paid it)."""
+        eng = replica.engine
+        payload = 4 * (len(req.prompt) + req.max_new_tokens)
+        warm = (eng.params is not None and eng.fabric is not None
+                and eng._lease_warm(eng.params))
+        injected = 0 if warm else eng._params_nbytes()
+        return TransportEstimate(
+            local_bytes=payload, injected_bytes=injected, common_bytes=0,
+            chosen="injected" if warm else "local",
+            n_tokens_per_tp_rank=0, capacity=0)
+
+    def _place(self, req: Request, model: Optional[str]) -> Replica:
+        cands = [r for r in self.replicas if not r.draining
+                 and (model is None or r.model == model)]
+        if not cands:
+            raise ValueError(
+                f"no live replica serves model={model!r} (replicas: "
+                f"{[(r.engine_id, r.model) for r in self.replicas]})")
+        best: Optional[Replica] = None
+        best_key = None
+        best_est = None
+        for r in cands:
+            est = self._estimate(r, req)
+            load = r.load()
+            # lexicographic: cold-start bytes (cost model), then queued +
+            # active work, then pool occupancy, then stable id for ties
+            key = (est.injected_bytes,
+                   load["queue_depth"] + load["active"],
+                   load["occupancy"], r.engine_id)
+            if best is None or key < best_key:
+                best, best_key, best_est = r, key, est
+        self.placements.append({
+            "rid": req.rid, "engine_id": best.engine_id,
+            "model": best.model, "estimate": best_est.describe(),
+            "load": best.load()})
+        return best
+
+    def submit(self, req: Request, *,
+               model: Optional[str] = None) -> ClusterHandle:
+        """Place ``req`` on the best replica (optionally pinned to a
+        ``model`` tag); returns a migration-transparent handle. rids must
+        be unique cluster-wide — they key the routing table."""
+        if req.rid in self._table:
+            raise ValueError(f"rid {req.rid} is already routed (to "
+                             f"{self._table[req.rid]}); rids must be "
+                             f"unique across the cluster")
+        replica = self._place(req, model)
+        handle = replica.engine.submit(req)
+        self._table[req.rid] = replica.engine_id
+        ch = ClusterHandle(self, req.rid)
+        ch._bind(handle)
+        self._handles[req.rid] = ch
+        return ch
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+
+    def pending(self) -> bool:
+        return any(r.engine.pending() for r in self.replicas)
+
+    def tick(self) -> int:
+        """One cluster round: tick every busy replica, then let the
+        rebalance policy move work. Returns rows advanced across all
+        replicas."""
+        advanced = 0
+        for r in self.replicas:
+            if r.engine.pending():
+                advanced += r.engine.tick()
+        self._apply_rebalance()
+        return advanced
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        """Tick until every replica drains; returns completed requests in
+        completion order (per replica, submit-interleaved)."""
+        ticks = 0
+        while self.pending() and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return [req for r in self.replicas for req in r.engine.completed]
+
+    def _apply_rebalance(self) -> None:
+        if self.rebalance is None:
+            return
+        plans = self.rebalance.plan(self)
+        executed = 0
+        for p in plans:
+            # re-validate against the table: the plan is advisory
+            if self._table.get(p.rid) != p.src:
+                continue
+            handle = self._handles.get(p.rid)
+            if handle is not None and handle.done:
+                continue
+            self.migrate(p.rid, p.dst, reason=p.reason or self.rebalance.name)
+            executed += 1
+        if executed:
+            self.rebalance_events += 1
+
+    # ------------------------------------------------------------------
+    # migration + drain
+    # ------------------------------------------------------------------
+
+    def compatible_targets(self, src: Replica) -> List[Replica]:
+        """Every live replica a request on ``src`` could migrate to (same
+        model tag and cache backend), regardless of current headroom."""
+        return [r for r in self.replicas
+                if r is not src and not r.draining
+                and r.model == src.model and r.cache_kind == src.cache_kind]
+
+    def best_target(self, src: Replica, *,
+                    claimed: Optional[Dict[str, int]] = None
+                    ) -> Optional[Replica]:
+        """The compatible replica with the most admission headroom (free
+        slots beyond its own queue, minus headroom ``claimed`` by plans
+        earlier in the same round); None when nobody can take more."""
+        claimed = claimed or {}
+        best, best_key = None, None
+        for r in self.replicas:
+            if r is src or r.draining:
+                continue
+            if r.model != src.model or r.cache_kind != src.cache_kind:
+                continue
+            head = (r.free_slots() - len(r.engine.queue)
+                    - claimed.get(r.engine_id, 0))
+            if head <= 0:
+                continue
+            key = (head, -r.occupancy(), r.engine_id)
+            if best is None or key > best_key:
+                best, best_key = r, key
+        return best
+
+    def queued_rids(self, engine_id: str) -> List[int]:
+        """rids queued (not running) on a replica, queue order."""
+        return [e.req.rid for e in self._by_id[engine_id].engine.queue]
+
+    def migrate(self, rid: int, dst_id: str, *,
+                reason: str = "manual") -> ClusterHandle:
+        """Live-migrate ``rid`` to replica ``dst_id``: export, round-trip
+        the ticket through mailbox frames, import, rebind the handle.
+        Raises for unknown rids/replicas, incompatible targets (model or
+        cache_kind mismatch), and self-migration."""
+        if rid not in self._table:
+            raise KeyError(f"rid {rid} is not routed on this cluster")
+        src_id = self._table[rid]
+        if dst_id == src_id:
+            raise ValueError(f"rid {rid} already lives on {dst_id}")
+        if dst_id not in self._by_id:
+            raise KeyError(f"unknown replica {dst_id!r} (have "
+                           f"{sorted(self._by_id)})")
+        src, dst = self._by_id[src_id], self._by_id[dst_id]
+        if dst.model != src.model:
+            raise ValueError(
+                f"cannot migrate rid {rid} from {src_id} (model="
+                f"{src.model!r}) to {dst_id} (model={dst.model!r}): "
+                f"replicas serve different weights")
+        if dst.cache_kind != src.cache_kind:
+            # checked before export: discovering this at import would have
+            # already destroyed the request on the source
+            raise ValueError(
+                f"cannot migrate rid {rid} from {src_id} (cache_kind="
+                f"{src.cache_kind!r}) to {dst_id} (cache_kind="
+                f"{dst.cache_kind!r}): sequence-state bytes are only "
+                f"meaningful to their own backend")
+        ticket = src.engine.export_request(rid)
+        frames = encode_handoff(ticket)
+        self.handoff_frames += len(frames)
+        self.handoff_bytes += len(frames) * HANDOFF_SPEC.total_bytes
+        handle = dst.engine.import_request(decode_handoff(frames))
+        self._table[rid] = dst_id
+        ch = self._handles.get(rid)
+        if ch is not None:
+            ch._bind(handle)
+        self.migrations.append({
+            "rid": rid, "src": src_id, "dst": dst_id, "pos": ticket.pos,
+            "state_bytes": len(ticket.state) if ticket.state else 0,
+            "frames": len(frames), "reason": reason})
+        return ch if ch is not None else ClusterHandle(self, rid)
+
+    def drain(self, engine_id: str) -> List[int]:
+        """Shutdown path: stop placing on ``engine_id`` and migrate every
+        unfinished request it holds to compatible peers — preferring peers
+        with admission headroom, but spilling onto the least-loaded
+        compatible replica's queue rather than stranding work (shutdown
+        beats queueing discipline). Raises (after moving what it can) only
+        when no compatible replica exists at all; the replica stays marked
+        draining either way."""
+        rep = self._by_id[engine_id]    # KeyError for unknown ids
+        rep.draining = True
+        rids = [e.req.rid for e in rep.engine.queue]
+        rids += [e.req.rid for e in rep.engine.slot_entry if e is not None]
+        moved, stranded = [], []
+        for rid in rids:
+            dst = self.best_target(rep)
+            if dst is None:
+                cands = self.compatible_targets(rep)
+                dst = min(cands,
+                          key=lambda r: (len(r.engine.queue)
+                                         - r.free_slots(), r.engine_id),
+                          default=None)
+            if dst is None:
+                stranded.append(rid)
+                continue
+            self.migrate(rid, dst.engine_id, reason="drain")
+            moved.append(rid)
+        if stranded:
+            raise RuntimeError(
+                f"drain of {engine_id} stranded rids {stranded}: no "
+                f"compatible replica (model={rep.model!r}, cache_kind="
+                f"{rep.cache_kind!r}) exists; moved {moved} first")
+        return moved
+
+    # ------------------------------------------------------------------
+    # telemetry — one merged surface
+    # ------------------------------------------------------------------
+
+    def metrics(self) -> Dict[str, Any]:
+        """Cluster + router + per-replica telemetry, one JSON-friendly
+        dict. Replica blocks are the engines' own ``metrics()`` keyed by
+        their stable ``engine_id``; totals aggregate across them."""
+        replicas = {r.engine_id: r.engine.metrics() for r in self.replicas}
+        totals = {
+            "completed": sum(m["completed"] for m in replicas.values()),
+            "preemptions": sum(m["preemptions"] for m in replicas.values()),
+            "queued": sum(m["queued"] for m in replicas.values()),
+            "active_slots": sum(m["active_slots"]
+                                for m in replicas.values()),
+            "migrations": len(self.migrations),
+        }
+        return {
+            "cluster": {
+                "name": self.name,
+                "replicas": [
+                    {"engine_id": r.engine_id, "model": r.model,
+                     "cache": r.cache_kind, "draining": r.draining,
+                     **r.load()} for r in self.replicas],
+                "rebalance": getattr(self.rebalance, "name", None),
+            },
+            "router": {
+                "placements": list(self.placements),
+                "migrations": list(self.migrations),
+                "rebalance_events": self.rebalance_events,
+                "handoff_frames": self.handoff_frames,
+                "handoff_bytes": self.handoff_bytes,
+            },
+            "replicas": replicas,
+            "totals": totals,
+        }

@@ -20,7 +20,8 @@ implementations live in ``repro.engine.state``.
 ``runtime/server.py``'s ``Server``/``PagedServer`` remain as deprecation
 shims over this class.
 """
-from repro.engine.engine import BlockPool, Engine, Request  # noqa: F401
+from repro.engine.engine import (  # noqa: F401
+    BlockPool, Engine, MigrationTicket, Request)
 from repro.engine.scheduler import (  # noqa: F401
     POLICIES, FIFOPolicy, PriorityPolicy, SchedulerPolicy, SchedulerState,
     SJFPolicy, resolve_policy)

@@ -36,6 +36,7 @@ API, the scheduler protocol, streaming semantics, and the migration table.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 import warnings
 from typing import Any, Dict, List, Optional, Tuple
@@ -47,19 +48,21 @@ from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, RunConfig
 from repro.core import transport as transport_lib
+from repro.core.costmodel import TransportEstimate
 from repro.engine.scheduler import (SchedulerPolicy, SchedulerState,
                                     _PolicyBase, resolve_policy)
 from repro.engine.state import (BlockPool, PagedKVState, RecurrentState,
                                 SequenceState, SlotKVState)
 from repro.engine.stream import RequestHandle
 from repro.models import model as model_lib
+from repro.models.kvcache import state_to_bytes
 from repro.runtime.steps import (make_paged_serve_step,
                                  make_recurrent_serve_step, make_serve_step,
                                  sharding_ctx)
 
 PyTree = Any
 
-__all__ = ["Request", "BlockPool", "Engine"]
+__all__ = ["Request", "BlockPool", "Engine", "MigrationTicket"]
 
 
 @dataclasses.dataclass
@@ -83,6 +86,31 @@ class Request:
 
 
 @dataclasses.dataclass
+class MigrationTicket:
+    """Position-independent snapshot of one in-flight request — the unit
+    of live migration (``Engine.export_request`` -> wire ->
+    ``Engine.import_request``).
+
+    ``state`` is the ``SequenceState.serialize`` buffer covering the first
+    ``pos`` tokens of prompt ++ out_tokens (``None`` when nothing is
+    resident — the target recomputes from scratch); it carries logical
+    token order only, no physical block ids or slot indices, so source and
+    target may disagree on pool geometry and mesh. Only the model and the
+    ``cache_kind`` must match: a paged buffer cannot restore into a
+    recurrent backend (``import_request`` rejects the mismatch loudly).
+    """
+
+    rid: int
+    cache_kind: str
+    priority: int
+    max_new_tokens: int
+    prompt: List[int]
+    out_tokens: List[int]
+    pos: int = 0                        # tokens the state buffer covers
+    state: Optional[bytes] = None
+
+
+@dataclasses.dataclass
 class _Entry:
     """Scheduler state for one request (states: queued -> running ->
     finished, with running -> queued on preemption)."""
@@ -101,6 +129,8 @@ class _Entry:
     prompt_tokens: List[int] = dataclasses.field(default_factory=list)
     # recurrent backend: host snapshot of the slot's state at eviction
     snapshot: Any = None
+    # migrated-in state buffer, absorbed (then cleared) at admission
+    inbound: Optional[bytes] = None
 
     def seq(self) -> List[int]:
         """prompt ++ generated — what must be resident before decoding."""
@@ -141,12 +171,18 @@ class Engine:
     bitwise, preemption paths included (tests/test_engine.py).
     """
 
+    _ids = itertools.count()            # default engine_id allocator
+
     def __init__(self, cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                  cache: str = "paged", slots: int, max_len: int,
                  scheduler="fifo", kernel: str = "auto",
                  num_blocks: Optional[int] = None, block_size: int = 16,
-                 chunk: int = 8, eos_id: Optional[int] = None):
+                 chunk: int = 8, eos_id: Optional[int] = None,
+                 engine_id: Optional[str] = None, placement: str = "local"):
         assert not cfg.is_encoder, "encoder-only arch has no decode path"
+        if placement not in ("local", "injected", "auto"):
+            raise ValueError(f"placement must be 'local', 'injected', or "
+                             f"'auto', got {placement!r}")
         if cache == "auto":
             from repro.configs import registry as registry_lib
             cache = registry_lib.default_cache_backend(cfg)
@@ -161,6 +197,8 @@ class Engine:
                 "cache='paged'")
         self.cfg, self.run, self.mesh = cfg, run, mesh
         self.cache_kind = cache
+        self.engine_id = engine_id or f"engine-{next(Engine._ids)}"
+        self.placement = placement
         self.slots, self.max_len, self.eos_id = slots, max_len, eos_id
         self.policy: SchedulerPolicy = resolve_policy(scheduler)
         self.params: Optional[PyTree] = None
@@ -175,8 +213,11 @@ class Engine:
         self.admission_log: List[int] = []     # rids in first-admission order
         self.peak_active = 0
         self.preempt_count = 0
+        self.migrations_in = 0
+        self.migrations_out = 0
         self._placements: Dict[str, str] = {}
         self._pending_pump: List[_Entry] = []
+        self._params_nbytes_memo: Optional[int] = None
 
         run_decode = dataclasses.replace(
             run, shape=dataclasses.replace(run.shape, kind="decode",
@@ -249,6 +290,7 @@ class Engine:
                     "scheduling", UserWarning, stacklevel=2)
         _, self.params_shapes, _, _, self.pshard = sharding_ctx(
             cfg, run_decode, mesh)
+        self._params_lease = f"{self._step_name}.params"
         self._register_fabric_steps()
 
     # ------------------------------------------------------------------
@@ -271,37 +313,106 @@ class Engine:
     def _register_fabric_steps(self) -> None:
         """Register the serve steps as collectives on the bundle fabric so
         every tick's invocation goes through ``fabric.call`` — the paper's
-        one invocation surface. Placement is ``"local"``: the step runs
-        against receiver-resident state (weights + KV) on this engine's
-        mesh; the resolved placement per step lands in
-        ``metrics()["fabric"]["placements"]``."""
+        one invocation surface. All three placements are real on the tick
+        path: ``"local"`` runs against receiver-resident weights,
+        ``"injected"`` acquires the step's rFaaS params lease every tick
+        (the first acquire is the injection — a miss that ships the weight
+        tree; later ticks hit warm), ``"auto"`` consults the cost model
+        per tick (``_resolve_auto``). Every branch runs the same compiled
+        step on the same mesh, so placement never changes the math — only
+        where the weights are accounted as living. The resolved placement
+        per step lands in ``metrics()["fabric"]["placements"]``."""
         fabric = self.fabric
         if fabric is None:              # pragma: no cover - bundles always
             return                      # carry a fabric; kept as a guard
+        lease_name = self._params_lease
 
         def invoke_step(payload, state, placement):
+            if placement == "auto":
+                placement = self._resolve_auto(
+                    self._step_name, self._tick_payload_bytes(payload[1:]),
+                    state)
+            if placement == "injected":
+                fabric.lease(lease_name, jax.tree.leaves(state))
+            self._placements[self._step_name] = placement
             return self._jit_step(state, *payload)
 
         fabric.register_collective(self._step_name, invoke_step,
-                                   placements=("local",))
-        self._placements[self._step_name] = "local"
+                                   placements=("local", "injected", "auto"))
+        self._placements[self._step_name] = self.placement
         if self.cache_kind == "slots":
             def invoke_prefill(payload, state, placement):
+                if placement == "auto":
+                    placement = self._resolve_auto(
+                        "engine.prefill",
+                        self._tick_payload_bytes((payload,)), state)
+                if placement == "injected":
+                    fabric.lease(lease_name, jax.tree.leaves(state))
+                self._placements["engine.prefill"] = placement
                 one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
                 return model_lib.forward(self.cfg, state, payload,
                                          cache=one_cache)
 
-            fabric.register_collective("engine.prefill", invoke_prefill,
-                                       placements=("local",))
-            self._placements["engine.prefill"] = "local"
+            fabric.register_collective(
+                "engine.prefill", invoke_prefill,
+                placements=("local", "injected", "auto"))
+            self._placements["engine.prefill"] = self.placement
 
     def _step_call(self, *args):
-        """One tick's compiled-step invocation, routed through the fabric."""
+        """One tick's compiled-step invocation, routed through the fabric
+        at this engine's configured placement."""
         fabric = self.fabric
         if fabric is None:              # pragma: no cover - guard only
             return self._jit_step(self.params, *args)
         return fabric.call(self._step_name, args, state=self.params,
-                           placement="local")
+                           placement=self.placement)
+
+    # -- placement resolution (the cost-model side of placement="auto") ----
+
+    def _params_nbytes(self) -> int:
+        if self._params_nbytes_memo is None and self.params is not None:
+            self._params_nbytes_memo = sum(
+                int(leaf.size) * leaf.dtype.itemsize
+                for leaf in jax.tree.leaves(self.params)
+                if hasattr(leaf, "dtype"))
+        return self._params_nbytes_memo or 0
+
+    @staticmethod
+    def _tick_payload_bytes(payload) -> int:
+        """Wire bytes of one tick's scheduler arrays (tokens / tables /
+        starts / n_valid) — what placement='local' ships to wherever the
+        weights live. The resident cache is excluded: sequence state stays
+        put under either placement (migration, not placement, moves it)."""
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in jax.tree.leaves(payload)
+                   if hasattr(a, "dtype"))
+
+    def _lease_warm(self, state) -> bool:
+        """True when a live params lease holds exactly these arrays (the
+        ``is``-keyed hit condition of ``fabric.leases``)."""
+        lease = self.fabric.leases.get(self._params_lease)
+        leaves = jax.tree.leaves(state)
+        return bool(lease is not None and lease.live
+                    and len(lease.key) == len(leaves)
+                    and all(a is b for a, b in zip(lease.key, leaves)))
+
+    def _resolve_auto(self, name: str, payload_bytes: int, state) -> str:
+        """Resolve placement='auto' for one tick: injected while the
+        params lease is warm (the weights already live with the executor —
+        reuse ships nothing), local while it is cold (a first injection
+        would ship the whole weight tree for one tick's worth of payload).
+        ``inject_params`` pre-warms the lease, so router-managed replicas
+        resolve injected from their first tick. The estimate is recorded
+        on the fabric's decision log either way."""
+        warm = self._lease_warm(state)
+        injected_bytes = 0 if warm else self._params_nbytes()
+        est = TransportEstimate(
+            local_bytes=payload_bytes, injected_bytes=injected_bytes,
+            common_bytes=0,
+            chosen="injected" if injected_bytes <= payload_bytes else "local",
+            n_tokens_per_tp_rank=0, capacity=0)
+        self.fabric.record_decision(name, est)
+        return est.chosen
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -314,7 +425,20 @@ class Engine:
                            out_shardings=self.pshard)
             params = init(jax.random.PRNGKey(self.run.seed))
         self.params = params
+        self._params_nbytes_memo = None
         self.cache = self._fresh_cache()
+
+    def inject_params(self, params: Optional[PyTree] = None) -> None:
+        """Install weights *and* warm the step's params lease — the
+        executor side of ``placement="injected"``/``"auto"``: a router
+        shipping one shared weight tree to N replicas calls this instead
+        of ``load_params``, after which ``placement="auto"`` resolves to
+        injected (warm reuse) from the replica's first tick and the
+        injection itself is visible as the lease's one miss."""
+        self.load_params(params)
+        if self.fabric is not None:
+            self.fabric.lease(self._params_lease,
+                              jax.tree.leaves(self.params))
 
     def _fresh_cache(self) -> PyTree:
         if self.cache_kind == "paged":
@@ -430,7 +554,14 @@ class Engine:
                 return
             entry = self.queue.pop(idx)
             self._stamp_admitted(entry)
-            self._prefill_slot(slot, entry)
+            if entry.inbound is not None:
+                # migrated-in: the serialized row replaces the prefill
+                # forward (its tokens are already absorbed); the next
+                # decode tick feeds out_tokens[-1] like any resident row
+                self.slot_entry[slot] = entry
+                self._restore_inbound(entry, slot)
+            else:
+                self._prefill_slot(slot, entry)
 
     def _prefill_slot(self, slot: int, entry: _Entry) -> None:
         """Run the prompt through the model, writing this slot's cache rows.
@@ -544,6 +675,24 @@ class Engine:
             slot = free_slots[0]
             self.slot_entry[slot] = entry
             self.cache = self.state.init(entry, self.cache, slot)
+            if entry.inbound is not None:
+                self._restore_inbound(entry, slot)
+
+    def _restore_inbound(self, entry: _Entry, slot: int) -> None:
+        """Absorb a migrated-in request's serialized state into ``slot``
+        (the admission side of ``import_request``). Paged entries first
+        re-acquire blocks covering the resident prefix — growth may
+        preempt a victim, exactly as a native request's growth would; the
+        restored rows then land in this pool's own blocks. After this the
+        entry is indistinguishable from one that prefilled here: chunked
+        backends resume at ``entry.pos``, slots decode from
+        ``out_tokens[-1]``."""
+        if self.cache_kind == "paged":
+            self._ensure_capacity(entry, max(entry.pos, 1))
+        self.cache = jax.device_put(
+            self.state.restore(entry, self.cache, slot, entry.inbound),
+            self._cache_shard)
+        entry.inbound = None
 
     def _preempt(self, victim: _Entry) -> None:
         """Evict the victim through the backend and requeue it in admission
@@ -665,6 +814,107 @@ class Engine:
         raise KeyError(f"request {rid} is not running in any slot")
 
     # ------------------------------------------------------------------
+    # live migration — export/import of in-flight entries (ROADMAP item 3)
+    # ------------------------------------------------------------------
+
+    def export_request(self, rid: int) -> MigrationTicket:
+        """Detach request ``rid`` — queued or running — into a
+        position-independent ``MigrationTicket`` and release everything it
+        held here (slot, blocks, snapshot, stream handle). Called between
+        ticks by a router; the ticket restores on any engine with the same
+        model and ``cache_kind`` via ``import_request``, resuming with
+        greedy output bitwise identical to never having moved. Raises
+        ``KeyError`` for unknown or finished rids (a finished request has
+        nothing left to move)."""
+        for slot in range(self.slots):
+            entry = self.slot_entry[slot]
+            if entry is not None and entry.req.rid == rid:
+                return self._export_entry(entry, slot)
+        for i, entry in enumerate(self.queue):
+            if entry.req.rid == rid:
+                self.queue.pop(i)
+                return self._export_entry(entry, None)
+        raise KeyError(
+            f"request {rid} is not queued or running on {self.engine_id} "
+            f"(finished requests cannot migrate)")
+
+    def _export_entry(self, entry: _Entry,
+                      slot: Optional[int]) -> MigrationTicket:
+        req = entry.req
+        buf: Optional[bytes] = None
+        pos = 0
+        if slot is not None:
+            if self.cache_kind == "slots":
+                # resident: whole prompt + every generated token except
+                # the newest (it has not been fed back through the step)
+                buf = self.state.serialize(entry, self.cache, slot)
+                pos = (len(entry.prompt_tokens)
+                       + max(0, len(req.out_tokens) - 1))
+            elif entry.pos > 0:
+                buf = self.state.serialize(entry, self.cache, slot)
+                pos = entry.pos
+            self.slot_entry[slot] = None
+        elif entry.inbound is not None:
+            # migrated in but re-exported before admission absorbed the
+            # buffer: forward it verbatim (dropping it would silently
+            # demote a warm handoff to a from-scratch recompute)
+            buf = entry.inbound
+            pos = entry.pos
+        elif self.cache_kind == "recurrent" and entry.snapshot is not None:
+            # preempted-and-requeued: the host snapshot IS the state
+            buf = state_to_bytes(entry.snapshot)
+            pos = entry.pos
+        self.state.release(entry)
+        ticket = MigrationTicket(
+            rid=req.rid, cache_kind=self.cache_kind, priority=req.priority,
+            max_new_tokens=req.max_new_tokens,
+            prompt=list(entry.prompt_tokens),
+            out_tokens=list(req.out_tokens), pos=pos, state=buf)
+        # detach the local stream: the source-side handle must not see
+        # tokens the target produces (the router rebinds its own handle)
+        entry.handle = None
+        self._pending_pump = [e for e in self._pending_pump if e is not entry]
+        self.migrations_out += 1
+        return ticket
+
+    def import_request(self, ticket: MigrationTicket) -> RequestHandle:
+        """Admit a migrated request. The rebuilt entry enters the queue
+        like a fresh submit (policies see its original priority); its
+        serialized state — when the ticket carries one — is absorbed at
+        admission by ``_restore_inbound`` instead of a prefill, so
+        decoding resumes at token ``pos`` with no recompute (paged resumes
+        even mid-chunked-prefill: ``pos`` is a chunk boundary and the
+        chunk policy is deterministic). Tickets from a different backend
+        are rejected: the state bytes are only meaningful to their own
+        ``cache_kind``."""
+        if ticket.cache_kind != self.cache_kind:
+            raise ValueError(
+                f"cannot import a cache_kind={ticket.cache_kind!r} ticket "
+                f"into {self.engine_id} (cache_kind={self.cache_kind!r}): "
+                f"sequence-state bytes do not convert across backends")
+        prompt = np.asarray(ticket.prompt, np.int32)
+        msg = self.state.validate(len(ticket.prompt), ticket.max_new_tokens,
+                                  self.max_len)
+        if msg:
+            raise ValueError(f"request {ticket.rid}: {msg}")
+        req = Request(rid=ticket.rid, prompt=prompt,
+                      max_new_tokens=ticket.max_new_tokens,
+                      priority=ticket.priority,
+                      out_tokens=list(ticket.out_tokens))
+        req.arrival_tick = self.ticks
+        entry = _Entry(req=req, submit_time=time.perf_counter(),
+                       arrival_seq=self._submit_counter,
+                       prompt_tokens=list(ticket.prompt))
+        self._submit_counter += 1
+        if ticket.state is not None:
+            entry.inbound = ticket.state
+            entry.pos = ticket.pos
+        entry.handle = RequestHandle(self, req)
+        self.queue.append(entry)
+        self.migrations_in += 1
+        return entry.handle
+
+    # ------------------------------------------------------------------
     # metrics — one unified schema for both backends
     # ------------------------------------------------------------------
 
@@ -719,10 +969,14 @@ class Engine:
                        for e in done if e.first_token_time is not None)
         out: Dict[str, Any] = {
             "engine": {
+                # engine_id first: the merge key multi-replica metric
+                # consumers (cluster.metrics()) disambiguate replicas by
+                "engine_id": self.engine_id,
                 "cache": self.cache_kind,
                 "scheduler": self.policy.name,
                 "slots": self.slots,
                 "max_len": self.max_len,
+                "placement": self.placement,
             },
             "ticks": self.ticks,
             "active_slots": sum(e is not None for e in self.slot_entry),
@@ -730,6 +984,8 @@ class Engine:
             "queued": len(self.queue),
             "completed": len(self.completed),
             "preemptions": self.preempt_count,
+            "migrations": {"in": self.migrations_in,
+                           "out": self.migrations_out},
             "ttft_s": ttfts,
             "requests": self._request_records(),
             **self._transport_metrics(),

@@ -21,10 +21,12 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, List, Optional, Set
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.models.kvcache import (RecurrentState, SequenceCapacity,
                                   SequenceState, gather_slot_rows,
+                                  scatter_slot_rows, state_from_bytes,
                                   state_to_bytes)
 
 __all__ = ["BlockPool", "PagedKVState", "SlotKVState", "RecurrentState",
@@ -142,34 +144,42 @@ class PagedKVState:
             self.pool.release(entry.blocks)
             entry.blocks = []
 
+    def _block_axis(self, shape) -> Optional[int]:
+        """Locate the pool-block axis of a cache leaf structurally (shape
+        ``[..., num_blocks, block_size, ...]``) so scanned-group leaves with
+        a leading layer-stack dim resolve correctly. A leaf where *more
+        than one* adjacent dim pair matches ``(num_blocks, block_size)`` —
+        e.g. a head or layer-stack dim that happens to collide — is
+        ambiguous, and picking the wrong axis would serialize garbage; that
+        raises instead of silently taking the first match. ``None`` for
+        leaves with no block axis (they copy through gather/restore)."""
+        axes = [ax for ax in range(len(shape) - 1)
+                if (shape[ax] == self.num_blocks
+                    and shape[ax + 1] == self.block_size)]
+        if not axes:
+            return None
+        if len(axes) > 1:
+            raise ValueError(
+                f"ambiguous block axis in paged-cache leaf of shape "
+                f"{tuple(shape)}: dims {axes} all match (num_blocks="
+                f"{self.num_blocks}, block_size={self.block_size}); "
+                f"resize the pool (num_blocks/block_size) so the pair "
+                f"is unique, or reshape the colliding leaf dims")
+        return axes[0]
+
     def gather(self, entry: Any, cache: Any, slot: int) -> Any:
         """The request's resident tokens as a contiguous host pytree:
         gather its blocks out of every pool leaf, merge the (blocks,
-        block_size) axes, and trim to ``entry.pos`` tokens. The block axis
-        is located structurally (shape ``[..., num_blocks, block_size,
-        ...]``) so scanned-group leaves with a leading layer-stack dim
-        resolve correctly. A leaf where *more than one* adjacent dim pair
-        matches ``(num_blocks, block_size)`` — e.g. a head or layer-stack
-        dim that happens to collide — is ambiguous, and gathering the wrong
-        axis would serialize garbage; that raises instead of silently
-        taking the first match."""
+        block_size) axes, and trim to ``entry.pos`` tokens — logical token
+        order, no physical block ids, which is what makes the serialized
+        form position-independent (restorable into any pool geometry)."""
         blocks = np.asarray(entry.blocks, np.int64)
 
         def take(leaf):
             arr = np.asarray(leaf)
-            axes = [ax for ax in range(arr.ndim - 1)
-                    if (arr.shape[ax] == self.num_blocks
-                        and arr.shape[ax + 1] == self.block_size)]
-            if not axes:
+            ax = self._block_axis(arr.shape)
+            if ax is None:
                 return arr
-            if len(axes) > 1:
-                raise ValueError(
-                    f"ambiguous block axis in paged-cache leaf of shape "
-                    f"{arr.shape}: dims {axes} all match (num_blocks="
-                    f"{self.num_blocks}, block_size={self.block_size}); "
-                    f"resize the pool (num_blocks/block_size) so the pair "
-                    f"is unique, or reshape the colliding leaf dims")
-            ax = axes[0]
             got = np.take(arr, blocks, axis=ax)
             merged = got.reshape(
                 arr.shape[:ax] + (len(blocks) * self.block_size,)
@@ -180,6 +190,53 @@ class PagedKVState:
 
     def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
         return state_to_bytes(self.gather(entry, cache, slot))
+
+    def gather_like(self, entry: Any, cache: Any) -> Any:
+        """ShapeDtypeStruct tree matching ``gather``'s output for ``entry``
+        — the ``like=`` template ``state_from_bytes`` needs on the restore
+        side (shapes depend on ``entry.pos``, not on the pool)."""
+        def like(leaf):
+            shape = tuple(leaf.shape)
+            ax = self._block_axis(shape)
+            if ax is None:
+                return jax.ShapeDtypeStruct(shape, leaf.dtype)
+            return jax.ShapeDtypeStruct(
+                shape[:ax] + (entry.pos,) + shape[ax + 2:], leaf.dtype)
+        return jax.tree.map(like, cache)
+
+    def restore(self, entry: Any, cache: Any, slot: int, buf: bytes) -> Any:
+        """Inverse of ``serialize``: split the contiguous token rows by
+        *this* pool's block size and scatter them at ``entry.blocks`` —
+        which the engine must already have allocated for ``entry.pos``
+        tokens. Source and target pools may disagree on ``num_blocks``,
+        ``block_size``, and which physical blocks the request owns; only
+        the logical rows travel. Rows past ``entry.pos`` in the final
+        block are zero-padded — attention masks positions ``>= seq_end``
+        and later appends overwrite them before they are ever live."""
+        n_blocks = self.blocks_for(entry.pos)
+        if len(entry.blocks) < n_blocks:
+            raise RuntimeError(
+                f"restore of {entry.pos} tokens needs {n_blocks} blocks, "
+                f"entry owns {len(entry.blocks)} (grow before restoring)")
+        row = state_from_bytes(buf, self.gather_like(entry, cache))
+        blocks = jnp.asarray(entry.blocks[:n_blocks], jnp.int32)
+
+        def put(leaf, got):
+            shape = tuple(leaf.shape)
+            ax = self._block_axis(shape)
+            if ax is None:
+                return leaf
+            got = jnp.asarray(got)
+            pad = n_blocks * self.block_size - entry.pos
+            if pad:
+                widths = [(0, 0)] * got.ndim
+                widths[ax] = (0, pad)
+                got = jnp.pad(got, widths)
+            got = got.reshape(shape[:ax] + (n_blocks, self.block_size)
+                              + shape[ax + 2:])
+            idx = (slice(None),) * ax + (blocks,)
+            return leaf.at[idx].set(got.astype(leaf.dtype))
+        return jax.tree.map(put, cache, row)
 
     def capacity(self) -> SequenceCapacity:
         return SequenceCapacity(kind="paged", unit="blocks",
@@ -249,6 +306,19 @@ class SlotKVState:
 
     def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
         return state_to_bytes(self.gather(entry, cache, slot))
+
+    def restore(self, entry: Any, cache: Any, slot: int, buf: bytes) -> Any:
+        """Scatter a migrated request's cache row into ``slot``. The slots
+        cache keeps ONE shared ``length`` scalar (decode masks by absolute
+        position), and the serialized row carries the source's value — the
+        target's scalar must rise to cover the restored row or its tail
+        tokens would be masked off; the engine's prefill scatter applies
+        the same ``maximum`` rule."""
+        row = state_from_bytes(buf, self.template)
+        cache = scatter_slot_rows(cache, row, slot, self.slots)
+        cache["length"] = jnp.maximum(jnp.asarray(cache["length"]),
+                                      jnp.asarray(row["length"]))
+        return cache
 
     def capacity(self) -> SequenceCapacity:
         return SequenceCapacity(kind="slots", unit="slots",

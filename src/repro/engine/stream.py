@@ -13,7 +13,8 @@ of one in-flight request. Clients no longer need ``run_until_drained``:
   whoever is driving it (another handle's generator, ``run_until_drained``,
   or a manual tick loop).
 * ``handle.result()`` drives the engine until this request completes and
-  returns the finished ``Request``.
+  returns the finished ``Request``; its ``max_ticks`` is a stall bound
+  (ticks without progress, reset on every token), like ``tokens()``.
 
 Tokens stream with tick granularity: a preempted-and-recomputed request
 re-emits nothing (generated tokens are kept across preemption), so the
@@ -101,9 +102,25 @@ class RequestHandle:
             ticked += 1
 
     def result(self, max_ticks: int = 10_000) -> "Request":
-        """Drive the engine until this request completes; return it."""
+        """Drive the engine until this request completes; return it.
+
+        ``max_ticks`` is the same **stall bound** ``tokens()`` applies —
+        consecutive ticks without a new token for *this* request, reset on
+        every token — not a bound on total ticks, so a long generation
+        behind preemption churn completes as long as it keeps moving.
+        Raises ``RuntimeError`` if the request leaves this engine without
+        completing (exported to another replica, or the engine was reset):
+        a silent half-finished ``Request`` would read as a short
+        generation. Migration-transparent clients should hold the
+        router's cluster handle instead of an engine-level one."""
         for _ in self.tokens(max_ticks=max_ticks):
             pass
+        if not self.req.done:
+            raise RuntimeError(
+                f"request {self.req.rid} left this engine before "
+                f"completing ({len(self.req.out_tokens)} tokens buffered) "
+                f"— it was migrated or the engine was reset; track "
+                f"migrated requests through the cluster-level handle")
         return self.req
 
     def __repr__(self) -> str:

@@ -43,10 +43,12 @@ class Lease:
     hits: int = 0
     misses: int = 0
     expirations: int = 0                  # TTL expiries (a subset of misses)
+    evictions: int = 0                    # explicit evict() drops of a live value
 
     def counters(self) -> Dict[str, Any]:
         return {"hits": self.hits, "misses": self.misses,
                 "expirations": self.expirations,
+                "evictions": self.evictions,
                 "calls_used": self.calls_used,
                 "ttl_calls": self.ttl_calls, "live": self.live}
 
@@ -117,13 +119,17 @@ class LeasePool:
 
     def evict(self, name: str) -> bool:
         """Drop ``name``'s warm value (counters survive). Returns whether a
-        live value was actually released."""
+        live value was actually released. Counted per name (``evictions``):
+        the warm-state lifecycle a router's placement decisions key off —
+        hit counters alone cannot distinguish "never warm" from "was warm,
+        got dropped"."""
         lease = self._leases.get(name)
         if lease is None or not lease.live:
             return False
         lease.live = False
         lease.value = None
         lease.key = ()
+        lease.evictions += 1
         return True
 
     def get(self, name: str) -> Optional[Lease]:

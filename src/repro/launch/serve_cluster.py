@@ -1,0 +1,193 @@
+"""Cluster launcher: a Router over N engine replicas, with live migration.
+
+  # two paged llama replicas, forced migration after 3 router ticks:
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
+      --replicas llama3.2-1b:paged,llama3.2-1b:paged --migrate-after 3
+
+  # heterogeneous fleet (mixed models + backends, priority scheduling):
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
+      --replicas llama3.2-1b:paged,llama3.2-1b:paged,mamba-130m:recurrent \
+      --scheduler priority --requests 9 --migrate-after 2
+
+Each ``--replicas`` entry is ``arch:cache`` (cache one of
+paged/slots/recurrent/auto). Replicas of the same arch share one weight
+tree, installed via ``Engine.inject_params`` so every replica's params
+lease is warm and ``placement="auto"`` resolves to injected from the
+first tick — the router's cost model then places by load alone among
+warm replicas. Requests round through ``Router.submit`` with a priority
+spread; ``--migrate-after N`` forcibly live-migrates one in-flight
+request between compatible replicas after N router ticks (exits non-zero
+if no migration could be forced — CI uses this to prove the handoff path
+runs).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import (ARCHS, default_cache_backend, get_config,
+                                    get_smoke)
+from repro.cluster import MigrateOnOversubscription, Replica, Router
+from repro.engine import Engine, Request
+
+
+def _parse_replicas(spec: str, smoke: bool, error) -> list:
+    out = []
+    for i, item in enumerate(spec.split(",")):
+        item = item.strip()
+        if not item:
+            continue
+        arch, _, cache = item.partition(":")
+        cache = cache or "auto"
+        if arch not in ARCHS:
+            error(f"--replicas[{i}]: unknown arch {arch!r}")
+        if cache not in ("auto", "paged", "slots", "recurrent"):
+            error(f"--replicas[{i}]: unknown cache {cache!r}")
+        cfg = get_smoke(arch) if smoke else get_config(arch)
+        if cfg.is_encoder:
+            error(f"--replicas[{i}]: {arch} is encoder-only")
+        if cache == "auto":
+            cache = default_cache_backend(cfg)
+        out.append((arch, cache, cfg))
+    if not out:
+        error("--replicas is empty")
+    return out
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--replicas", required=True,
+                   help="comma list of arch:cache replica specs, e.g. "
+                        "llama3.2-1b:paged,llama3.2-1b:paged")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--prompt-len", type=int, default=12)
+    p.add_argument("--max-new", type=int, default=8)
+    p.add_argument("--slots", type=int, default=3)
+    p.add_argument("--max-len", type=int, default=64)
+    p.add_argument("--blocks", type=int, default=0,
+                   help="paged replicas: pool blocks (0 => one max_len "
+                        "sequence per slot)")
+    p.add_argument("--block-size", type=int, default=8)
+    p.add_argument("--chunk", type=int, default=4)
+    p.add_argument("--scheduler", choices=("fifo", "priority", "sjf"),
+                   default="fifo")
+    p.add_argument("--rebalance", choices=("none", "oversubscription"),
+                   default="oversubscription")
+    p.add_argument("--migrate-after", type=int, default=0, metavar="N",
+                   help="after N router ticks, force one live migration "
+                        "of an in-flight request between compatible "
+                        "replicas; exit 1 if none was possible")
+    p.add_argument("--metrics-json", action="store_true",
+                   help="print the final cluster metrics() as JSON")
+    args = p.parse_args()
+
+    if not args.smoke:
+        p.error("serve_cluster currently supports --smoke only "
+                "(production multi-host routing is ROADMAP work)")
+    specs = _parse_replicas(args.replicas, args.smoke, p.error)
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    sharding = ShardingConfig(fsdp_params=False, seq_axis=None)
+
+    # one weight tree per arch, injected into every replica of that arch:
+    # the rFaaS lease model — N warm executors, one shipped weight state
+    replicas = []
+    params_by_arch: dict = {}
+    with mesh:
+        for i, (arch, cache, cfg) in enumerate(specs):
+            run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                            sharding=sharding)
+            kw = dict(slots=args.slots, max_len=args.max_len,
+                      scheduler=args.scheduler, placement="auto",
+                      engine_id=f"{arch}:{cache}#{i}")
+            if cache == "paged":
+                per_seq = -(-args.max_len // args.block_size)
+                kw.update(num_blocks=args.blocks or per_seq * args.slots,
+                          block_size=args.block_size, chunk=args.chunk)
+            elif cache == "recurrent":
+                kw.update(chunk=args.chunk)
+            eng = Engine(cfg, run, mesh, cache=cache, **kw)
+            if arch in params_by_arch:
+                eng.inject_params(params_by_arch[arch])
+            else:
+                eng.inject_params()
+                params_by_arch[arch] = eng.params
+            replicas.append(Replica(eng, model=arch))
+
+    rebalance = (MigrateOnOversubscription()
+                 if args.rebalance == "oversubscription" else None)
+    router = Router(replicas, rebalance=rebalance)
+
+    rng = np.random.default_rng(0)
+    with mesh:
+        handles = []
+        for rid in range(args.requests):
+            arch = specs[rid % len(specs)][0]
+            cfg = specs[rid % len(specs)][2]
+            prompt = rng.integers(
+                0, cfg.vocab_size, size=(args.prompt_len,)).astype(np.int32)
+            handles.append(router.submit(
+                Request(rid, prompt, max_new_tokens=args.max_new,
+                        priority=rid % 3), model=arch))
+
+        t0 = time.perf_counter()
+        forced = None
+        ticks = 0
+        while router.pending() and ticks < 10_000:
+            router.tick()
+            ticks += 1
+            if (args.migrate_after and forced is None
+                    and ticks >= args.migrate_after):
+                # force one live handoff: the first unfinished request
+                # whose replica has a compatible peer
+                for h in handles:
+                    if h.done:
+                        continue
+                    src = router._by_id[h.engine_id]
+                    # prefer a peer with headroom, but force the handoff
+                    # onto any compatible replica — it queues there
+                    dst = (router.best_target(src)
+                           or next(iter(router.compatible_targets(src)),
+                                   None))
+                    if dst is not None:
+                        router.migrate(h.rid, dst.engine_id,
+                                       reason="forced")
+                        forced = (h.rid, src.engine_id, dst.engine_id)
+                        break
+        dt = time.perf_counter() - t0
+        done = [h.result() for h in handles]
+
+    m = router.metrics()
+    total_tokens = sum(len(r.out_tokens) for r in done)
+    print(f"[cluster] {len(done)}/{args.requests} requests over "
+          f"{len(replicas)} replicas, {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, {ticks} ticks)")
+    for r in m["cluster"]["replicas"]:
+        eng_m = m["replicas"][r["engine_id"]]
+        print(f"  {r['engine_id']}: model={r['model']} cache={r['cache']} "
+              f"completed={eng_m['completed']} "
+              f"migrations={eng_m['migrations']} "
+              f"placement={eng_m['engine']['placement']}")
+    print(f"[cluster] migrations={m['totals']['migrations']} "
+          f"(handoff: {m['router']['handoff_frames']} frames, "
+          f"{m['router']['handoff_bytes']} bytes) "
+          f"rebalance_events={m['router']['rebalance_events']}")
+    if forced:
+        rid, src, dst = forced
+        print(f"[cluster] forced migration: rid {rid} {src} -> {dst}")
+    if args.metrics_json:
+        print(json.dumps(m, default=str, indent=2))
+    if args.migrate_after and m["totals"]["migrations"] == 0:
+        print("[cluster] ERROR: --migrate-after was set but no migration "
+              "happened (no compatible replica pair?)", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -378,6 +378,15 @@ class SequenceState(Protocol):
     def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
         """The migration seam: the request's state as one buffer."""
 
+    def restore(self, entry: Any, cache: Any, slot: int, buf: bytes) -> Any:
+        """Inverse of ``serialize``: write a migrated request's state into
+        ``slot``. The buffer is position-independent (logical token order,
+        no physical block ids / slot indices), so source and target may
+        disagree on pool geometry, block allocation, and slot number — only
+        the model config and this backend's *kind* must match. Returns the
+        updated cache; the entry must already own whatever capacity the
+        resident prefix needs (the engine grows it before restoring)."""
+
     def capacity(self) -> SequenceCapacity: ...
 
     def metrics(self) -> Dict[str, Any]: ...
@@ -505,6 +514,16 @@ class RecurrentState:
 
     def serialize(self, entry: Any, cache: Any, slot: int) -> bytes:
         return state_to_bytes(self.gather(entry, cache, slot))
+
+    def restore(self, entry: Any, cache: Any, slot: int, buf: bytes) -> Any:
+        """Scatter a migrated request's state rows into ``slot`` — the
+        byte-level twin of the snapshot-resume path (``init`` with
+        ``entry.snapshot``), so a migrated request resumes exactly like a
+        requeued one: state absorbed through ``entry.pos``, never a
+        recompute. Constant-size state is what makes recurrent migration
+        nearly free (a few KB regardless of sequence length)."""
+        row = state_from_bytes(buf, self.template)
+        return self._place(scatter_slot_rows(cache, row, slot, self.slots))
 
     def capacity(self) -> SequenceCapacity:
         return SequenceCapacity(kind="recurrent", unit="slots",

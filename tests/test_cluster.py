@@ -1,0 +1,458 @@
+"""repro.cluster tests (ISSUE 8): router placement, live migration,
+rebalance, drain, handoff wire format, and the merged metrics surface.
+
+Ground rule (the acceptance criterion): a migrated request resumes on the
+target replica with greedy output **bitwise identical** to never having
+moved — per cache backend (paged, slots, recurrent), including a paged
+request exported mid-chunked-prefill. The reference is a solo run of the
+same request on an identically configured engine; routing and migration
+decide *where*, never *what*.
+
+Engines are module-scoped (compile once) and reused across tests behind
+fresh ``Router``s; rids are unique per test so routing tables never
+collide.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.cluster import (HANDOFF_SPEC, MIGRATE_FUNC_ID, ClusterHandle,
+                           MigrateOnOversubscription, MigrationPlan, Replica,
+                           Router, decode_handoff, encode_handoff)
+from repro.core.message import HDR_ELEM_ID, HDR_FUNC_ID, FrameSpec
+from repro.engine import Engine, MigrationTicket, Request
+from repro.models import model as model_lib
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def _run_cfg(cfg):
+    return RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                     sharding=ShardingConfig(fsdp_params=False,
+                                             seq_axis=None))
+
+
+def _engines(mesh, arch, cache, n, **kw):
+    """n identically configured engines + a solo reference engine, one
+    shared weight tree."""
+    cfg = get_smoke(arch)
+    run = _run_cfg(cfg)
+    engines = []
+    with mesh:
+        for i in range(n + 1):
+            eid = "ref" if i == n else f"{cache}-{chr(ord('a') + i)}"
+            e = Engine(cfg, run, mesh, cache=cache, engine_id=eid, **kw)
+            if engines:
+                e.load_params(engines[0].params)
+            else:
+                e.load_params()
+            engines.append(e)
+    return cfg, engines[:n], engines[n]
+
+
+@pytest.fixture(scope="module")
+def paged_pair(mesh):
+    return _engines(mesh, "llama3.2-1b", "paged", 2, slots=2, max_len=32,
+                    num_blocks=16, block_size=4, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def slots_pair(mesh):
+    return _engines(mesh, "llama3.2-1b", "slots", 2, slots=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def recurrent_pair(mesh):
+    return _engines(mesh, "mamba-130m", "recurrent", 2, slots=2, max_len=48,
+                    chunk=4)
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+
+
+def _solo(ref, prompt, rid, max_new, mesh):
+    with mesh:
+        ref.submit(Request(rid, prompt, max_new_tokens=max_new))
+        ref.run_until_drained()
+    return next(r.out_tokens for r in ref.completed if r.rid == rid)
+
+
+# ---------------------------------------------------------------------------
+# handoff wire format
+# ---------------------------------------------------------------------------
+
+def _ticket(state=b"\x01\x02" * 700, pos=9):
+    return MigrationTicket(rid=7, cache_kind="paged", priority=3,
+                           max_new_tokens=5, prompt=[1, 2, 3],
+                           out_tokens=[4, 5], pos=pos, state=state)
+
+
+def test_handoff_roundtrip_multi_frame():
+    """A ticket whose state spans several 4 KiB frames survives the
+    encode/decode round trip field-for-field; the train is real mailbox
+    frames (64 B-aligned, valid SIG, dense elem_ids)."""
+    t = _ticket(state=bytes(range(256)) * 40)     # > one frame of payload
+    frames = encode_handoff(t)
+    assert len(frames) > 1
+    for i, f in enumerate(frames):
+        assert f.shape == (HANDOFF_SPEC.total_words,)
+        assert int(f[HDR_FUNC_ID]) == MIGRATE_FUNC_ID
+        assert int(f[HDR_ELEM_ID]) == i
+    back = decode_handoff(frames)
+    assert back == t
+
+
+def test_handoff_roundtrip_stateless():
+    """Queued requests migrate as metadata-only tickets (state=None)."""
+    t = _ticket(state=None, pos=0)
+    back = decode_handoff(encode_handoff(t))
+    assert back == t and back.state is None
+
+
+def test_handoff_decode_rejects_corruption():
+    frames = encode_handoff(_ticket(state=bytes(range(256)) * 40))
+    assert len(frames) >= 2
+    # flipped payload word -> SIG checksum mismatch
+    bad = [f.copy() for f in frames]
+    bad[0][HANDOFF_SPEC.offsets()["usr"] + 3] ^= 0xFF
+    with pytest.raises(ValueError, match="SIG checksum"):
+        decode_handoff(bad)
+    # truncated train -> every frame's seq_no disagrees with the count
+    with pytest.raises(ValueError, match="truncated"):
+        decode_handoff(frames[:-1])
+    # reordered train -> elem_id out of place
+    with pytest.raises(ValueError, match="reordered"):
+        decode_handoff(list(reversed(frames)))
+    # a frame from some other lane -> func_id mismatch
+    alien = frames[0].copy()
+    alien[HDR_FUNC_ID] = 9
+    with pytest.raises(ValueError, match="not the migration handler"):
+        decode_handoff([alien] + [f for f in frames[1:]])
+    with pytest.raises(ValueError, match="no frames"):
+        decode_handoff([])
+
+
+# ---------------------------------------------------------------------------
+# migration bitwise identity, per cache backend (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ticks_before", [1, 2, 4])
+def test_paged_migration_bitwise_identical(paged_pair, mesh, ticks_before):
+    """Paged: migrate after 1/2/4 ticks — an 11-token prompt over chunk=4
+    is still mid-chunked-prefill at ticks 1 and 2 (the hard case: the
+    ticket carries a partially filled block table) and decoding at 4."""
+    cfg, (a, b), ref = paged_pair
+    rid = 100 + ticks_before
+    prompt = _prompt(cfg, 11, seed=rid)
+    want = _solo(ref, prompt, rid, 6, mesh)
+    router = Router([Replica(a), Replica(b)])
+    with mesh:
+        h = router.submit(Request(rid, prompt, max_new_tokens=6))
+        assert h.engine_id == a.engine_id
+        for _ in range(ticks_before):
+            router.tick()
+        router.migrate(rid, b.engine_id)
+        assert h.engine_id == b.engine_id
+        router.run_until_drained()
+    assert h.done and h.req.out_tokens == want
+    mig = router.migrations[0]
+    assert mig["state_bytes"] > 0 and mig["frames"] >= 1
+    if ticks_before <= 2:
+        assert 0 < mig["pos"] < len(prompt), "not mid-prefill as intended"
+
+
+@pytest.mark.parametrize("ticks_before", [1, 3])
+def test_slots_migration_bitwise_identical(slots_pair, mesh, ticks_before):
+    cfg, (a, b), ref = slots_pair
+    rid = 200 + ticks_before
+    prompt = _prompt(cfg, 6, seed=rid)
+    want = _solo(ref, prompt, rid, 6, mesh)
+    router = Router([Replica(a), Replica(b)])
+    with mesh:
+        h = router.submit(Request(rid, prompt, max_new_tokens=6))
+        for _ in range(ticks_before):
+            router.tick()
+        router.migrate(rid, b.engine_id)
+        router.run_until_drained()
+    assert h.req.out_tokens == want
+    assert router.migrations[0]["state_bytes"] > 0
+
+
+@pytest.mark.parametrize("ticks_before", [1, 3])
+def test_recurrent_migration_bitwise_identical(recurrent_pair, mesh,
+                                               ticks_before):
+    """Recurrent: the ticket is the O(1) SSM state — resume, never
+    recompute (tick 1 is mid-chunked-prefill of a 7-token prompt)."""
+    cfg, (a, b), ref = recurrent_pair
+    rid = 300 + ticks_before
+    prompt = _prompt(cfg, 7, seed=rid)
+    want = _solo(ref, prompt, rid, 6, mesh)
+    router = Router([Replica(a), Replica(b)])
+    with mesh:
+        h = router.submit(Request(rid, prompt, max_new_tokens=6))
+        for _ in range(ticks_before):
+            router.tick()
+        router.migrate(rid, b.engine_id)
+        router.run_until_drained()
+    assert h.req.out_tokens == want
+    assert router.migrations[0]["state_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# the cluster handle survives migration
+# ---------------------------------------------------------------------------
+
+def test_cluster_handle_callbacks_exactly_once_across_migration(paged_pair,
+                                                                mesh):
+    """Subscribers see every token index exactly once even though the
+    target engine replays the preserved prefix on rebind; the token
+    stream is seamless across the move."""
+    cfg, (a, b), ref = paged_pair
+    prompt = _prompt(cfg, 8, seed=41)
+    want = _solo(ref, prompt, 410, 8, mesh)
+    router = Router([Replica(a), Replica(b)])
+    seen = []
+    with mesh:
+        h = router.submit(Request(411, prompt, max_new_tokens=8))
+        h.on_token(lambda tok, i: seen.append((i, tok)))
+        for _ in range(4):
+            router.tick()
+        n_before = len(h.req.out_tokens)
+        assert n_before >= 1, "request should be decoding by now"
+        router.migrate(411, b.engine_id)
+        streamed = list(h.tokens())
+    assert h.done
+    assert h.req.out_tokens == want
+    assert streamed == want          # tokens() replays from index 0
+    assert seen == list(enumerate(want)), "duplicate or dropped callback"
+    assert h.engine_id == b.engine_id
+
+
+def test_cluster_handle_result_and_repr(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    prompt = _prompt(cfg, 5, seed=42)
+    router = Router([Replica(a), Replica(b)])
+    with mesh:
+        h = router.submit(Request(420, prompt, max_new_tokens=3))
+        req = h.result()
+    assert req.done and len(req.out_tokens) == 3
+    assert f"rid=420" in repr(h)
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+def test_router_places_by_load_and_pins_models(paged_pair, recurrent_pair,
+                                               mesh):
+    """Balanced placement spreads equal requests across equal replicas;
+    ``model=`` pins to that tag's replicas; unknown models are loud."""
+    cfg, (a, b), _ = paged_pair
+    mcfg, (ra, rb), _ = recurrent_pair
+    router = Router([Replica(a, model="llama"), Replica(b, model="llama"),
+                     Replica(ra, model="mamba"), Replica(rb, model="mamba")])
+    with mesh:
+        hs = [router.submit(
+            Request(500 + i, _prompt(cfg, 5, seed=i), max_new_tokens=2),
+            model="llama") for i in range(4)]
+        hm = router.submit(
+            Request(510, _prompt(mcfg, 5, seed=9), max_new_tokens=2),
+            model="mamba")
+        with pytest.raises(ValueError, match="no live replica serves"):
+            router.submit(Request(511, _prompt(cfg, 4), max_new_tokens=1),
+                          model="gpt5")
+        router.run_until_drained()
+    placed = [p["engine_id"] for p in router.placements]
+    # 2 slots per replica: first two land on a, next two spill to b
+    assert placed[:4].count(a.engine_id) == 2
+    assert placed[:4].count(b.engine_id) == 2
+    assert placed[4] in (ra.engine_id, rb.engine_id)
+    assert all(h.done for h in hs + [hm])
+    # each placement logs the fabric cost estimate it was scored with
+    assert all("estimate" in p and "load" in p for p in router.placements)
+
+
+def test_router_rejects_duplicate_rids_and_engine_ids(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    with pytest.raises(ValueError, match="duplicate engine_id"):
+        Router([Replica(a), Replica(a)])
+    router = Router([Replica(a), Replica(b)])
+    with mesh:
+        h = router.submit(Request(530, _prompt(cfg, 4), max_new_tokens=1))
+        with pytest.raises(ValueError, match="already routed"):
+            router.submit(Request(530, _prompt(cfg, 4), max_new_tokens=1))
+        router.run_until_drained()
+    assert h.done
+
+
+# ---------------------------------------------------------------------------
+# rebalance policy
+# ---------------------------------------------------------------------------
+
+def test_rebalance_migrates_queued_work_to_idle_replica(paged_pair, mesh):
+    """A replica that returns from draining picks up its peer's queue:
+    the policy moves queued (stateless) requests on the next tick, through
+    the same frame path as manual migration, and every output is intact."""
+    cfg, (a, b), ref = paged_pair
+    prompts = [_prompt(cfg, 5, seed=60 + i) for i in range(4)]
+    want = [_solo(ref, p, 600 + i, 4, mesh) for i, p in enumerate(prompts)]
+    rep_a, rep_b = Replica(a), Replica(b, draining=True)
+    router = Router([rep_a, rep_b],
+                    rebalance=MigrateOnOversubscription(max_queue=0))
+    with mesh:
+        hs = [router.submit(Request(600 + i, p, max_new_tokens=4))
+              for i, p in enumerate(prompts)]
+        # all four landed on a (b was draining): 2 active + 2 queued
+        assert all(h.engine_id == a.engine_id for h in hs)
+        rep_b.draining = False
+        router.tick()                   # policy sees the imbalance now
+        assert router.migrations, "rebalance did not move queued work"
+        assert all(m["reason"].startswith("queue depth")
+                   for m in router.migrations)
+        assert all(m["state_bytes"] == 0 for m in router.migrations), \
+            "queued requests must ship metadata-only tickets"
+        router.run_until_drained()
+    assert [h.req.out_tokens for h in hs] == want
+    assert router.rebalance_events >= 1
+    moved = {m["rid"] for m in router.migrations}
+    assert moved and all(router._table[r] == b.engine_id for r in moved)
+
+
+def test_rebalance_policy_is_advisory(paged_pair, mesh):
+    """Stale plans (request finished or already moved) are skipped, not
+    errors — the routing table is truth."""
+    cfg, (a, b), ref = paged_pair
+
+    class StalePlanner:
+        name = "stale"
+        def plan(self, router):
+            return [MigrationPlan(rid=9999, src=a.engine_id,
+                                  dst=b.engine_id)]
+
+    router = Router([Replica(a), Replica(b)], rebalance=StalePlanner())
+    with mesh:
+        h = router.submit(Request(610, _prompt(cfg, 4), max_new_tokens=2))
+        router.run_until_drained()
+    assert h.done and not router.migrations and router.rebalance_events == 0
+
+
+# ---------------------------------------------------------------------------
+# drain (shutdown path)
+# ---------------------------------------------------------------------------
+
+def test_drain_migrates_running_and_queued_off_replica(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    prompts = [_prompt(cfg, 6, seed=70 + i) for i in range(3)]
+    want = [_solo(ref, p, 700 + i, 4, mesh) for i, p in enumerate(prompts)]
+    rep_a, rep_b = Replica(a), Replica(b, draining=True)
+    router = Router([rep_a, rep_b])
+    with mesh:
+        hs = [router.submit(Request(700 + i, p, max_new_tokens=4))
+              for i, p in enumerate(prompts)]
+        router.tick()                   # a is mid-flight: 2 running, 1 queued
+        rep_b.draining = False
+        moved = router.drain(a.engine_id)
+        assert sorted(moved) == [700, 701, 702]
+        assert rep_a.draining and not a.pending()
+        assert all(h.engine_id == b.engine_id for h in hs)
+        # a draining replica accepts no new placements: despite a being
+        # empty now, the fresh request routes around it
+        h9 = router.submit(Request(709, _prompt(cfg, 4), max_new_tokens=1))
+        assert h9.engine_id == b.engine_id
+        router.run_until_drained()
+    assert [h.req.out_tokens for h in hs] == want
+
+
+def test_drain_with_no_compatible_peer_raises(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    router = Router([Replica(a)])       # nobody to take the work
+    with mesh:
+        h = router.submit(Request(720, _prompt(cfg, 5), max_new_tokens=3))
+        with pytest.raises(RuntimeError, match="stranded rids \\[720\\]"):
+            router.drain(a.engine_id)
+        # the replica stays draining; the request still completes locally
+        assert router._by_id[a.engine_id].draining
+        req = h.result()
+    assert req.done
+
+
+# ---------------------------------------------------------------------------
+# migration validation
+# ---------------------------------------------------------------------------
+
+def test_migrate_validation_errors(paged_pair, slots_pair, mesh):
+    cfg, (a, b), _ = paged_pair
+    _, (sa, sb), _ = slots_pair
+    router = Router([Replica(a, model="llama"), Replica(b, model="other"),
+                     Replica(sa, model="llama")])
+    with pytest.raises(KeyError, match="not routed"):
+        router.migrate(12345, b.engine_id)
+    with mesh:
+        h = router.submit(Request(800, _prompt(cfg, 5), max_new_tokens=2),
+                          model="llama")
+        assert h.engine_id == a.engine_id
+        with pytest.raises(ValueError, match="already lives"):
+            router.migrate(800, a.engine_id)
+        with pytest.raises(KeyError, match="unknown replica"):
+            router.migrate(800, "ghost-engine")
+        with pytest.raises(ValueError, match="different weights"):
+            router.migrate(800, b.engine_id)          # model mismatch
+        with pytest.raises(ValueError, match="cache"):
+            router.migrate(800, sa.engine_id)         # cache_kind mismatch
+        # failed migrations never touched the table or the request
+        assert h.engine_id == a.engine_id
+        router.run_until_drained()
+    assert h.done
+    # compatible_targets honours both axes
+    assert router.compatible_targets(router._by_id[a.engine_id]) == []
+
+
+# ---------------------------------------------------------------------------
+# merged metrics surface
+# ---------------------------------------------------------------------------
+
+def test_cluster_metrics_merges_router_and_replicas(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    router = Router([Replica(a), Replica(b)], name="test-cluster")
+    with mesh:
+        hs = [router.submit(
+            Request(900 + i, _prompt(cfg, 5, seed=90 + i), max_new_tokens=3))
+            for i in range(3)]
+        router.tick()
+        router.migrate(hs[0].rid, hs[0].engine_id == a.engine_id
+                       and b.engine_id or a.engine_id)
+        router.run_until_drained()
+    m = router.metrics()
+    assert set(m) == {"cluster", "router", "replicas", "totals"}
+    assert m["cluster"]["name"] == "test-cluster"
+    assert [r["engine_id"] for r in m["cluster"]["replicas"]] \
+        == [a.engine_id, b.engine_id]
+    for r in m["cluster"]["replicas"]:
+        assert {"model", "cache", "draining", "queue_depth", "active",
+                "slots", "occupancy"} <= set(r)
+    # replica blocks are the engines' own metrics, keyed by engine_id,
+    # and each engine reports that same id in its identity block
+    assert set(m["replicas"]) == {a.engine_id, b.engine_id}
+    for eid, em in m["replicas"].items():
+        assert em["engine"]["engine_id"] == eid
+        assert em["migrations"]["in"] + em["migrations"]["out"] >= 0
+    r = m["router"]
+    assert len(r["placements"]) == 3
+    assert len(r["migrations"]) == 1
+    assert r["handoff_frames"] >= 1
+    assert r["handoff_bytes"] == r["handoff_frames"] * \
+        HANDOFF_SPEC.total_bytes
+    assert m["totals"]["migrations"] == 1
+    assert m["totals"]["completed"] >= 3
+    # engine-level migration counters line up with the router's log
+    total_in = sum(em["migrations"]["in"] for em in m["replicas"].values())
+    total_out = sum(em["migrations"]["out"] for em in m["replicas"].values())
+    assert total_in >= 1 and total_out >= 1

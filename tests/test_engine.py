@@ -711,3 +711,136 @@ def test_engine_cache_auto_resolves_per_family():
         eng = Engine(cfg, run, mesh, cache="auto", slots=1, max_len=32)
     assert eng.cache_kind == "recurrent"
     assert eng.state.kind == "recurrent"
+
+
+# ---------------------------------------------------------------------------
+# ISSUE 8: stable engine identity, real placements, export/import handoff
+# ---------------------------------------------------------------------------
+
+def test_engine_id_in_metrics_identity_block(setup):
+    """Satellite: metrics()["engine"] carries a stable engine_id — the
+    merge key cluster.metrics() disambiguates replicas by."""
+    eng = _mk_engine(setup, engine_id="replica-7")
+    m = eng.metrics()["engine"]
+    assert m["engine_id"] == "replica-7"
+    assert m["placement"] == "local"
+    a, b = _mk_engine(setup), _mk_engine(setup)
+    assert a.engine_id != b.engine_id            # generated ids stay distinct
+    assert a.metrics()["engine"]["engine_id"] == a.engine_id
+
+
+def test_engine_rejects_bad_placement(setup):
+    with pytest.raises(ValueError, match="placement"):
+        _mk_engine(setup, placement="teleport")
+
+
+def test_placement_modes_identical_tokens_and_lease_telemetry(setup):
+    """placement= decides where the weights are accounted as living,
+    never the math: local/injected/auto emit identical tokens. 'injected'
+    acquires the params lease every tick — the first acquire is the
+    injection (one miss), later ticks hit warm. Cold 'auto' resolves
+    local (injecting a weight tree for one tick's payload never pays) and
+    records a cost-model decision per tick."""
+    cfg, run, mesh, params = setup
+    rng = np.random.default_rng(70)
+    prompts = _prompts(cfg, 2, rng, lo=5, hi=9)
+    outs, engines = {}, {}
+    for placement in ("local", "injected", "auto"):
+        eng = _mk_engine(setup, placement=placement)
+        with mesh:
+            for rid, p in enumerate(prompts):
+                eng.submit(Request(rid, p, max_new_tokens=4))
+            eng.run_until_drained()
+        outs[placement] = {r.rid: list(r.out_tokens) for r in eng.completed}
+        engines[placement] = eng
+    assert outs["local"] == outs["injected"] == outs["auto"]
+
+    m = engines["local"].metrics()
+    assert m["fabric"]["placements"]["engine.paged_step"] == "local"
+    assert "engine.paged_step.params" not in m["fabric"]["leases"]
+
+    m = engines["injected"].metrics()
+    assert m["fabric"]["placements"]["engine.paged_step"] == "injected"
+    lease = m["fabric"]["leases"]["engine.paged_step.params"]
+    assert lease["misses"] == 1                  # the injection itself
+    assert lease["hits"] == engines["injected"].ticks - 1
+
+    m = engines["auto"].metrics()
+    assert m["fabric"]["placements"]["engine.paged_step"] == "local"
+    decs = m["transport_decisions"]
+    assert len(decs) == engines["auto"].ticks
+    assert all(d.endswith("-> local") for d in decs)
+
+
+def test_inject_params_makes_auto_resolve_injected(setup):
+    """inject_params pre-warms the rFaaS lease, so placement='auto'
+    serves injected from the first tick — warm reuse ships nothing."""
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup, placement="auto")
+    with mesh:
+        eng.inject_params(params)
+        rng = np.random.default_rng(71)
+        p = _prompts(cfg, 1, rng, lo=5, hi=6)[0]
+        eng.submit(Request(0, p, max_new_tokens=3))
+        eng.run_until_drained()
+    m = eng.metrics()
+    assert m["fabric"]["placements"]["engine.paged_step"] == "injected"
+    lease = m["fabric"]["leases"]["engine.paged_step.params"]
+    assert lease["misses"] == 1 and lease["hits"] == eng.ticks
+    assert all(d.endswith("-> injected") for d in m["transport_decisions"])
+
+
+def test_export_import_roundtrip_and_source_handle_detach(setup):
+    """Engine-level handoff: a mid-flight request exports into a ticket,
+    the source forgets it (its stream handle raises instead of hanging),
+    and the import resumes bitwise-identically on the peer."""
+    cfg, run, mesh, params = setup
+    a = _mk_engine(setup, engine_id="exp-a")
+    b = _mk_engine(setup, engine_id="exp-b")
+    rng = np.random.default_rng(72)
+    prompt = _prompts(cfg, 1, rng, lo=9, hi=10)[0]
+    want = _greedy_reference(cfg, params, prompt, 6)
+    with mesh:
+        h = a.submit(Request(5, prompt, max_new_tokens=6))
+        a.tick(); a.tick()
+        ticket = a.export_request(5)
+        assert ticket.cache_kind == "paged" and ticket.pos > 0
+        assert ticket.state is not None
+        assert not a.pending()
+        with pytest.raises(RuntimeError, match="left this engine"):
+            h.result(max_ticks=5)
+        req = b.import_request(ticket).result()
+    assert req.out_tokens == want
+    assert a.metrics()["migrations"] == {"in": 0, "out": 1}
+    assert b.metrics()["migrations"] == {"in": 1, "out": 0}
+
+
+def test_export_unknown_or_finished_rid_raises(setup):
+    cfg, run, mesh, params = setup
+    eng = _mk_engine(setup)
+    rng = np.random.default_rng(73)
+    with mesh:
+        eng.submit(Request(0, _prompts(cfg, 1, rng, lo=4, hi=5)[0],
+                           max_new_tokens=2))
+        eng.run_until_drained()
+    with pytest.raises(KeyError, match="finished requests cannot migrate"):
+        eng.export_request(0)
+    with pytest.raises(KeyError, match="not queued or running"):
+        eng.export_request(42)
+
+
+def test_import_rejects_foreign_cache_kind(setup):
+    cfg, run, mesh, params = setup
+    a = _mk_engine(setup)
+    rng = np.random.default_rng(74)
+    with mesh:
+        slots_eng = Engine(cfg, run, mesh, cache="slots", slots=2,
+                           max_len=32)
+        slots_eng.load_params(params)
+        a.submit(Request(0, _prompts(cfg, 1, rng, lo=5, hi=6)[0],
+                         max_new_tokens=4))
+        a.tick()
+        ticket = a.export_request(0)
+        with pytest.raises(ValueError,
+                           match="do not convert across backends"):
+            slots_eng.import_request(ticket)

@@ -286,6 +286,26 @@ def test_lease_identity_hit_and_ttl_expiry():
     assert "warm" in fabric.metrics()["leases"]
 
 
+def test_lease_expiry_and_eviction_counters_in_metrics():
+    """Regression (ISSUE 8 satellite): ``fabric.metrics()["leases"]`` must
+    report TTL expiries and explicit evictions per name — a router's
+    placement decisions key off warm state, and hit/miss counters alone
+    cannot distinguish "never warm" from "was warm, got dropped"."""
+    fabric = Fabric(name="evict-test")
+    state = (jnp.ones(2),)
+    fabric.lease("params", state, ttl_calls=1)
+    fabric.lease("params", state, ttl_calls=1)    # TTL served its term
+    assert fabric.evict("params") is True          # re-materialized by expiry
+    assert fabric.evict("params") is False         # nothing live: not counted
+    fabric.lease("other", state)
+    assert fabric.evict("other") is True
+    m = fabric.metrics()["leases"]
+    assert m["params"]["expirations"] == 1
+    assert m["params"]["evictions"] == 1
+    assert not m["params"]["live"]
+    assert (m["other"]["evictions"], m["other"]["expirations"]) == (1, 0)
+
+
 def test_lease_never_leaks_tracers_to_eager_calls():
     """A jit closing over concrete state produces traced values from
     concrete keys; leasing those would hand a dead trace's tracer to a

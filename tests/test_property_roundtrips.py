@@ -166,6 +166,193 @@ def test_ssm_cache_bytes_roundtrip_odd_shapes(batch, width, inner, seed):
         assert a.dtype == b.dtype
 
 
+# ---------------------------------------------------------------------------
+# SequenceState serialize -> restore (ISSUE 8 satellite: the seam every
+# cluster handoff rides — one property suite per backend)
+# ---------------------------------------------------------------------------
+
+from types import SimpleNamespace
+
+
+def _paged_entry(pos, blocks):
+    return SimpleNamespace(pos=pos, blocks=list(blocks))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_paged_state_roundtrip_survives_holes_and_geometry(data):
+    """Paged sequence state is position-independent: serialize from a pool
+    with scattered (non-contiguous) block ids and restore into a pool with
+    *different* num_blocks/block_size and different — previously occupied —
+    physical blocks. The logical token rows must come back bitwise and
+    every block the request does not own must be untouched."""
+    from repro.engine.state import PagedKVState
+
+    seed = data.draw(st.integers(0, 2**32 - 1))
+    nb_src = data.draw(st.integers(3, 8))
+    bs_src = data.draw(st.integers(2, 5))
+    pos = data.draw(st.integers(1, nb_src * bs_src))
+    src = PagedKVState(num_blocks=nb_src, block_size=bs_src)
+    n_src = src.blocks_for(pos)
+    # table holes: the request's blocks are a scattered permutation prefix
+    blocks_src = data.draw(st.permutations(range(nb_src)))[:n_src]
+
+    rng = np.random.default_rng(seed)
+    cache_src = {
+        "k": jnp.asarray(rng.standard_normal((11, nb_src, bs_src, 9)),
+                         jnp.float32),
+        "v": _rand_bf16(rng, (nb_src, bs_src)),
+        "meta": jnp.asarray(rng.standard_normal((3,)), jnp.float32),
+    }
+    entry_src = _paged_entry(pos, blocks_src)
+    buf = src.serialize(entry_src, cache_src, 0)
+    want = src.gather(entry_src, cache_src, 0)
+
+    # different target geometry; block reuse: the target cache is prefilled
+    # with live-looking data the restore must overwrite only at the
+    # request's own blocks
+    bs_dst = data.draw(st.integers(2, 5))
+    dst_nb_min = -(-pos // bs_dst)
+    nb_dst = dst_nb_min + data.draw(st.integers(0, 3))
+    dst = PagedKVState(num_blocks=nb_dst, block_size=bs_dst)
+    blocks_dst = data.draw(st.permutations(range(nb_dst)))[:dst_nb_min]
+    cache_dst = {
+        "k": jnp.asarray(rng.standard_normal((11, nb_dst, bs_dst, 9)),
+                         jnp.float32),
+        "v": _rand_bf16(rng, (nb_dst, bs_dst)),
+        "meta": jnp.asarray(rng.standard_normal((3,)), jnp.float32),
+    }
+    entry_dst = _paged_entry(pos, blocks_dst)
+
+    if dst_nb_min > 1:          # under-grown entries must refuse to restore
+        starved = _paged_entry(pos, blocks_dst[:-1])
+        with pytest.raises(RuntimeError, match="grow before restoring"):
+            dst.restore(starved, cache_dst, 0, buf)
+
+    restored = dst.restore(entry_dst, cache_dst, 0, buf)
+    got = dst.gather(entry_dst, restored, 0)
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(np.asarray(got[name], np.float32),
+                                      np.asarray(want[name], np.float32))
+        assert got[name].dtype == want[name].dtype
+    # leaves with no block axis copy through restore untouched
+    np.testing.assert_array_equal(np.asarray(restored["meta"]),
+                                  np.asarray(cache_dst["meta"]))
+    # blocks the request does not own keep the target pool's prior contents
+    untouched = [b for b in range(nb_dst) if b not in set(blocks_dst)]
+    for name in ("k", "v"):
+        ax = 1 if name == "k" else 0
+        np.testing.assert_array_equal(
+            np.asarray(np.take(np.asarray(restored[name]), untouched,
+                               axis=ax), np.float32),
+            np.asarray(np.take(np.asarray(cache_dst[name]), untouched,
+                               axis=ax), np.float32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 4), st.integers(1, 8),
+       st.integers(0, 100), st.integers(0, 100), st.integers(0, 2**32 - 1),
+       st.data())
+def test_slot_state_roundtrip_across_slot_counts(s_src, s_dst, width,
+                                                 len_src, len_dst, seed,
+                                                 data):
+    """Slots sequence state: a row serialized from slot i of one cache
+    restores bitwise into slot j of a cache with a different slot count,
+    the shared ``length`` scalar rises to ``max(src, dst)`` (never drops —
+    decode masks by absolute position), and other slots' rows are
+    untouched."""
+    from repro.engine.state import SlotKVState
+
+    slot_src = data.draw(st.integers(0, s_src - 1))
+    slot_dst = data.draw(st.integers(0, s_dst - 1))
+    rng = np.random.default_rng(seed)
+
+    def template_fn():
+        return {"k": jnp.zeros((1, 3, width), jnp.bfloat16),
+                "v": jnp.zeros((1, width), jnp.float32),
+                "length": jnp.asarray(0, jnp.int32)}
+
+    def mk_cache(slots, length):
+        return {"k": _rand_bf16(rng, (slots, 3, width)),
+                "v": jnp.asarray(rng.standard_normal((slots, width)),
+                                 jnp.float32),
+                "length": jnp.asarray(length, jnp.int32)}
+
+    cache_src = mk_cache(s_src, len_src)
+    cache_dst = mk_cache(s_dst, len_dst)
+    buf = SlotKVState(s_src, template_fn).serialize(None, cache_src,
+                                                    slot_src)
+    restored = SlotKVState(s_dst, template_fn).restore(None, cache_dst,
+                                                       slot_dst, buf)
+
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(restored[name][slot_dst], np.float32),
+            np.asarray(cache_src[name][slot_src], np.float32))
+        assert restored[name].dtype == cache_dst[name].dtype
+        others = [s for s in range(s_dst) if s != slot_dst]
+        np.testing.assert_array_equal(
+            np.asarray(restored[name])[others].astype(np.float32),
+            np.asarray(cache_dst[name])[others].astype(np.float32))
+    assert int(restored["length"]) == max(len_src, len_dst)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 4), st.integers(2, 4), st.integers(1, 8),
+       st.integers(0, 2**32 - 1), st.data())
+def test_recurrent_state_restore_is_byte_twin_of_snapshot_resume(
+        s_src, s_dst, inner, seed, data):
+    """Recurrent sequence state: serialize->restore across caches with
+    different slot counts lands the same rows as the local snapshot-resume
+    path (evict -> init with ``entry.snapshot``) — a migrated request and
+    a requeued one are indistinguishable at the cache level. Non-zero
+    template init (the mLSTM ``m = -inf`` convention) must not bleed into
+    either path."""
+    from repro.models.kvcache import RecurrentState
+
+    slot_src = data.draw(st.integers(0, s_src - 1))
+    slot_dst = data.draw(st.integers(0, s_dst - 1))
+    rng = np.random.default_rng(seed)
+
+    def template_fn():
+        return {"h": jnp.zeros((1, inner), jnp.float32),
+                "conv": jnp.zeros((1, 4, inner), jnp.bfloat16),
+                "m": jnp.full((1,), -jnp.inf, jnp.float32)}
+
+    def mk_cache(slots):
+        return {"h": jnp.asarray(rng.standard_normal((slots, inner)),
+                                 jnp.float32),
+                "conv": _rand_bf16(rng, (slots, 4, inner)),
+                "m": jnp.asarray(rng.standard_normal((slots,)),
+                                 jnp.float32)}
+
+    cache_src = mk_cache(s_src)
+    cache_dst = mk_cache(s_dst)
+    src_state = RecurrentState(s_src, template_fn)
+    dst_state = RecurrentState(s_dst, template_fn)
+
+    buf = src_state.serialize(None, cache_src, slot_src)
+    restored = dst_state.restore(None, cache_dst, slot_dst, buf)
+
+    entry = SimpleNamespace(snapshot=None)
+    src_state.evict(entry, cache_src, slot_src)     # local snapshot path
+    resumed = dst_state.init(entry, cache_dst, slot_dst)
+
+    for name in ("h", "conv", "m"):
+        np.testing.assert_array_equal(np.asarray(restored[name], np.float32),
+                                      np.asarray(resumed[name], np.float32))
+        np.testing.assert_array_equal(
+            np.asarray(restored[name][slot_dst], np.float32),
+            np.asarray(cache_src[name][slot_src], np.float32))
+        others = [s for s in range(s_dst) if s != slot_dst]
+        np.testing.assert_array_equal(
+            np.asarray(restored[name])[others].astype(np.float32),
+            np.asarray(cache_dst[name])[others].astype(np.float32))
+    assert entry.snapshot is None                   # init consumed it
+    assert src_state.snapshots_taken == 1
+    assert dst_state.snapshots_restored == 1
+
+
 @settings(max_examples=20, deadline=None)
 @given(st.integers(1, 5), st.integers(0, 2**32 - 1))
 def test_state_bytes_rejects_shape_and_dtype_skew(inner, seed):

@@ -1,0 +1,258 @@
+"""Goodput under an increasingly noisy fabric — the ISSUE 9 acceptance
+benchmark.
+
+One fixed request set is served by a 2-replica router again and again,
+each cell under a different seeded ``FaultPlan``: frame fault rate
+{0.1, 0.3} crossed with fault mode {drop, corrupt, duplicate, reorder,
+mixed}, plus a replica-kill cell (mixed noise + one replica failed
+mid-run, its requests failed over). A deterministic migration schedule
+(one live handoff every few ticks) keeps ticket trains flowing through
+the noisy channel, so the fault rate actually bites.
+
+Per cell the bench records goodput (tok/s over the drain), p99 TTFT
+(handle-level first-token timestamps), and the recovery counters, and
+asserts the robustness contract:
+
+* every cell's outputs are **bitwise identical** to the noise-free
+  baseline cell — noise may cost time, never tokens;
+* no request is lost (``requests_failed`` stays empty);
+* every detected fault was answered by a retransmission (no retry
+  budget exhausted);
+* goodput degrades gracefully — each cell keeps at least
+  ``GOODPUT_FLOOR`` of baseline (no cliff to zero).
+
+Results land in the standardized ``BENCH_noise.json``: one block per
+cell with the degradation curve inputs (rate, mode, goodput ratio, p99
+TTFT, counters).
+
+  PYTHONPATH=src python -m benchmarks.bench_noise
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.cluster import (FaultInjector, FaultPlan, MigrationFailedError,
+                           Replica, Router)
+from repro.engine import Engine, Request
+from benchmarks.common import Row, emit, write_bench_json
+
+ARCH = "llama3.2-1b"
+N_REQ, PROMPT_LEN, MAX_NEW = 6, 8, 8
+SLOTS, MAX_LEN = 2, 32
+NUM_BLOCKS, BLOCK_SIZE, CHUNK = 16, 4, 4
+RATES = (0.1, 0.3)
+MODES = ("drop", "corrupt", "duplicate", "reorder", "mixed")
+KILL_TICK = 6
+MIGRATE_EVERY = 3        # one scheduled live handoff every N router ticks
+MAX_RETRIES = 12
+SNAPSHOT_EVERY = 2
+GOODPUT_FLOOR = 0.2      # each cell keeps >= 20% of baseline goodput
+
+
+def _kinds(mode: str):
+    return ("drop", "corrupt", "duplicate", "reorder") if mode == "mixed" \
+        else (mode,)
+
+
+def _requests(cfg, rid0: int) -> List[Request]:
+    reqs = []
+    for i in range(N_REQ):
+        rng = np.random.default_rng(100 + i)    # same prompts every cell
+        prompt = rng.integers(0, cfg.vocab_size,
+                              size=(PROMPT_LEN,)).astype(np.int32)
+        reqs.append(Request(rid0 + i, prompt, max_new_tokens=MAX_NEW))
+    return reqs
+
+
+def _mk_engines(cfg, run, mesh) -> List[Engine]:
+    engines = []
+    with mesh:
+        for tag in ("a", "b"):
+            e = Engine(cfg, run, mesh, cache="paged", slots=SLOTS,
+                       max_len=MAX_LEN, num_blocks=NUM_BLOCKS,
+                       block_size=BLOCK_SIZE, chunk=CHUNK,
+                       engine_id=f"noise-{tag}", placement="auto")
+            e.inject_params(engines[0].params if engines else None)
+            engines.append(e)
+    return engines
+
+
+def _run_cell(engines, mesh, cfg, rid0: int, *,
+              plan: Optional[FaultPlan]) -> Dict[str, Any]:
+    """Serve the fixed request set once; returns outputs + timings +
+    recovery counters. Engines are restarted (process-image kept, all
+    request state dropped) so every cell starts from the same state."""
+    for e in engines:
+        e.restart()
+    router = Router([Replica(e, model=ARCH) for e in engines],
+                    max_retries=MAX_RETRIES, retry_backoff_s=0.0,
+                    snapshot_every=SNAPSHOT_EVERY)
+    injector = FaultInjector(plan).install(router) if plan else None
+    reqs = _requests(cfg, rid0)
+    ttft: Dict[int, float] = {}
+    with mesh:
+        t0 = time.perf_counter()
+        handles = {}
+        for req in reqs:
+            h = router.submit(req, model=ARCH)
+            h.on_token(lambda tok, i, rid=req.rid:
+                       ttft.setdefault(rid, time.perf_counter() - t0)
+                       if i == 0 else None)
+            handles[req.rid] = h
+        while router.pending():
+            router.tick()
+            if router.tick_no % MIGRATE_EVERY:
+                continue
+            # deterministic churn: move the lowest unfinished rid to its
+            # peer so ticket trains keep crossing the noisy channel
+            live = [r for r in router.replicas if not r.failed]
+            if len(live) < 2:
+                continue
+            for rid in sorted(handles):
+                h = handles[rid]
+                if h.done or router.request_failure(rid) is not None:
+                    continue
+                src = router._table[rid]
+                dst = next(r.engine_id for r in live
+                           if r.engine_id != src)
+                try:
+                    router.migrate(rid, dst, reason="bench churn")
+                except MigrationFailedError:
+                    pass                 # rolled back; counters keep it
+                break
+        wall = time.perf_counter() - t0
+    m = router.metrics()
+    outputs = {rid: list(h.req.out_tokens) for rid, h in handles.items()}
+    tokens = sum(len(t) for t in outputs.values())
+    lat = sorted(ttft.values())
+    return {
+        "outputs": outputs,
+        "tokens": tokens,
+        "wall_s": wall,
+        "goodput_tok_s": tokens / wall,
+        "ttft_p50_s": lat[len(lat) // 2] if lat else 0.0,
+        "ttft_p99_s": lat[min(len(lat) - 1, int(len(lat) * 0.99))]
+        if lat else 0.0,
+        "migrations": len(router.migrations),
+        "faults": m["faults"],
+        "injected_counters": dict(injector.counters) if injector else {},
+    }
+
+
+def main() -> List[Row]:
+    cfg = get_smoke(ARCH)
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False,
+                                            seq_axis=None))
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    engines = _mk_engines(cfg, run, mesh)
+
+    # warmup: compile prefill/decode/handoff paths outside every timing
+    _run_cell(engines, mesh, cfg, 9000, plan=None)
+
+    baseline = _run_cell(engines, mesh, cfg, 0, plan=None)
+    assert baseline["faults"]["requests_failed"] == {}
+    assert baseline["migrations"] >= 1, "churn schedule produced no handoffs"
+
+    cells: List[Dict[str, Any]] = []
+    rows = [Row("baseline", baseline["wall_s"] * 1e6,
+                f"{baseline['goodput_tok_s']:.1f}tok/s "
+                f"migrations={baseline['migrations']}")]
+    rid0 = 1000
+    sweep = [(rate, mode, None) for rate in RATES for mode in MODES]
+    sweep.append((0.1, "mixed", "noise-a"))       # replica-kill cell
+    for rate, mode, kill in sweep:
+        plan = FaultPlan(seed=int(rate * 100) * 101 + len(mode),
+                         frame_fault_rate=rate, fault_kinds=_kinds(mode),
+                         kill_at={kill: KILL_TICK} if kill else {})
+        cell_rid0 = rid0
+        cell = _run_cell(engines, mesh, cfg, cell_rid0, plan=plan)
+        rid0 += 100
+        f = cell["faults"]
+        label = f"{mode}@{rate:g}" + ("+kill" if kill else "")
+
+        # the robustness contract, cell by cell
+        assert f["requests_failed"] == {}, (
+            f"[{label}] lost requests: {f['requests_failed']}")
+        for rid, toks in cell["outputs"].items():
+            base = baseline["outputs"][rid - cell_rid0]
+            assert toks == base, (
+                f"[{label}] rid {rid} diverged from the noise-free run")
+        assert f["detected"] == f["retransmits"], (
+            f"[{label}] a handoff exhausted its retry budget: "
+            f"{f['detected']} detected vs {f['retransmits']} retransmits")
+        if kill:
+            assert f["failovers"] == 1 and f["requests_recovered"] >= 1, (
+                f"[{label}] kill cell did not fail over: {f}")
+
+        ratio = cell["goodput_tok_s"] / baseline["goodput_tok_s"]
+        assert ratio >= GOODPUT_FLOOR, (
+            f"[{label}] goodput cliff: {ratio:.2f} of baseline "
+            f"(floor {GOODPUT_FLOOR})")
+        cells.append({
+            "mode": mode, "rate": rate, "kill": kill,
+            "goodput_tok_s": cell["goodput_tok_s"],
+            "goodput_ratio": ratio,
+            "wall_s": cell["wall_s"],
+            "ttft_p50_s": cell["ttft_p50_s"],
+            "ttft_p99_s": cell["ttft_p99_s"],
+            "ttft_p99_ratio": cell["ttft_p99_s"]
+            / max(baseline["ttft_p99_s"], 1e-9),
+            "migrations": cell["migrations"],
+            "injected": cell["faults"]["injected"],
+            "detected": cell["faults"]["detected"],
+            "retransmits": cell["faults"]["retransmits"],
+            "failovers": cell["faults"]["failovers"],
+            "requests_recovered": cell["faults"]["requests_recovered"],
+            "snapshots_taken": cell["faults"]["snapshots_taken"],
+            "outputs_identical": True,
+        })
+        rows.append(Row(
+            label, cell["wall_s"] * 1e6,
+            f"{cell['goodput_tok_s']:.1f}tok/s ratio={ratio:.2f} "
+            f"detected={f['detected']} retx={f['retransmits']} "
+            f"failover={f['failovers']}"))
+
+    # the sweep as a whole must have exercised the machinery
+    assert any(c["detected"] > 0 for c in cells), \
+        "no cell detected a single fault — the sweep is vacuous"
+    assert any(c["failovers"] == 1 for c in cells)
+
+    emit(rows)
+    worst = min(c["goodput_ratio"] for c in cells)
+    print(f"# cells={len(cells)} worst_goodput_ratio={worst:.2f} "
+          f"outputs identical everywhere")
+
+    write_bench_json(
+        "noise",
+        config={
+            "arch": ARCH, "replicas": 2, "slots": SLOTS,
+            "max_len": MAX_LEN, "num_blocks": NUM_BLOCKS,
+            "block_size": BLOCK_SIZE, "chunk": CHUNK,
+            "requests": {"n": N_REQ, "prompt_len": PROMPT_LEN,
+                         "max_new": MAX_NEW},
+            "rates": list(RATES), "modes": list(MODES),
+            "kill_tick": KILL_TICK, "migrate_every": MIGRATE_EVERY,
+            "max_retries": MAX_RETRIES, "snapshot_every": SNAPSHOT_EVERY,
+            "goodput_floor": GOODPUT_FLOOR,
+        },
+        rows=rows,
+        extra_metrics={
+            "baseline": {k: baseline[k] for k in
+                         ("tokens", "wall_s", "goodput_tok_s",
+                          "ttft_p50_s", "ttft_p99_s", "migrations")},
+            "cells": cells,
+            "worst_goodput_ratio": worst,
+            "outputs_identical": True,
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    main()

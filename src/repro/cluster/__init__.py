@@ -19,3 +19,6 @@ from repro.cluster.handoff import (  # noqa: F401
 from repro.cluster.policy import (  # noqa: F401
     MigrateOnOversubscription, MigrationPlan, RebalancePolicy)
 from repro.cluster.router import ClusterHandle, Replica, Router  # noqa: F401
+from repro.faults import (  # noqa: F401 — re-exported: the cluster's chaos
+    EngineFailedError, FaultInjector, FaultPlan,  # + recovery vocabulary
+    MigrationFailedError, RequestFailedError)

@@ -26,7 +26,8 @@ from typing import List, Sequence
 import numpy as np
 
 from repro.core.message import (FLAG_INJECTED, HDR_ELEM_ID, HDR_FLAGS,
-                                HDR_FUNC_ID, HDR_SEQ_NO, FrameSpec,
+                                HDR_FUNC_ID, HDR_PAYLOAD_WORDS, HDR_SEQ_NO,
+                                HDR_SRC_RANK, HDR_STATE_WORDS, FrameSpec,
                                 frame_valid, pack_frame)
 from repro.engine.engine import MigrationTicket
 
@@ -63,7 +64,9 @@ def encode_handoff(ticket: MigrationTicket) -> List[np.ndarray]:
 
     pw = HANDOFF_SPEC.payload_words
     n_frames = max(1, -(-len(words) // pw))
-    flags = FLAG_INJECTED if ticket.state is not None else 0
+    # state is normalized to b"" above, so FLAG_INJECTED is keyed on
+    # *carrying bytes* — an empty state buffer rides (and restores) as None
+    flags = FLAG_INJECTED if state else 0
     frames = []
     for i in range(n_frames):
         chunk = words[i * pw:(i + 1) * pw]
@@ -81,9 +84,11 @@ def decode_handoff(frames: Sequence[np.ndarray]) -> MigrationTicket:
     """Validate + reassemble a frame train back into a ticket."""
     if not frames:
         raise ValueError("empty handoff: no frames to decode")
-    o_usr = HANDOFF_SPEC.offsets()["usr"]
+    offs = HANDOFF_SPEC.offsets()
+    o_usr = offs["usr"]
     pw = HANDOFF_SPEC.payload_words
     chunks = []
+    train_flags = None
     for i, frame in enumerate(frames):
         arr = np.asarray(frame)
         if arr.shape != (HANDOFF_SPEC.total_words,):
@@ -106,6 +111,39 @@ def decode_handoff(frames: Sequence[np.ndarray]) -> MigrationTicket:
             raise ValueError(
                 f"handoff frame {i}: train length {int(arr[HDR_SEQ_NO])} "
                 f"!= {len(frames)} frames received (truncated handoff)")
+        # The SIG checksum only covers USR payload words, so every other
+        # word gets an explicit check — together they make ANY single-bit
+        # flip in a frame a detected fault, never a silent import.
+        if int(arr[HDR_PAYLOAD_WORDS]) != pw:
+            raise ValueError(
+                f"handoff frame {i}: payload_words="
+                f"{int(arr[HDR_PAYLOAD_WORDS])} != spec {pw}")
+        if int(arr[HDR_STATE_WORDS]) != HANDOFF_SPEC.state_words:
+            raise ValueError(
+                f"handoff frame {i}: state_words="
+                f"{int(arr[HDR_STATE_WORDS])} != spec "
+                f"{HANDOFF_SPEC.state_words}")
+        if int(arr[HDR_SRC_RANK]) != 0:
+            raise ValueError(
+                f"handoff frame {i}: src_rank={int(arr[HDR_SRC_RANK])} "
+                f"(handoff trains ride the in-process lane: rank 0)")
+        flags = int(arr[HDR_FLAGS])
+        if flags not in (0, FLAG_INJECTED):
+            raise ValueError(
+                f"handoff frame {i}: unexpected flags {flags:#x}")
+        if train_flags is None:
+            train_flags = flags
+        elif flags != train_flags:
+            raise ValueError(
+                f"handoff frame {i}: flags {flags:#x} differ from the "
+                f"rest of the train ({train_flags:#x})")
+        if np.any(arr[offs["got"]:offs["state"]] != 0):
+            raise ValueError(
+                f"handoff frame {i}: non-zero GOT words (corrupt frame)")
+        if np.any(arr[offs["sig"] + 2:] != 0):
+            raise ValueError(
+                f"handoff frame {i}: non-zero alignment padding "
+                f"(corrupt frame)")
         chunks.append(arr[o_usr:o_usr + pw])
     blob = np.concatenate(chunks).astype("<i4").tobytes()
     meta_len, state_len = _PREFIX.unpack_from(blob)
@@ -116,8 +154,7 @@ def decode_handoff(frames: Sequence[np.ndarray]) -> MigrationTicket:
     meta = json.loads(blob[_PREFIX.size:_PREFIX.size + meta_len])
     off = _PREFIX.size + meta_len
     state = blob[off:off + state_len] if state_len else None
-    has_state = any(int(np.asarray(f)[HDR_FLAGS]) & FLAG_INJECTED
-                    for f in frames)
+    has_state = bool(train_flags & FLAG_INJECTED)
     if has_state != (state is not None):
         raise ValueError("handoff FLAG_INJECTED disagrees with the "
                          "declared state length")

@@ -66,8 +66,8 @@ class MigrateOnOversubscription:
         plans: List[MigrationPlan] = []
         claimed: dict = {}              # headroom already promised this round
         for src in router.replicas:
-            if src.draining:
-                continue                # drain() owns its requests' moves
+            if src.draining or src.failed:
+                continue                # drain()/failover own those moves
             queued = router.queued_rids(src.engine_id)
             excess = len(queued) - self.max_queue
             for rid in reversed(queued):

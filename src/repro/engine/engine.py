@@ -39,7 +39,7 @@ import dataclasses
 import itertools
 import time
 import warnings
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +54,7 @@ from repro.engine.scheduler import (SchedulerPolicy, SchedulerState,
 from repro.engine.state import (BlockPool, PagedKVState, RecurrentState,
                                 SequenceState, SlotKVState)
 from repro.engine.stream import RequestHandle
+from repro.faults.errors import EngineFailedError
 from repro.models import model as model_lib
 from repro.models.kvcache import state_to_bytes
 from repro.runtime.steps import (make_paged_serve_step,
@@ -218,6 +219,14 @@ class Engine:
         self._placements: Dict[str, str] = {}
         self._pending_pump: List[_Entry] = []
         self._params_nbytes_memo: Optional[int] = None
+        # chaos/recovery surface (repro.faults): a failed engine refuses
+        # tick/submit/export until restart(); fault_hook fires between
+        # placement resolution and step execution (the lease-race window);
+        # lease_fallbacks counts auto→injected resolutions demoted to
+        # local because the params lease expired inside that window
+        self.failed_reason: Optional[str] = None
+        self.fault_hook: Optional[Callable[[str], None]] = None
+        self.lease_fallbacks = 0
 
         run_decode = dataclasses.replace(
             run, shape=dataclasses.replace(run.shape, kind="decode",
@@ -269,16 +278,7 @@ class Engine:
         self._cache_shard = self.bundle.in_shardings[1]
 
         # --- sequence-state backend (the SequenceState protocol seam) ---
-        template_fn = lambda: jax.jit(
-            lambda: model_lib.init_cache(self.cfg, 1, self.max_len))()
-        if cache == "paged":
-            self.state: SequenceState = PagedKVState(num_blocks, block_size)
-            self.pool = self.state.pool
-        elif cache == "recurrent":
-            place = lambda t: jax.device_put(t, self._cache_shard)
-            self.state = RecurrentState(slots, template_fn, place=place)
-        else:
-            self.state = SlotKVState(slots, template_fn)
+        self._make_state()
         if not self.state.supports_preemption:
             pv = getattr(type(self.policy), "pick_victim", None)
             if pv is not None and pv is not _PolicyBase.pick_victim:
@@ -292,6 +292,22 @@ class Engine:
             cfg, run_decode, mesh)
         self._params_lease = f"{self._step_name}.params"
         self._register_fabric_steps()
+
+    def _make_state(self) -> None:
+        """(Re)build the sequence-state backend empty — shared by
+        ``__init__`` and ``restart()`` (a restarted replica rejoins with a
+        fresh pool, no surviving request state)."""
+        template_fn = lambda: jax.jit(
+            lambda: model_lib.init_cache(self.cfg, 1, self.max_len))()
+        if self.cache_kind == "paged":
+            self.state: SequenceState = PagedKVState(self.num_blocks,
+                                                     self.block_size)
+            self.pool = self.state.pool
+        elif self.cache_kind == "recurrent":
+            place = lambda t: jax.device_put(t, self._cache_shard)
+            self.state = RecurrentState(self.slots, template_fn, place=place)
+        else:
+            self.state = SlotKVState(self.slots, template_fn)
 
     # ------------------------------------------------------------------
     # fabric registration / invocation — the one seam
@@ -328,10 +344,9 @@ class Engine:
         lease_name = self._params_lease
 
         def invoke_step(payload, state, placement):
-            if placement == "auto":
-                placement = self._resolve_auto(
-                    self._step_name, self._tick_payload_bytes(payload[1:]),
-                    state)
+            placement = self._guarded_placement(
+                self._step_name, self._tick_payload_bytes(payload[1:]),
+                state, placement)
             if placement == "injected":
                 fabric.lease(lease_name, jax.tree.leaves(state))
             self._placements[self._step_name] = placement
@@ -342,10 +357,9 @@ class Engine:
         self._placements[self._step_name] = self.placement
         if self.cache_kind == "slots":
             def invoke_prefill(payload, state, placement):
-                if placement == "auto":
-                    placement = self._resolve_auto(
-                        "engine.prefill",
-                        self._tick_payload_bytes((payload,)), state)
+                placement = self._guarded_placement(
+                    "engine.prefill", self._tick_payload_bytes((payload,)),
+                    state, placement)
                 if placement == "injected":
                     fabric.lease(lease_name, jax.tree.leaves(state))
                 self._placements["engine.prefill"] = placement
@@ -414,6 +428,28 @@ class Engine:
         self.fabric.record_decision(name, est)
         return est.chosen
 
+    def _guarded_placement(self, name: str, payload_bytes: int, state,
+                           placement: str) -> str:
+        """Resolve ``"auto"`` and close the lease-expiry race: the params
+        lease can expire (TTL, eviction, an injected storm) *between*
+        placement resolution and step execution — ``fault_hook`` fires in
+        exactly that window. An auto resolution of ``injected`` was
+        premised on warm reuse shipping zero bytes, so if the lease went
+        cold underneath it the call falls back to ``local`` (counted in
+        ``lease_fallbacks``) instead of silently re-shipping the whole
+        weight tree — or erroring. An *explicit* ``placement="injected"``
+        is untouched: re-acquiring on a cold lease IS the injection."""
+        requested = placement
+        if placement == "auto":
+            placement = self._resolve_auto(name, payload_bytes, state)
+        if self.fault_hook is not None:
+            self.fault_hook(name)
+        if (requested == "auto" and placement == "injected"
+                and not self._lease_warm(state)):
+            self.lease_fallbacks += 1
+            placement = "local"
+        return placement
+
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
@@ -439,6 +475,41 @@ class Engine:
         if self.fabric is not None:
             self.fabric.lease(self._params_lease,
                               jax.tree.leaves(self.params))
+
+    # -- failure lifecycle (the replica side of cluster failover) ---------
+
+    @property
+    def alive(self) -> bool:
+        return self.failed_reason is None
+
+    def fail(self, reason: str = "injected failure") -> None:
+        """Put the engine into the failed state: every subsequent tick /
+        submit / export / import / snapshot raises ``EngineFailedError``
+        until ``restart()``. Host-side bookkeeping (metrics, completed
+        requests) stays readable — a dead process's logs survive it."""
+        self.failed_reason = reason
+
+    def restart(self) -> None:
+        """Simulate a process restart: clear the failure flag and abandon
+        ALL request state — queue, slots, pool blocks, stream handles —
+        so the replica rejoins empty (a real restarted process holds no
+        sequence state; the router has already recovered its requests
+        elsewhere). Params and compiled steps survive: they are
+        process-image, not request state."""
+        self.failed_reason = None
+        for entry in self._entries_everywhere():
+            entry.handle = None
+        self.queue.clear()
+        self.slot_entry = [None] * self.slots
+        self._pending_pump.clear()
+        self._make_state()
+        if self.params is not None:
+            self.cache = self._fresh_cache()
+
+    def _check_alive(self, what: str) -> None:
+        if self.failed_reason is not None:
+            raise EngineFailedError(
+                self.engine_id, f"{self.failed_reason} (refusing {what})")
 
     def _fresh_cache(self) -> PyTree:
         if self.cache_kind == "paged":
@@ -467,6 +538,7 @@ class Engine:
 
     def submit(self, req: Request) -> RequestHandle:
         """Queue a request; returns its streaming ``RequestHandle``."""
+        self._check_alive("submit")
         # reject up front what could never finish: past this check a
         # request's sequence always fits the backend's capacity model
         # (for paged: max_blocks_per_seq blocks, so the block table row
@@ -539,6 +611,7 @@ class Engine:
     def tick(self) -> int:
         """Admit + advance every active request one step. Returns the
         number of rows advanced."""
+        self._check_alive("tick")
         if self.cache_kind == "slots":
             return self._tick_slots()
         return self._tick_chunked()
@@ -571,7 +644,15 @@ class Engine:
         scatter the slot row into the live batched cache.
         """
         req = entry.req
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # Recovery recompute (failover rebuilt this request from prompt +
+        # already-delivered tokens, no state bytes): re-run everything
+        # known except the newest token — the next decode tick feeds it
+        # back exactly like any resident row — and emit nothing, because
+        # every known token was already delivered upstream. Fresh requests
+        # (no out_tokens) keep the original prompt-only + argmax path.
+        known = entry.seq()
+        tokens = known[:-1] if req.out_tokens else known
+        prompt = jnp.asarray(tokens, jnp.int32)[None, :]
         fabric = self.fabric
         if fabric is None:              # pragma: no cover - guard only
             one_cache = model_lib.init_cache(self.cfg, 1, self.max_len)
@@ -581,7 +662,8 @@ class Engine:
             logits, filled, _ = fabric.call("engine.prefill", prompt,
                                             state=self.params,
                                             placement="local")
-        self._emit(entry, int(jnp.argmax(logits[0, -1, :])))
+        if not req.out_tokens:
+            self._emit(entry, int(jnp.argmax(logits[0, -1, :])))
 
         def scatter(live, one):
             # Cache leaves may carry a leading layer-stack dim
@@ -826,6 +908,7 @@ class Engine:
         greedy output bitwise identical to never having moved. Raises
         ``KeyError`` for unknown or finished rids (a finished request has
         nothing left to move)."""
+        self._check_alive("export_request")
         for slot in range(self.slots):
             entry = self.slot_entry[slot]
             if entry is not None and entry.req.rid == rid:
@@ -865,17 +948,62 @@ class Engine:
             buf = state_to_bytes(entry.snapshot)
             pos = entry.pos
         self.state.release(entry)
-        ticket = MigrationTicket(
-            rid=req.rid, cache_kind=self.cache_kind, priority=req.priority,
-            max_new_tokens=req.max_new_tokens,
-            prompt=list(entry.prompt_tokens),
-            out_tokens=list(req.out_tokens), pos=pos, state=buf)
+        ticket = self._ticket_for(entry, buf, pos)
         # detach the local stream: the source-side handle must not see
         # tokens the target produces (the router rebinds its own handle)
         entry.handle = None
         self._pending_pump = [e for e in self._pending_pump if e is not entry]
         self.migrations_out += 1
         return ticket
+
+    def _ticket_for(self, entry: _Entry, buf: Optional[bytes],
+                    pos: int) -> MigrationTicket:
+        req = entry.req
+        return MigrationTicket(
+            rid=req.rid, cache_kind=self.cache_kind, priority=req.priority,
+            max_new_tokens=req.max_new_tokens,
+            prompt=list(entry.prompt_tokens),
+            out_tokens=list(req.out_tokens), pos=pos, state=buf)
+
+    def snapshot_request(self, rid: int) -> MigrationTicket:
+        """Non-destructive twin of ``export_request``: serialize ``rid``'s
+        sequence state into a ``MigrationTicket`` *without* releasing
+        anything — the request keeps running here, slot and blocks intact.
+        A router takes these periodically (its snapshot cadence) so that
+        when this replica dies, the request restores on a peer from the
+        last snapshot — regenerating only the tokens emitted since — in
+        place of a full from-scratch recompute. Raises ``KeyError`` for
+        unknown or finished rids."""
+        self._check_alive("snapshot_request")
+        for slot in range(self.slots):
+            entry = self.slot_entry[slot]
+            if entry is None or entry.req.rid != rid:
+                continue
+            buf: Optional[bytes] = None
+            pos = 0
+            if self.cache_kind == "slots":
+                # same coverage rule as export: everything but the newest
+                # token (not yet fed back through the step)
+                buf = self.state.serialize(entry, self.cache, slot)
+                pos = (len(entry.prompt_tokens)
+                       + max(0, len(entry.req.out_tokens) - 1))
+            elif entry.pos > 0:
+                buf = self.state.serialize(entry, self.cache, slot)
+                pos = entry.pos
+            return self._ticket_for(entry, buf, pos)
+        for entry in self.queue:
+            if entry.req.rid != rid:
+                continue
+            if entry.inbound is not None:
+                return self._ticket_for(entry, entry.inbound, entry.pos)
+            if (self.cache_kind == "recurrent"
+                    and entry.snapshot is not None):
+                return self._ticket_for(entry, state_to_bytes(entry.snapshot),
+                                        entry.pos)
+            return self._ticket_for(entry, None, 0)
+        raise KeyError(
+            f"request {rid} is not queued or running on {self.engine_id} "
+            f"(finished requests have no state to snapshot)")
 
     def import_request(self, ticket: MigrationTicket) -> RequestHandle:
         """Admit a migrated request. The rebuilt entry enters the queue
@@ -887,6 +1015,7 @@ class Engine:
         chunk policy is deterministic). Tickets from a different backend
         are rejected: the state bytes are only meaningful to their own
         ``cache_kind``."""
+        self._check_alive("import_request")
         if ticket.cache_kind != self.cache_kind:
             raise ValueError(
                 f"cannot import a cache_kind={ticket.cache_kind!r} ticket "
@@ -952,6 +1081,7 @@ class Engine:
         if self.fabric is not None:
             fm = self.fabric.metrics()
             fm["placements"] = dict(self._placements)
+            fm["lease_fallbacks"] = self.lease_fallbacks
             out["fabric"] = fm
         return out
 
@@ -977,6 +1107,7 @@ class Engine:
                 "slots": self.slots,
                 "max_len": self.max_len,
                 "placement": self.placement,
+                "failed_reason": self.failed_reason,
             },
             "ticks": self.ticks,
             "active_slots": sum(e is not None for e in self.slot_entry),

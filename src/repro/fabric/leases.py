@@ -71,6 +71,10 @@ class LeasePool:
         self._leases: Dict[str, Lease] = {}
         self._on_hit = on_hit or (lambda: None)
         self._on_miss = on_miss or (lambda: None)
+        # chaos seam (repro.faults): called with the lease name at the top
+        # of every acquire, so an injector can force expiry storms without
+        # touching any call site
+        self.fault_hook: Optional[Callable[[str], None]] = None
 
     def acquire(self, name: str, state: Sequence[Any], *,
                 ttl_calls: Optional[int] = None,
@@ -86,6 +90,8 @@ class LeasePool:
         if ttl_calls is not None and ttl_calls < 1:
             raise ValueError(f"lease {name!r}: ttl_calls must be >= 1 or "
                              f"None, got {ttl_calls}")
+        if self.fault_hook is not None:
+            self.fault_hook(name)
         key = tuple(state)
         lease = self._leases.get(name)
         if lease is None:

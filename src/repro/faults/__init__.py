@@ -1,0 +1,20 @@
+"""repro.faults — deterministic fault injection + typed failure errors.
+
+The chaos layer for the cluster: seeded :class:`FaultPlan` /
+:class:`FaultInjector` (frame perturbation, replica kills, lease-expiry
+storms) and the typed errors the recovery paths raise. See
+``docs/robustness.md``.
+"""
+
+from repro.faults.errors import (EngineFailedError, MigrationFailedError,
+                                 RequestFailedError)
+from repro.faults.injector import FAULT_KINDS, FaultInjector, FaultPlan
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultPlan",
+    "FaultInjector",
+    "EngineFailedError",
+    "MigrationFailedError",
+    "RequestFailedError",
+]

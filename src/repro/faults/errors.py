@@ -1,0 +1,63 @@
+"""Typed failure vocabulary for the chaos/recovery layer.
+
+These exceptions are deliberately dependency-free so every layer can
+import them without cycles: ``repro.engine`` raises
+:class:`EngineFailedError` from its tick/submit guards, ``repro.cluster``
+raises :class:`MigrationFailedError` (after rolling the request back)
+and :class:`RequestFailedError` (from ``ClusterHandle`` once a request
+is terminally lost), and callers catch them without knowing which layer
+produced the fault.
+
+All three derive from :class:`RuntimeError` so pre-existing code that
+catches ``RuntimeError`` keeps working.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "EngineFailedError",
+    "MigrationFailedError",
+    "RequestFailedError",
+]
+
+
+class EngineFailedError(RuntimeError):
+    """An Engine is in the failed state (``Engine.fail()`` was called or a
+    fault killed it); ticking/submitting/exporting against it is refused
+    until ``Engine.restart()``."""
+
+    def __init__(self, engine_id: str, reason: str):
+        self.engine_id = engine_id
+        self.reason = reason
+        super().__init__(f"engine {engine_id} has failed: {reason}")
+
+
+class MigrationFailedError(RuntimeError):
+    """A migration could not be completed.
+
+    Raised by ``Router.migrate`` only *after* the two-phase protocol has
+    rolled the request back onto the source replica (or, when the source
+    itself is dead, left it to the failover path) — so catching this
+    error never means a lost request. ``rolled_back`` records whether the
+    request is live again on the source."""
+
+    def __init__(self, rid: int, reason: str, *, rolled_back: bool = True):
+        self.rid = rid
+        self.reason = reason
+        self.rolled_back = rolled_back
+        tail = "request restored on source" if rolled_back else \
+            "request NOT restored (source dead)"
+        super().__init__(f"migration of rid {rid} failed: {reason} ({tail})")
+
+
+class RequestFailedError(RuntimeError):
+    """A request reached a terminal failure state in the cluster — its
+    replica died with no compatible peer to recover onto, or recovery
+    itself exhausted retransmits. Raised by ``ClusterHandle.tokens()`` /
+    ``result()`` instead of a silent max-ticks stall; the reason is also
+    recorded under ``Router.metrics()["faults"]["requests_failed"]``."""
+
+    def __init__(self, rid: int, reason: str):
+        self.rid = rid
+        self.reason = reason
+        super().__init__(f"request {rid} failed: {reason}")

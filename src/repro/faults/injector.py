@@ -1,0 +1,211 @@
+"""Deterministic chaos: seeded fault plans for the cluster fabric.
+
+Two-Chains' headline claim is noise *tolerance* — so this module is the
+noise. A :class:`FaultPlan` declares what goes wrong (frame perturbation
+rate and kinds, replica kills at a given router tick, lease-expiry
+storms) and a :class:`FaultInjector` executes it deterministically from
+one seed: the same plan + seed always perturbs the same frames in the
+same way, which is what lets the chaos tests assert *bitwise* output
+identity against the undisturbed run.
+
+The injector installs on a ``Router`` (or a bare ``Fabric``) without
+touching any call site:
+
+* ``Router.install_faults(injector)`` wires ``perturb_train`` into the
+  handoff channel (every migration/failover train passes through it) and
+  ``on_tick`` into the router clock (kills + storm arming).
+* On a ``Fabric``, installation hooks the lease pool so every k-th
+  ``acquire`` is preceded by a forced eviction — an expiry storm visible
+  in the existing lease metrics.
+* Each replica engine gets its ``fault_hook`` set, firing *between*
+  placement resolution and step execution — the exact window of the
+  lease-expiry race the engine's cold-fallback guard covers.
+
+Every injected fault is appended to ``injector.events`` (kind, tick,
+rid/engine, frame index) and rolled up in ``injector.counters``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Mapping, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["FaultPlan", "FaultInjector", "FAULT_KINDS"]
+
+FAULT_KINDS = ("drop", "corrupt", "duplicate", "reorder")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Declarative, seedable description of what the noise does.
+
+    ``frame_fault_rate`` is the per-frame probability that a handoff
+    frame is perturbed (kind drawn uniformly from ``fault_kinds``).
+    ``kill_at`` maps ``engine_id -> router tick``: the engine is failed
+    at the *start* of that tick, before any replica steps, so the kill
+    point is deterministic. ``lease_storm_ticks`` arms the engine-side
+    fault hook for those ticks (params lease evicted between placement
+    resolution and execution); ``lease_storm_every`` is the fabric-level
+    variant (evict before every k-th ``LeasePool.acquire``).
+    """
+
+    seed: int = 0
+    frame_fault_rate: float = 0.0
+    fault_kinds: Tuple[str, ...] = FAULT_KINDS
+    kill_at: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    lease_storm_ticks: Tuple[int, ...] = ()
+    lease_storm_every: int = 0
+
+    def __post_init__(self):
+        bad = set(self.fault_kinds) - set(FAULT_KINDS)
+        if bad:
+            raise ValueError(f"unknown fault kinds {sorted(bad)}; "
+                             f"choose from {FAULT_KINDS}")
+        if not 0.0 <= self.frame_fault_rate <= 1.0:
+            raise ValueError(
+                f"frame_fault_rate {self.frame_fault_rate} not in [0, 1]")
+
+
+class FaultInjector:
+    """Executes a :class:`FaultPlan` deterministically.
+
+    Install with ``injector.install(router_or_fabric)``; every fault it
+    injects is logged in ``events`` and counted in ``counters``.
+    """
+
+    def __init__(self, plan: FaultPlan):
+        self.plan = plan
+        self.rng = np.random.default_rng(plan.seed)
+        self.events: List[Dict[str, Any]] = []
+        self.counters: Dict[str, int] = {k: 0 for k in FAULT_KINDS}
+        self.counters.update(trains_perturbed=0, kills=0, lease_storms=0)
+        self._tick = 0                # last router tick seen by on_tick
+        self._storm_armed = False
+        self._acquires = 0
+
+    # ------------------------------------------------------------------
+    # installation
+    # ------------------------------------------------------------------
+
+    def install(self, target: Any) -> "FaultInjector":
+        """Install on a ``Router`` or a ``Fabric`` without touching call
+        sites; returns ``self`` for chaining."""
+        if hasattr(target, "install_faults"):        # Router
+            target.install_faults(self)
+        elif hasattr(target, "leases"):              # Fabric
+            target.leases.fault_hook = self._lease_acquire_hook(target)
+        else:
+            raise TypeError(
+                f"cannot install faults on {type(target).__name__}: "
+                f"expected a Router or a Fabric")
+        return self
+
+    def engine_hook(self, engine: Any):
+        """Build the per-engine ``fault_hook`` (fires between placement
+        resolution and step execution)."""
+        def hook(step_name: str) -> None:
+            if not self._storm_armed:
+                return
+            lease = getattr(engine, "_params_lease", None)
+            if lease and engine.fabric.leases.get(lease) is not None:
+                engine.fabric.evict(lease)
+                self.record("lease_storm", tick=self._tick,
+                            engine=engine.engine_id, step=step_name)
+        return hook
+
+    def _lease_acquire_hook(self, fabric: Any):
+        every = self.plan.lease_storm_every
+        def hook(name: str) -> None:
+            self._acquires += 1
+            if every and self._acquires % every == 0:
+                if fabric.leases.get(name) is not None:
+                    fabric.evict(name)
+                    self.record("lease_storm", acquire=self._acquires,
+                                lease=name)
+        return hook
+
+    # ------------------------------------------------------------------
+    # the plan, executed
+    # ------------------------------------------------------------------
+
+    def on_tick(self, router: Any, tick: int) -> None:
+        """Router clock callback: kill scheduled replicas, arm storms."""
+        self._tick = tick
+        self._storm_armed = tick in self.plan.lease_storm_ticks
+        for engine_id, kill_tick in self.plan.kill_at.items():
+            if tick != kill_tick:
+                continue
+            rep = router.replica(engine_id)
+            if rep is None or rep.failed or not rep.engine.alive:
+                continue
+            rep.engine.fail(f"injected kill at router tick {tick}")
+            self.record("kill", tick=tick, engine=engine_id)
+
+    def perturb_train(self, frames: Sequence[np.ndarray], *, rid: int,
+                      attempt: int = 0) -> List[np.ndarray]:
+        """Return a (possibly) perturbed copy of a handoff frame train.
+
+        Per frame, with probability ``frame_fault_rate``, applies one of:
+        ``drop`` (frame vanishes), ``corrupt`` (one bit flips),
+        ``duplicate`` (frame arrives twice), ``reorder`` (frame swaps
+        with its predecessor; degrades to ``duplicate`` for the first
+        frame). The input frames are never mutated."""
+        rate = self.plan.frame_fault_rate
+        if not rate:
+            return list(frames)
+        out: List[np.ndarray] = []
+        touched = 0
+        for i, frame in enumerate(frames):
+            if self.rng.random() >= rate:
+                out.append(frame)
+                continue
+            kind = self.plan.fault_kinds[
+                int(self.rng.integers(len(self.plan.fault_kinds)))]
+            if kind == "reorder" and not out:
+                kind = "duplicate"   # nothing earlier to swap with
+            if kind == "drop":
+                pass                 # the frame never arrives
+            elif kind == "corrupt":
+                bad = np.array(frame, dtype=np.int32, copy=True)
+                word = int(self.rng.integers(bad.size))
+                bit = int(self.rng.integers(32))
+                bad.view(np.uint32)[word] ^= np.uint32(1) << np.uint32(bit)
+                out.append(bad)
+            elif kind == "duplicate":
+                out.append(frame)
+                out.append(np.array(frame, dtype=np.int32, copy=True))
+            else:                    # reorder: swap with the previous frame
+                prev = out.pop()
+                out.append(frame)
+                out.append(prev)
+            touched += 1
+            self.counters[kind] += 1
+            self.record(kind, tick=self._tick, rid=rid, frame=i,
+                        attempt=attempt)
+        if touched:
+            self.counters["trains_perturbed"] += 1
+        return out
+
+    # ------------------------------------------------------------------
+    # telemetry
+    # ------------------------------------------------------------------
+
+    def record(self, kind: str, **detail: Any) -> None:
+        if kind == "kill":
+            self.counters["kills"] += 1
+        elif kind == "lease_storm":
+            self.counters["lease_storms"] += 1
+        self.events.append({"kind": kind, **detail})
+
+    @property
+    def injected(self) -> int:
+        """Total individual faults injected (all kinds)."""
+        return (sum(self.counters[k] for k in FAULT_KINDS)
+                + self.counters["kills"] + self.counters["lease_storms"])
+
+    def metrics(self) -> Dict[str, Any]:
+        return {"injected": self.injected,
+                "by_kind": {k: v for k, v in self.counters.items() if v},
+                "events": len(self.events)}

@@ -9,6 +9,13 @@
       --replicas llama3.2-1b:paged,llama3.2-1b:paged,mamba-130m:recurrent \
       --scheduler priority --requests 9 --migrate-after 2
 
+  # chaos smoke (CI): seeded frame corruption + a replica kill; the run
+  # serves a noise-free baseline first, replays the same requests under
+  # the fault plan, and exits 1 unless every output is bitwise identical:
+  PYTHONPATH=src python -m repro.launch.serve_cluster --smoke \
+      --replicas llama3.2-1b:paged,llama3.2-1b:paged --migrate-after 3 \
+      --fault-rate 0.3 --fault-seed 7 --kill-after 5
+
 Each ``--replicas`` entry is ``arch:cache`` (cache one of
 paged/slots/recurrent/auto). Replicas of the same arch share one weight
 tree, installed via ``Engine.inject_params`` so every replica's params
@@ -18,7 +25,10 @@ warm replicas. Requests round through ``Router.submit`` with a priority
 spread; ``--migrate-after N`` forcibly live-migrates one in-flight
 request between compatible replicas after N router ticks (exits non-zero
 if no migration could be forced — CI uses this to prove the handoff path
-runs).
+runs). The chaos flags (``--fault-rate/--fault-kinds/--fault-seed/
+--kill-after/--snapshot-every``) wrap the run in the two-phase identity
+check above — the launcher-level version of docs/robustness.md's
+acceptance criterion.
 """
 from __future__ import annotations
 
@@ -33,7 +43,9 @@ from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import (ARCHS, default_cache_backend, get_config,
                                     get_smoke)
-from repro.cluster import MigrateOnOversubscription, Replica, Router
+from repro.cluster import (EngineFailedError, FaultInjector, FaultPlan,
+                           MigrateOnOversubscription, MigrationFailedError,
+                           Replica, RequestFailedError, Router)
 from repro.engine import Engine, Request
 
 
@@ -60,6 +72,97 @@ def _parse_replicas(spec: str, smoke: bool, error) -> list:
     return out
 
 
+def _run_phase(label, engines, specs, prompts, mesh, args, *,
+               injector=None, snapshot_every=0):
+    """Serve the fixed request set once on restarted engines behind a
+    fresh router; returns (outputs per rid, failed rids, metrics, dt)."""
+    for eng, _arch in engines:
+        eng.restart()
+    replicas = [Replica(eng, model=arch) for eng, arch in engines]
+    rebalance = (MigrateOnOversubscription()
+                 if args.rebalance == "oversubscription" else None)
+    router = Router(replicas, rebalance=rebalance,
+                    snapshot_every=snapshot_every,
+                    retry_backoff_s=0.0 if injector else 0.001)
+    if injector is not None:
+        injector.install(router)
+
+    with mesh:
+        handles = []
+        for rid in range(args.requests):
+            arch = specs[rid % len(specs)][0]
+            handles.append(router.submit(
+                Request(rid, prompts[rid], max_new_tokens=args.max_new,
+                        priority=rid % 3), model=arch))
+
+        t0 = time.perf_counter()
+        forced = None
+        ticks = 0
+        while router.pending() and ticks < 10_000:
+            router.tick()
+            ticks += 1
+            if (args.migrate_after and forced is None
+                    and ticks >= args.migrate_after):
+                # force one live handoff: the first unfinished request
+                # whose replica has a compatible live peer
+                for h in handles:
+                    if h.done or router.request_failure(h.rid) is not None:
+                        continue
+                    src = router._by_id[h.engine_id]
+                    if src.failed:
+                        continue
+                    # prefer a peer with headroom, but force the handoff
+                    # onto any compatible replica — it queues there
+                    dst = (router.best_target(src)
+                           or next(iter(router.compatible_targets(src)),
+                                   None))
+                    if dst is None:
+                        continue
+                    try:
+                        router.migrate(h.rid, dst.engine_id,
+                                       reason="forced")
+                    except (MigrationFailedError, EngineFailedError):
+                        continue        # rolled back / source died: retry
+                    forced = (h.rid, src.engine_id, dst.engine_id)
+                    break
+        dt = time.perf_counter() - t0
+        outputs, failed = {}, {}
+        for h in handles:
+            try:
+                outputs[h.rid] = list(h.result().out_tokens)
+            except RequestFailedError as err:
+                failed[h.rid] = str(err)
+
+    m = router.metrics()
+    undrained = router.pending()
+    total_tokens = sum(len(t) for t in outputs.values())
+    print(f"[{label}] {len(outputs)}/{args.requests} requests over "
+          f"{len(replicas)} replicas, {total_tokens} tokens in {dt:.2f}s "
+          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, {ticks} ticks)")
+    for r in m["cluster"]["replicas"]:
+        eng_m = m["replicas"][r["engine_id"]]
+        print(f"  {r['engine_id']}: model={r['model']} cache={r['cache']} "
+              f"completed={eng_m['completed']} "
+              f"migrations={eng_m['migrations']} "
+              f"failed={r['failed']} "
+              f"placement={eng_m['engine']['placement']}")
+    f = m["faults"]
+    print(f"[{label}] migrations={m['totals']['migrations']} "
+          f"(handoff: {m['router']['handoff_frames']} frames, "
+          f"{m['router']['handoff_bytes']} bytes) "
+          f"rebalance_events={m['router']['rebalance_events']}")
+    if injector is not None:
+        print(f"[{label}] faults: injected={f['injected']['injected']} "
+              f"detected={f['detected']} retransmits={f['retransmits']} "
+              f"failovers={f['failovers']} "
+              f"recovered={f['requests_recovered']} "
+              f"snapshots={f['snapshots_taken']}")
+    if forced:
+        rid, src, dst = forced
+        print(f"[{label}] forced migration: rid {rid} {src} -> {dst}")
+    return outputs, failed, m, forced, undrained
+
+
 def main() -> None:
     p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--replicas", required=True,
@@ -84,6 +187,19 @@ def main() -> None:
                    help="after N router ticks, force one live migration "
                         "of an in-flight request between compatible "
                         "replicas; exit 1 if none was possible")
+    p.add_argument("--fault-rate", type=float, default=0.0,
+                   help="per-frame fault probability on handoff trains; "
+                        ">0 runs a noise-free baseline first and exits 1 "
+                        "unless the chaos run matches it bitwise")
+    p.add_argument("--fault-kinds", default="drop,corrupt,duplicate,reorder",
+                   help="comma list of frame fault kinds to draw from")
+    p.add_argument("--fault-seed", type=int, default=0)
+    p.add_argument("--kill-after", type=int, default=0, metavar="N",
+                   help="kill the first replica at router tick N of the "
+                        "chaos phase (requires a compatible peer)")
+    p.add_argument("--snapshot-every", type=int, default=2,
+                   help="chaos phase: sequence-state snapshot cadence "
+                        "(router ticks; 0 = recompute-only failover)")
     p.add_argument("--metrics-json", action="store_true",
                    help="print the final cluster metrics() as JSON")
     args = p.parse_args()
@@ -97,7 +213,7 @@ def main() -> None:
 
     # one weight tree per arch, injected into every replica of that arch:
     # the rFaaS lease model — N warm executors, one shipped weight state
-    replicas = []
+    engines = []
     params_by_arch: dict = {}
     with mesh:
         for i, (arch, cache, cfg) in enumerate(specs):
@@ -118,74 +234,64 @@ def main() -> None:
             else:
                 eng.inject_params()
                 params_by_arch[arch] = eng.params
-            replicas.append(Replica(eng, model=arch))
-
-    rebalance = (MigrateOnOversubscription()
-                 if args.rebalance == "oversubscription" else None)
-    router = Router(replicas, rebalance=rebalance)
+            engines.append((eng, arch))
 
     rng = np.random.default_rng(0)
-    with mesh:
-        handles = []
-        for rid in range(args.requests):
-            arch = specs[rid % len(specs)][0]
-            cfg = specs[rid % len(specs)][2]
-            prompt = rng.integers(
-                0, cfg.vocab_size, size=(args.prompt_len,)).astype(np.int32)
-            handles.append(router.submit(
-                Request(rid, prompt, max_new_tokens=args.max_new,
-                        priority=rid % 3), model=arch))
+    prompts = [rng.integers(0, specs[rid % len(specs)][2].vocab_size,
+                            size=(args.prompt_len,)).astype(np.int32)
+               for rid in range(args.requests)]
 
-        t0 = time.perf_counter()
-        forced = None
-        ticks = 0
-        while router.pending() and ticks < 10_000:
-            router.tick()
-            ticks += 1
-            if (args.migrate_after and forced is None
-                    and ticks >= args.migrate_after):
-                # force one live handoff: the first unfinished request
-                # whose replica has a compatible peer
-                for h in handles:
-                    if h.done:
-                        continue
-                    src = router._by_id[h.engine_id]
-                    # prefer a peer with headroom, but force the handoff
-                    # onto any compatible replica — it queues there
-                    dst = (router.best_target(src)
-                           or next(iter(router.compatible_targets(src)),
-                                   None))
-                    if dst is not None:
-                        router.migrate(h.rid, dst.engine_id,
-                                       reason="forced")
-                        forced = (h.rid, src.engine_id, dst.engine_id)
-                        break
-        dt = time.perf_counter() - t0
-        done = [h.result() for h in handles]
+    chaos = args.fault_rate > 0 or args.kill_after > 0
+    outputs, failed, m, forced, undrained = _run_phase(
+        "cluster" if not chaos else "baseline",
+        engines, specs, prompts, mesh, args)
+    ok = True
+    if failed:
+        print(f"[cluster] ERROR: requests failed without faults: {failed}",
+              file=sys.stderr)
+        ok = False
 
-    m = router.metrics()
-    total_tokens = sum(len(r.out_tokens) for r in done)
-    print(f"[cluster] {len(done)}/{args.requests} requests over "
-          f"{len(replicas)} replicas, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens / max(dt, 1e-9):.1f} tok/s, {ticks} ticks)")
-    for r in m["cluster"]["replicas"]:
-        eng_m = m["replicas"][r["engine_id"]]
-        print(f"  {r['engine_id']}: model={r['model']} cache={r['cache']} "
-              f"completed={eng_m['completed']} "
-              f"migrations={eng_m['migrations']} "
-              f"placement={eng_m['engine']['placement']}")
-    print(f"[cluster] migrations={m['totals']['migrations']} "
-          f"(handoff: {m['router']['handoff_frames']} frames, "
-          f"{m['router']['handoff_bytes']} bytes) "
-          f"rebalance_events={m['router']['rebalance_events']}")
-    if forced:
-        rid, src, dst = forced
-        print(f"[cluster] forced migration: rid {rid} {src} -> {dst}")
+    if chaos and ok:
+        plan = FaultPlan(
+            seed=args.fault_seed, frame_fault_rate=args.fault_rate,
+            fault_kinds=tuple(
+                k.strip() for k in args.fault_kinds.split(",") if k.strip()),
+            kill_at={engines[0][0].engine_id: args.kill_after}
+            if args.kill_after else {})
+        injector = FaultInjector(plan)
+        c_out, c_failed, m, forced, undrained = _run_phase(
+            "chaos", engines, specs, prompts, mesh, args,
+            injector=injector, snapshot_every=args.snapshot_every)
+        if c_failed:
+            print(f"[chaos] ERROR: requests terminally failed: {c_failed}",
+                  file=sys.stderr)
+            ok = False
+        if undrained:
+            print("[chaos] ERROR: cluster did not drain", file=sys.stderr)
+            ok = False
+        mismatched = [rid for rid in outputs
+                      if c_out.get(rid) != outputs[rid]]
+        if mismatched:
+            print(f"[chaos] ERROR: outputs diverged from the noise-free "
+                  f"baseline for rids {mismatched}", file=sys.stderr)
+            ok = False
+        if args.kill_after and m["faults"]["failovers"] == 0:
+            print("[chaos] ERROR: --kill-after was set but no failover "
+                  "happened", file=sys.stderr)
+            ok = False
+        if ok:
+            print(f"[chaos] outputs bitwise identical to baseline across "
+                  f"{len(outputs)} requests "
+                  f"(injected={m['faults']['injected']['injected']}, "
+                  f"recovered={m['faults']['requests_recovered']})")
+
     if args.metrics_json:
         print(json.dumps(m, default=str, indent=2))
     if args.migrate_after and m["totals"]["migrations"] == 0:
         print("[cluster] ERROR: --migrate-after was set but no migration "
               "happened (no compatible replica pair?)", file=sys.stderr)
+        ok = False
+    if not ok:
         sys.exit(1)
 
 

@@ -431,7 +431,9 @@ def test_cluster_metrics_merges_router_and_replicas(paged_pair, mesh):
                        and b.engine_id or a.engine_id)
         router.run_until_drained()
     m = router.metrics()
-    assert set(m) == {"cluster", "router", "replicas", "totals"}
+    assert set(m) == {"cluster", "router", "replicas", "totals", "faults"}
+    assert m["faults"]["installed"] is False
+    assert m["faults"]["requests_failed"] == {}
     assert m["cluster"]["name"] == "test-cluster"
     assert [r["engine_id"] for r in m["cluster"]["replicas"]] \
         == [a.engine_id, b.engine_id]

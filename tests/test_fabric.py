@@ -330,6 +330,34 @@ def test_lease_ttl_validation():
         fabric.lease("x", (jnp.ones(1),), ttl_calls=0)
 
 
+def test_lease_expiry_storm_via_fault_injector():
+    """Regression (ISSUE 9 satellite): a ``repro.faults`` injector
+    installed on a bare fabric forces a lease expiry before every k-th
+    acquire — the storm rides the pool's ``fault_hook`` seam, so no call
+    site changes, and every forced expiry is visible both in the lease's
+    own eviction counter and in the injector's event log. (The engine
+    side of the race — an auto-resolved injected call whose lease dies in
+    this window falling back to local — is tests/test_faults.py::
+    test_lease_storm_falls_back_to_local.)"""
+    from repro.faults import FaultInjector, FaultPlan
+
+    fabric = Fabric(name="storm-test")
+    inj = FaultInjector(FaultPlan(lease_storm_every=3)).install(fabric)
+    state = (jnp.ones(2),)
+    for _ in range(9):
+        fabric.lease("params", state)
+    m = fabric.metrics()["leases"]["params"]
+    # acquires 3, 6, 9 were preceded by a forced eviction; the first of
+    # those found no live value yet (acquire 3 follows... it does: 1
+    # materializes, 2 hits, 3 evicts live -> re-materializes), so every
+    # storm tick evicted a live lease and forced a fresh miss
+    assert m["evictions"] == 3
+    assert m["misses"] == 1 + 3              # first fill + one per storm
+    assert inj.counters["lease_storms"] == 3
+    assert all(e["kind"] == "lease_storm" for e in inj.events)
+    assert inj.injected == 3
+
+
 # ---------------------------------------------------------------------------
 # deprecation contract (the pytest.ini exemptions, proven to fire)
 # ---------------------------------------------------------------------------

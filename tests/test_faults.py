@@ -1,0 +1,485 @@
+"""repro.faults tests (ISSUE 9): deterministic fault injection, the
+two-phase retryable handoff, replica failure detection + failover, and
+the chaos acceptance criterion itself.
+
+Ground rule: under a seeded ``FaultPlan`` — frame perturbation on every
+handoff train plus a replica kill — the cluster drains every request
+with greedy outputs **bitwise identical** to an undisturbed run, per
+cache backend. Determinism of the injector (same seed => same faults) is
+what makes that assertable.
+
+Engines are module-scoped (compile once) and reused behind fresh
+``Router``s; every test calls ``_reset`` first because a previous test
+may have killed an engine (``Engine.restart()`` clears the failed state
+and abandons request state while keeping params + compiled steps).
+"""
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.cluster import (MigrateOnOversubscription, Replica, Router,
+                           decode_handoff, encode_handoff)
+from repro.engine import Engine, MigrationTicket, Request
+from repro.faults import (FAULT_KINDS, EngineFailedError, FaultInjector,
+                          FaultPlan, MigrationFailedError,
+                          RequestFailedError)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def _run_cfg(cfg):
+    return RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                     sharding=ShardingConfig(fsdp_params=False,
+                                             seq_axis=None))
+
+
+def _engines(mesh, arch, cache, n, **kw):
+    cfg = get_smoke(arch)
+    run = _run_cfg(cfg)
+    engines = []
+    with mesh:
+        for i in range(n + 1):
+            eid = "ref" if i == n else f"ft-{cache}-{chr(ord('a') + i)}"
+            e = Engine(cfg, run, mesh, cache=cache, engine_id=eid, **kw)
+            if engines:
+                e.load_params(engines[0].params)
+            else:
+                e.load_params()
+            engines.append(e)
+    return cfg, engines[:n], engines[n]
+
+
+@pytest.fixture(scope="module")
+def paged_pair(mesh):
+    return _engines(mesh, "llama3.2-1b", "paged", 2, slots=2, max_len=32,
+                    num_blocks=16, block_size=4, chunk=4)
+
+
+@pytest.fixture(scope="module")
+def slots_pair(mesh):
+    return _engines(mesh, "llama3.2-1b", "slots", 2, slots=2, max_len=32)
+
+
+@pytest.fixture(scope="module")
+def recurrent_pair(mesh):
+    return _engines(mesh, "mamba-130m", "recurrent", 2, slots=2, max_len=48,
+                    chunk=4)
+
+
+def _reset(*engines):
+    for e in engines:
+        e.restart()
+
+
+def _prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n,)).astype(np.int32)
+
+
+def _solo(ref, prompt, rid, max_new, mesh):
+    with mesh:
+        ref.submit(Request(rid, prompt, max_new_tokens=max_new))
+        ref.run_until_drained()
+    return next(r.out_tokens for r in ref.completed if r.rid == rid)
+
+
+def _ticket(state=b"\x05\x06" * 900, rid=41):
+    return MigrationTicket(rid=rid, cache_kind="paged", priority=0,
+                           max_new_tokens=4, prompt=[1, 2, 3, 4],
+                           out_tokens=[9], pos=5, state=state)
+
+
+# ---------------------------------------------------------------------------
+# the injector itself: plan validation, determinism, non-mutation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validates():
+    with pytest.raises(ValueError, match="unknown fault kinds"):
+        FaultPlan(fault_kinds=("corrupt", "gamma-ray"))
+    with pytest.raises(ValueError, match="not in"):
+        FaultPlan(frame_fault_rate=1.5)
+    assert FaultPlan().fault_kinds == FAULT_KINDS
+
+
+def test_injector_is_deterministic_from_seed():
+    """Same plan + seed => byte-identical perturbed trains and the same
+    event log — the property every chaos test below leans on."""
+    frames = encode_handoff(_ticket())
+    runs = []
+    for _ in range(2):
+        inj = FaultInjector(FaultPlan(seed=123, frame_fault_rate=0.7))
+        trains = [inj.perturb_train(frames, rid=1, attempt=a)
+                  for a in range(4)]
+        runs.append((trains, inj.events, dict(inj.counters)))
+    (t0, e0, c0), (t1, e1, c1) = runs
+    assert e0 == e1 and c0 == c1
+    assert len(t0) == len(t1)
+    for a0, a1 in zip(t0, t1):
+        assert len(a0) == len(a1)
+        for f0, f1 in zip(a0, a1):
+            np.testing.assert_array_equal(f0, f1)
+
+
+def test_perturb_train_never_mutates_input():
+    frames = encode_handoff(_ticket())
+    before = [f.copy() for f in frames]
+    inj = FaultInjector(FaultPlan(seed=3, frame_fault_rate=1.0,
+                                  fault_kinds=("corrupt",)))
+    perturbed = inj.perturb_train(frames, rid=1)
+    for f, b in zip(frames, before):
+        np.testing.assert_array_equal(f, b)
+    assert any(not np.array_equal(p, b)
+               for p, b in zip(perturbed, before))
+    assert inj.counters["corrupt"] == len(frames)
+    assert inj.counters["trains_perturbed"] == 1
+    assert inj.injected == len(frames)
+
+
+def test_injector_install_rejects_unknown_targets():
+    with pytest.raises(TypeError, match="expected a Router or a Fabric"):
+        FaultInjector(FaultPlan()).install(object())
+
+
+# ---------------------------------------------------------------------------
+# chaos acceptance: >=10% frame faults + one replica kill, per backend
+# ---------------------------------------------------------------------------
+
+def _chaos_run(pair, mesh, *, rid0, seed, kill_suffix, snapshot_every,
+               n_req=4, plen=6, max_new=6, rate=0.35, rebalance=None,
+               kill_tick=4):
+    """Run n requests through a 2-replica cluster under a seeded plan
+    (frame faults + one kill); assert every output is bitwise identical
+    to the solo reference and delivery was exactly-once."""
+    cfg, (a, b), ref = pair
+    _reset(a, b, ref)
+    prompts = {rid0 + i: _prompt(cfg, plen, seed=seed + i)
+               for i in range(n_req)}
+    want = {rid: _solo(ref, p, rid, max_new, mesh)
+            for rid, p in prompts.items()}
+
+    kill_id = f"{a.engine_id[:-1]}{kill_suffix}"
+    plan = FaultPlan(seed=seed, frame_fault_rate=rate,
+                     kill_at={kill_id: kill_tick})
+    router = Router([Replica(a), Replica(b)], rebalance=rebalance,
+                    max_retries=10, retry_backoff_s=0.0,
+                    snapshot_every=snapshot_every)
+    inj = FaultInjector(plan).install(router)
+    seen = {rid: [] for rid in prompts}
+    with mesh:
+        handles = {rid: router.submit(
+            Request(rid, p, max_new_tokens=max_new))
+            for rid, p in prompts.items()}
+        for rid, h in handles.items():
+            h.on_token(lambda tok, i, rid=rid: seen[rid].append((i, tok)))
+        while router.pending():
+            router.tick()
+
+    m = router.metrics()["faults"]
+    assert m["installed"] and inj.counters["kills"] == 1
+    assert m["requests_failed"] == {}
+    assert m["failovers"] == 1 and m["requests_recovered"] >= 1
+    # every detected fault was answered with a retransmit (none exhausted
+    # their retry budget — no request may be lost to noise)
+    assert m["detected"] == m["retransmits"]
+    for rid, h in handles.items():
+        got = list(h.result().out_tokens)
+        assert got == want[rid], f"rid {rid} diverged under chaos"
+        # exactly-once: the callback saw each index once, in order
+        assert seen[rid] == list(enumerate(got))
+    return router
+
+
+def test_chaos_identity_paged(paged_pair, mesh):
+    """Paged backend, snapshots on, oversubscription rebalance churning
+    migrations through the noisy channel the whole run."""
+    router = _chaos_run(paged_pair, mesh, rid0=1000, seed=7,
+                        kill_suffix="a", snapshot_every=2, n_req=6,
+                        rebalance=MigrateOnOversubscription())
+    assert router.snapshots_taken >= 1
+
+
+def test_chaos_identity_slots(slots_pair, mesh):
+    """Slots backend: the shared length scalar advances all slots in
+    lockstep, so the backend is exact only for aligned admissions
+    (docs/engine.md). Failover recovery stays inside that envelope via
+    the recompute path (snapshot_every=0): the rebuilt request prefills
+    on the peer at exactly the peer's current length — one request per
+    replica so the survivor has a free slot the recovered request enters
+    immediately, still aligned."""
+    _chaos_run(slots_pair, mesh, rid0=1100, seed=11, kill_suffix="a",
+               snapshot_every=0, n_req=2)
+
+
+def test_chaos_identity_recurrent(recurrent_pair, mesh):
+    """Recurrent (mamba) backend: constant-size SSM state snapshots ride
+    the same train format."""
+    _chaos_run(recurrent_pair, mesh, rid0=1200, seed=13, kill_suffix="a",
+               snapshot_every=2, max_new=5)
+
+
+# ---------------------------------------------------------------------------
+# two-phase handoff: retransmission and rollback
+# ---------------------------------------------------------------------------
+
+def test_noisy_migration_retransmits_until_clean(paged_pair, mesh):
+    """A damaged train is detected and retransmitted (bounded retries);
+    the migration then lands and the output is unchanged."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 7, seed=21)
+    want = _solo(ref, p, 1300, 6, mesh)
+    router = Router([Replica(a), Replica(b)], max_retries=20,
+                    retry_backoff_s=0.0)
+    FaultInjector(FaultPlan(seed=2, frame_fault_rate=0.8)).install(router)
+    with mesh:
+        h = router.submit(Request(1300, p, max_new_tokens=6))
+        router.tick(); router.tick()
+        src = router._table[1300]
+        dst = b.engine_id if src == a.engine_id else a.engine_id
+        router.migrate(1300, dst)
+        got = list(h.result().out_tokens)
+    assert router._table[1300] == dst
+    assert router.faults_detected >= 1 and router.retransmits >= 1
+    assert got == want
+    entry = router.migrations[-1]
+    assert entry["retransmits"] == router.retransmits
+
+
+def test_migration_rolls_back_when_retries_exhaust(paged_pair, mesh):
+    """rate=1.0 corruption defeats every retry: ``migrate`` raises
+    ``MigrationFailedError``, the ticket re-imports on the source, and —
+    once the noise stops — the request completes there bitwise."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 6, seed=22)
+    want = _solo(ref, p, 1310, 6, mesh)
+    router = Router([Replica(a), Replica(b)], max_retries=2,
+                    retry_backoff_s=0.0)
+    FaultInjector(FaultPlan(seed=0, frame_fault_rate=1.0,
+                            fault_kinds=("corrupt",))).install(router)
+    with mesh:
+        h = router.submit(Request(1310, p, max_new_tokens=6))
+        router.tick(); router.tick()
+        src = router._table[1310]
+        dst = b.engine_id if src == a.engine_id else a.engine_id
+        with pytest.raises(MigrationFailedError, match="still damaged"):
+            router.migrate(1310, dst)
+        assert router._table[1310] == src       # never left the source
+        assert router.retransmits == 2          # bounded by max_retries
+        assert router.faults_detected == 3      # every attempt detected
+        router.faults = None                    # the network heals
+        got = list(h.result().out_tokens)
+    assert got == want
+
+
+def test_drain_is_transactional_under_total_noise(paged_pair, mesh):
+    """A drain whose migrations all fail strands nothing: each rid rolls
+    back onto the source, drain raises naming them, and the requests
+    still complete there — no request is ever destroyed."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 6, seed=23)
+    want = _solo(ref, p, 1320, 6, mesh)
+    router = Router([Replica(a), Replica(b)], max_retries=1,
+                    retry_backoff_s=0.0)
+    FaultInjector(FaultPlan(seed=0, frame_fault_rate=1.0,
+                            fault_kinds=("drop",))).install(router)
+    with mesh:
+        h = router.submit(Request(1320, p, max_new_tokens=6))
+        router.tick()
+        src = router._table[1320]
+        with pytest.raises(RuntimeError, match="stranded rids \\[1320\\]"):
+            router.drain(src)
+        assert router._table[1320] == src
+        assert router.replica(src).draining     # drain intent sticks
+        router.faults = None
+        got = list(h.result().out_tokens)       # completes on the source
+    assert got == want
+    router.replica(src).draining = False
+
+
+# ---------------------------------------------------------------------------
+# failure detection + failover
+# ---------------------------------------------------------------------------
+
+def test_failover_without_snapshots_recomputes(paged_pair, mesh):
+    """snapshot_every=0: failover rebuilds from prompt + delivered
+    tokens (pos=0 recompute ticket) and the output is still bitwise."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 6, seed=24)
+    want = _solo(ref, p, 1330, 8, mesh)
+    router = Router([Replica(a), Replica(b)], retry_backoff_s=0.0)
+    seen = []
+    with mesh:
+        h = router.submit(Request(1330, p, max_new_tokens=8))
+        h.on_token(lambda tok, i: seen.append((i, tok)))
+        for _ in range(3):
+            router.tick()
+        router.replica(router._table[1330]).engine.fail("chaos kill")
+        got = list(h.result().out_tokens)
+    assert got == want
+    assert seen == list(enumerate(got))          # exactly-once across death
+    m = router.metrics()["faults"]
+    assert m["snapshots_taken"] == 0
+    assert m["failovers"] == 1 and m["requests_recovered"] == 1
+    assert router.migrations[-1]["pos"] == 0     # recompute, not restore
+    assert router.migrations[-1]["reason"].startswith("failover")
+
+
+def test_failover_restores_from_snapshot(paged_pair, mesh):
+    """snapshot_every=1: failover restores the last serialized sequence
+    state (pos > 0 in the recovery ticket) instead of recomputing."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 8, seed=25)
+    want = _solo(ref, p, 1340, 8, mesh)
+    router = Router([Replica(a), Replica(b)], retry_backoff_s=0.0,
+                    snapshot_every=1)
+    with mesh:
+        h = router.submit(Request(1340, p, max_new_tokens=8))
+        for _ in range(4):
+            router.tick()
+        router.replica(router._table[1340]).engine.fail("chaos kill")
+        got = list(h.result().out_tokens)
+    assert got == want
+    assert router.snapshots_taken >= 1
+    last = router.migrations[-1]
+    assert last["reason"].startswith("failover") and last["pos"] > 0
+    assert last["state_bytes"] > 0
+
+
+def test_request_fails_typed_when_no_peer_exists(paged_pair, mesh):
+    """A dead replica with no compatible peer terminally fails its
+    requests: ``tokens()``/``result()`` raise ``RequestFailedError`` with
+    the reason, and the rid lands in metrics' requests_failed."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 5, seed=26)
+    router = Router([Replica(a)])                # nobody to fail over to
+    with mesh:
+        h = router.submit(Request(1350, p, max_new_tokens=4))
+        router.tick()
+        a.fail("power loss")
+        with pytest.raises(RequestFailedError, match="no compatible"):
+            h.result()
+        with pytest.raises(RequestFailedError):
+            list(h.tokens())
+    m = router.metrics()["faults"]
+    assert 1350 in m["requests_failed"]
+    assert "power loss" in m["requests_failed"][1350]
+    assert m["failures"][0]["lost"] == [1350]
+
+
+def test_health_probe_detects_kill_between_ticks(paged_pair, mesh):
+    """A kill landing between ticks is found by the next tick's probe —
+    no client interaction needed — and the request moves."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 6, seed=27)
+    want = _solo(ref, p, 1360, 6, mesh)
+    router = Router([Replica(a), Replica(b)], retry_backoff_s=0.0)
+    with mesh:
+        h = router.submit(Request(1360, p, max_new_tokens=6))
+        router.tick()
+        victim = router._table[1360]
+        router.replica(victim).engine.fail("yanked cable")
+        router.tick()                            # probe fires here
+    assert router.replica(victim).failed
+    assert router._table[1360] != victim
+    assert router.health_probes >= 2
+    with mesh:
+        assert list(h.result().out_tokens) == want
+
+
+def test_mark_failed_is_idempotent_and_works_on_live_replicas(paged_pair,
+                                                              mesh):
+    """Operator-initiated failover: ``mark_failed`` on a *live* replica
+    fails the engine first (no race with recovery), moves its work, and
+    a second call is a no-op."""
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 6, seed=28)
+    want = _solo(ref, p, 1370, 6, mesh)
+    router = Router([Replica(a), Replica(b)], retry_backoff_s=0.0)
+    with mesh:
+        h = router.submit(Request(1370, p, max_new_tokens=6))
+        router.tick()
+        victim = router._table[1370]
+        recovered = router.mark_failed(victim, reason="maintenance")
+        assert recovered == [1370]
+        assert not router.replica(victim).engine.alive
+        assert router.mark_failed(victim) == []  # idempotent
+        assert list(h.result().out_tokens) == want
+    assert router.failovers == 1                 # the no-op didn't count
+
+
+# ---------------------------------------------------------------------------
+# engine failure lifecycle
+# ---------------------------------------------------------------------------
+
+def test_failed_engine_refuses_verbs_until_restart(paged_pair, mesh):
+    cfg, (a, b), ref = paged_pair
+    _reset(a, b, ref)
+    p = _prompt(cfg, 5, seed=29)
+    with mesh:
+        a.submit(Request(1380, p, max_new_tokens=3))
+        a.tick()
+        a.fail("oom")
+        assert not a.alive and a.failed_reason == "oom"
+        for verb, call in [
+                ("tick", a.tick),
+                ("submit", lambda: a.submit(
+                    Request(1381, p, max_new_tokens=3))),
+                ("export_request", lambda: a.export_request(1380)),
+                ("snapshot_request", lambda: a.snapshot_request(1380))]:
+            with pytest.raises(EngineFailedError, match=verb):
+                call()
+        assert a.metrics()["engine"]["failed_reason"] == "oom"
+        a.restart()
+        assert a.alive and not a.pending()       # request state abandoned
+        want = _solo(ref, p, 1382, 4, mesh)
+        h = a.submit(Request(1383, p, max_new_tokens=4))
+        assert list(h.result().out_tokens) == want
+
+
+# ---------------------------------------------------------------------------
+# lease-expiry storms (the placement/execution race)
+# ---------------------------------------------------------------------------
+
+def test_lease_storm_falls_back_to_local(mesh):
+    """An injected lease-expiry storm between placement resolution and
+    execution demotes auto-resolved injected calls to local (counted in
+    lease_fallbacks) — tokens unchanged, no error, no silent re-ship."""
+    cfg = get_smoke("llama3.2-1b")
+    run = _run_cfg(cfg)
+    with mesh:
+        eng = Engine(cfg, run, mesh, cache="paged", engine_id="ft-lease",
+                     slots=2, max_len=32, num_blocks=16, block_size=4,
+                     chunk=4, placement="auto")
+        eng.inject_params()
+        ref = Engine(cfg, run, mesh, cache="paged", engine_id="ft-lease-ref",
+                     slots=2, max_len=32, num_blocks=16, block_size=4,
+                     chunk=4)
+        ref.load_params(eng.params)
+    p = _prompt(cfg, 6, seed=30)
+    want = _solo(ref, p, 1390, 6, mesh)
+    router = Router([Replica(eng)])
+    FaultInjector(FaultPlan(seed=0,
+                            lease_storm_ticks=(2, 3))).install(router)
+    with mesh:
+        h = router.submit(Request(1390, p, max_new_tokens=6))
+        got = list(h.result().out_tokens)
+    assert got == want
+    m = router.metrics()["faults"]
+    assert m["lease_fallbacks"] >= 1
+    assert m["lease_fallbacks"] == eng.lease_fallbacks
+    assert m["injected"]["by_kind"]["lease_storms"] >= 1
+    # the storm evicted a live lease at least once
+    lease = eng.metrics()["fabric"]["leases"]["engine.paged_step.params"]
+    assert lease["evictions"] >= 1

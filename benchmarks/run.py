@@ -25,9 +25,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_injected_vs_local, bench_mailbox_overhead,
-                        bench_paged_attention, bench_roofline, bench_serving,
-                        bench_stashing, bench_tail_latency, bench_wfe)
+from benchmarks import (bench_graph, bench_injected_vs_local,
+                        bench_mailbox_overhead, bench_paged_attention,
+                        bench_roofline, bench_serving, bench_stashing,
+                        bench_tail_latency, bench_wfe)
 from benchmarks.common import write_bench_json
 
 MODULES = (
@@ -39,6 +40,7 @@ MODULES = (
     ("roofline", bench_roofline),
     ("serving", bench_serving),
     ("paged_attention", bench_paged_attention),
+    ("graph", bench_graph),
 )
 
 

@@ -248,6 +248,17 @@ class Router:
         self.rebalance_events = 0
         self.handoff_frames = 0
         self.handoff_bytes = 0
+        # graph tier (fabric.graph): cross-replica node placement +
+        # frame-shipped edges (docs/graph.md)
+        self._graphs: List[Any] = []
+        self._graphs_done: List[Any] = []
+        self.graph_invocations = 0
+        self.node_placements: List[Dict[str, Any]] = []
+        self._edge_anchors: Dict[Any, Any] = {}     # (engine_id, name) -> key
+        self.edge_frames = 0
+        self.edge_bytes = 0
+        self.edge_retransmits = 0
+        self.edge_local_hits = 0
         # chaos/recovery state (docs/robustness.md)
         self.tick_no = 0
         self.faults = None                          # installed FaultInjector
@@ -324,6 +335,144 @@ class Router:
             "load": best.load()})
         return best
 
+    # -- graph-node placement (Seriema-style locality, ROADMAP item 3) ----
+
+    @staticmethod
+    def _lease_live(engine: Engine, name: str) -> bool:
+        if engine.fabric is None:
+            return False
+        lease = engine.fabric.leases.get(name)
+        return bool(lease is not None and lease.live)
+
+    def place_node(self, *, gid: int, node: str, model: str = "default",
+                   edges: Sequence = (), exclude=()) -> Replica:
+        """Place one graph-node invocation on a replica.
+
+        Same lexicographic shape as ``_place`` but with the locality axis
+        between cold-start bytes and load: ``affinity_bytes`` sums the
+        wire bytes of every upstream edge (``edges`` is a sequence of
+        ``(lease_name, nbytes)``) whose lease is *not* already resident
+        on the candidate's fabric. A replica that already holds the
+        node's upstream-node outputs — the draft edge, the verify
+        session's KV — scores 0 and wins before load does, which is what
+        keeps a graph's verify node where its draft node's output lease
+        lives instead of bouncing to the emptiest replica every round.
+        Every decision is logged with its full ``TransportEstimate`` in
+        ``metrics()["router"]["node_placements"]``."""
+        cands = [r for r in self.replicas
+                 if not r.draining and not r.failed and r.model == model
+                 and r.engine_id not in exclude]
+        if not cands:
+            raise ValueError(
+                f"no live replica serves model={model!r} for graph node "
+                f"{node!r} (gid={gid}; replicas: "
+                f"{[(r.engine_id, r.model) for r in self.replicas]})")
+        edges = list(edges)
+        payload = sum(int(nb) for _, nb in edges)
+        best = best_key = best_est = None
+        for r in cands:
+            eng = r.engine
+            aff = sum(int(nb) for name, nb in edges
+                      if not self._lease_live(eng, name))
+            warm = (eng.params is not None and eng.fabric is not None
+                    and eng._lease_warm(eng.params))
+            est = TransportEstimate(
+                local_bytes=payload,
+                injected_bytes=0 if warm else eng._params_nbytes(),
+                common_bytes=0, chosen="injected" if warm else "local",
+                n_tokens_per_tp_rank=0, capacity=0, affinity_bytes=aff)
+            load = r.load()
+            key = (est.injected_bytes, aff,
+                   load["queue_depth"] + load["active"],
+                   load["occupancy"], r.engine_id)
+            if best is None or key < best_key:
+                best, best_key, best_est = r, key, est
+        self.node_placements.append({
+            "gid": gid, "node": node, "engine_id": best.engine_id,
+            "model": best.model, "estimate": best_est.describe(),
+            "affinity_bytes": best_est.affinity_bytes,
+            "load": best.load()})
+        return best
+
+    def ship_edge(self, replica: Replica, name: str, value):
+        """Deliver one graph-edge value to ``replica`` and lease it
+        there. Co-resident values (the lease already holds this exact
+        array) are consumed warm — residency, zero wire bytes; anything
+        else rides a validated mailbox frame train
+        (``fabric.graph.edges``) through the installed fault injector
+        with the same bounded-retry discipline as migration handoffs.
+        Returns the replica-resident value (the decoded copy when it
+        shipped)."""
+        from repro.fabric.graph.edges import (EDGE_SPEC, decode_edge,
+                                              encode_edge)
+        eng = replica.engine
+        fab = eng.fabric
+        if fab is not None:
+            lease = fab.leases.get(name)
+            if (lease is not None and lease.live and len(lease.key) == 1
+                    and lease.key[0] is value):
+                self.edge_local_hits += 1
+                return fab.lease(name, lease.key)[0]
+        delay = self.retry_backoff_s
+        last: Optional[Exception] = None
+        for attempt in range(self.max_retries + 1):
+            frames = encode_edge(name, value)
+            if self.faults is not None:
+                frames = self.faults.perturb_train(frames, rid=-(1 + hash(name) % 1000), attempt=attempt)
+            self.edge_frames += len(frames)
+            self.edge_bytes += len(frames) * EDGE_SPEC.total_bytes
+            try:
+                got_name, decoded = decode_edge(frames)
+                if got_name != name:
+                    raise ValueError(
+                        f"edge train decoded as {got_name!r}, "
+                        f"expected {name!r}")
+                break
+            except ValueError as err:
+                self.faults_detected += 1
+                last = err
+                if attempt < self.max_retries:
+                    self.edge_retransmits += 1
+                    if delay > 0:
+                        time.sleep(delay)
+                        delay *= 2
+        else:
+            raise ValueError(
+                f"edge {name!r} still damaged after {self.max_retries} "
+                f"retransmits: {last}")
+        if fab is not None:
+            state = (decoded,)
+            self._edge_anchors[(replica.engine_id, name)] = state
+            fab.lease(name, state)
+        return decoded
+
+    def submit_graph(self, spec, inputs, *, loop_until=None,
+                     max_rounds: int = 256, resolve=None,
+                     on_node_error=None):
+        """Queue a ``fabric.graph`` run at the cluster tier; returns its
+        streaming ``GraphHandle`` (owner = this router). Each router
+        tick advances every active graph one round; the run's node
+        callables place themselves per round via ``place_node`` and move
+        edge values with ``ship_edge`` (the ``SpeculativeDecoder`` in
+        router mode is the canonical client)."""
+        from repro.fabric.graph.executor import GraphRun
+        run = GraphRun(spec, inputs, fabric=None,
+                       loop_until=loop_until, max_rounds=max_rounds,
+                       resolve=resolve, on_node_error=on_node_error)
+        self._graphs.append(run)
+        return run.handle._bind(self)
+
+    def _tick_graphs(self) -> int:
+        fired = 0
+        for run in list(self._graphs):
+            if not run.done:
+                fired += run.advance()
+            if run.done:
+                self._graphs.remove(run)
+                self._graphs_done.append(run)
+        self.graph_invocations += fired
+        return fired
+
     def submit(self, req: Request, *,
                model: Optional[str] = None) -> ClusterHandle:
         """Place ``req`` on the best replica (optionally pinned to a
@@ -346,6 +495,8 @@ class Router:
     # ------------------------------------------------------------------
 
     def pending(self) -> bool:
+        if any(not run.done for run in self._graphs):
+            return True
         return any(r.engine.pending() for r in self.replicas
                    if not r.failed)
 
@@ -370,6 +521,8 @@ class Router:
                                  or "died mid-tick")
         self._take_snapshots()
         self._apply_rebalance()
+        if self._graphs:
+            advanced += self._tick_graphs()
         return advanced
 
     def _probe_health(self) -> None:
@@ -732,7 +885,16 @@ class Router:
                                 for m in replicas.values()),
             "migrations": len(self.migrations),
         }
-        return {
+        out: Dict[str, Any] = {}
+        if self._graphs or self._graphs_done:
+            out["graphs"] = {
+                "active": sum(1 for g in self._graphs if not g.done),
+                "completed": len(self._graphs_done),
+                "node_invocations": self.graph_invocations,
+                "runs": [g.metrics()
+                         for g in (*self._graphs, *self._graphs_done)],
+            }
+        out.update({
             "cluster": {
                 "name": self.name,
                 "replicas": [
@@ -748,6 +910,11 @@ class Router:
                 "rebalance_events": self.rebalance_events,
                 "handoff_frames": self.handoff_frames,
                 "handoff_bytes": self.handoff_bytes,
+                "node_placements": list(self.node_placements),
+                "edge_frames": self.edge_frames,
+                "edge_bytes": self.edge_bytes,
+                "edge_retransmits": self.edge_retransmits,
+                "edge_local_hits": self.edge_local_hits,
             },
             "faults": {
                 "installed": self.faults is not None,
@@ -767,4 +934,5 @@ class Router:
             },
             "replicas": replicas,
             "totals": totals,
-        }
+        })
+        return out

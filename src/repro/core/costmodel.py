@@ -25,11 +25,20 @@ class TransportEstimate:
     chosen: str
     n_tokens_per_tp_rank: int
     capacity: int
+    # Seriema-style locality axis (ROADMAP item 3): bytes of *upstream*
+    # state — graph-node output leases, warm producer/consumer pairings —
+    # that would have to ship because they are NOT co-resident with this
+    # placement. 0 means every upstream edge this invocation consumes is
+    # already leased where it would run; placement keys sort on it right
+    # after the weight-injection axis, so co-residency wins before load.
+    affinity_bytes: int = 0
 
     def describe(self) -> str:
         return (f"local={self.local_bytes/2**20:.2f}MiB "
                 f"injected={self.injected_bytes/2**20:.2f}MiB "
-                f"common={self.common_bytes/2**20:.2f}MiB -> {self.chosen}")
+                f"common={self.common_bytes/2**20:.2f}MiB "
+                f"affinity={self.affinity_bytes/2**20:.2f}MiB "
+                f"-> {self.chosen}")
 
 
 def estimate_transport(m: MoEConfig, *, d_model: int,

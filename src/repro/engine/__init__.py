@@ -17,8 +17,8 @@ Public surface::
 "recurrent"/"auto"); the ``SequenceState`` protocol and its three
 implementations live in ``repro.engine.state``.
 
-``runtime/server.py``'s ``Server``/``PagedServer`` remain as deprecation
-shims over this class.
+The pre-engine ``runtime/server.py`` shims (``Server``/``PagedServer``)
+have been removed; docs/engine.md keeps the migration table.
 """
 from repro.engine.engine import (  # noqa: F401
     BlockPool, Engine, MigrationTicket, Request)

@@ -3,8 +3,9 @@
 The paper's claim applied to serving: function *invocation* is one uniform
 low-granularity API while *placement and scheduling* are chosen dynamically
 as the application progresses. Before this module the repro hard-coded
-both: ``Server`` and ``PagedServer`` each owned an admission loop, a tick
-loop, preemption logic, and a metrics dialect. ``Engine`` collapses them:
+both: the pre-engine fixed-slot and paged servers each owned an admission
+loop, a tick loop, preemption logic, and a metrics dialect. ``Engine``
+collapsed them:
 
 * **one submit/admit/step/complete loop** (``tick``) over a pluggable
   sequence-state backend behind the ``SequenceState`` protocol
@@ -29,9 +30,9 @@ loop, preemption logic, and a metrics dialect. ``Engine`` collapses them:
   ``fabric.call(..., placement="local")``; ``metrics()["fabric"]`` reports
   per-step call counts and the resolved placement of each registered step.
 
-``runtime/server.py`` keeps ``Server``/``PagedServer`` only as thin
-``DeprecationWarning`` shims over this class. See docs/engine.md for the
-API, the scheduler protocol, streaming semantics, and the migration table.
+The ``runtime/server.py`` deprecation shims over this class have been
+removed. See docs/engine.md for the API, the scheduler protocol,
+streaming semantics, and the migration table from the legacy servers.
 """
 from __future__ import annotations
 
@@ -232,6 +233,14 @@ class Engine:
             run, shape=dataclasses.replace(run.shape, kind="decode",
                                            seq_len=max_len,
                                            global_batch=slots))
+        # graph tier (fabric.graph): active runs advanced one round per
+        # tick, plus the lazily built multi-token verify step
+        self._run_decode = run_decode
+        self._kernel_req = kernel
+        self._graphs: List[Any] = []
+        self._graphs_done: List[Any] = []
+        self.graph_invocations = 0
+        self._jit_verify = None
         if cache == "paged":
             if num_blocks is None:
                 raise ValueError("cache='paged' requires num_blocks=")
@@ -381,6 +390,66 @@ class Engine:
         return fabric.call(self._step_name, args, state=self.params,
                            placement=self.placement)
 
+    def _session_step_call(self, *args, placement: Optional[str] = None):
+        """A graph session's step invocation — same fabric-registered
+        step as ``tick``, but at the session's own placement."""
+        self._check_alive("session step")
+        return self.fabric.call(self._step_name, args, state=self.params,
+                                placement=placement or self.placement)
+
+    def ensure_verify_step(self) -> None:
+        """Build + register the multi-token verify step lazily (paged
+        only): the same serve step compiled with ``emit="all"`` — greedy
+        token at *every* fed position instead of the last — which is what
+        a speculation round reads to accept/reject k candidates in one
+        invocation. Same geometry, same kernel, same cache layout; it
+        shares the decode step's params lease and placement guard, and
+        shows up in ``metrics()`` as ``engine.paged_verify``."""
+        if self.cache_kind != "paged":
+            raise ValueError(
+                f"the verify step rides the paged chunked-prefill shape; "
+                f"engine {self.engine_id} has cache={self.cache_kind!r}")
+        if self._jit_verify is not None:
+            return
+        bundle = make_paged_serve_step(
+            self.cfg, self._run_decode, self.mesh, slots=self.slots,
+            chunk=self.chunk, num_blocks=self.num_blocks,
+            block_size=self.block_size,
+            max_blocks_per_seq=self.max_blocks_per_seq,
+            kernel=self._kernel_req, emit="all")
+        self._jit_verify = jax.jit(bundle.fn,
+                                   in_shardings=bundle.in_shardings,
+                                   out_shardings=bundle.out_shardings,
+                                   donate_argnums=(1,))
+        fabric = self.fabric
+        if fabric is None:              # pragma: no cover - guard only
+            return
+        lease_name = self._params_lease
+
+        def invoke_verify(payload, state, placement):
+            placement = self._guarded_placement(
+                "engine.paged_verify",
+                self._tick_payload_bytes(payload[1:]), state, placement)
+            if placement == "injected":
+                fabric.lease(lease_name, jax.tree.leaves(state))
+            self._placements["engine.paged_verify"] = placement
+            return self._jit_verify(state, *payload)
+
+        fabric.register_collective("engine.paged_verify", invoke_verify,
+                                   placements=("local", "injected", "auto"))
+        self._placements["engine.paged_verify"] = self.placement
+
+    def _verify_call(self, *args, placement: Optional[str] = None):
+        """One verify-step invocation through the fabric (lazily building
+        the step on first use)."""
+        self._check_alive("verify step")
+        self.ensure_verify_step()
+        if self.fabric is None:         # pragma: no cover - guard only
+            return self._jit_verify(self.params, *args)
+        return self.fabric.call("engine.paged_verify", args,
+                                state=self.params,
+                                placement=placement or self.placement)
+
     # -- placement resolution (the cost-model side of placement="auto") ----
 
     def _params_nbytes(self) -> int:
@@ -502,6 +571,7 @@ class Engine:
         self.queue.clear()
         self.slot_entry = [None] * self.slots
         self._pending_pump.clear()
+        self._graphs.clear()            # sessions die with the pool
         self._make_state()
         if self.params is not None:
             self.cache = self._fresh_cache()
@@ -521,9 +591,11 @@ class Engine:
         return jax.device_put(fresh, self._cache_shard)
 
     def pending(self) -> bool:
-        """True while any request is queued or occupying a slot."""
+        """True while any request is queued or occupying a slot, or any
+        graph run is still looping."""
         return bool(self.queue
-                    or any(e is not None for e in self.slot_entry))
+                    or any(e is not None for e in self.slot_entry)
+                    or any(not run.done for run in self._graphs))
 
     def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
         """Serve until queue + slots drain; returns completed requests.
@@ -555,6 +627,39 @@ class Engine:
         entry.handle = RequestHandle(self, req)
         self.queue.append(entry)
         return entry.handle
+
+    def submit_graph(self, spec, inputs, *, loop_until=None,
+                     max_rounds: int = 256, resolve=None,
+                     on_node_error=None):
+        """Queue a ``fabric.graph`` run; returns its streaming
+        ``GraphHandle``. The scheduler admits the run's *node
+        invocations*: each ``tick`` advances every active graph one
+        round (all nodes once, topo order) alongside the request rows,
+        node outputs land as warm leases on this engine's fabric
+        (``graph/<gid>/<node>``), and ``handle.tokens()`` drives
+        ``tick()`` exactly like ``RequestHandle.tokens()`` does. Graphs
+        that loop (``loop_until``) keep their round cadence: one
+        speculation round per tick for the draft/verify graph."""
+        self._check_alive("submit_graph")
+        from repro.fabric.graph.executor import GraphRun
+        run = GraphRun(spec, inputs, fabric=self.fabric,
+                       loop_until=loop_until, max_rounds=max_rounds,
+                       resolve=resolve, on_node_error=on_node_error)
+        self._graphs.append(run)
+        return run.handle._bind(self)
+
+    def _tick_graphs(self) -> int:
+        """Advance every active graph run one round; returns the number
+        of node invocations fired."""
+        fired = 0
+        for run in list(self._graphs):
+            if not run.done:
+                fired += run.advance()
+            if run.done:
+                self._graphs.remove(run)
+                self._graphs_done.append(run)
+        self.graph_invocations += fired
+        return fired
 
     def _sched_state(self, block_budget: Optional[int]) -> SchedulerState:
         return SchedulerState(
@@ -609,12 +714,17 @@ class Engine:
     # ------------------------------------------------------------------
 
     def tick(self) -> int:
-        """Admit + advance every active request one step. Returns the
-        number of rows advanced."""
+        """Admit + advance every active request one step, then every
+        active graph run one round. Returns rows advanced plus node
+        invocations fired."""
         self._check_alive("tick")
         if self.cache_kind == "slots":
-            return self._tick_slots()
-        return self._tick_chunked()
+            advanced = self._tick_slots()
+        else:
+            advanced = self._tick_chunked()
+        if self._graphs:
+            advanced += self._tick_graphs()
+        return advanced
 
     # -- slots (fixed-slot contiguous cache) backend ----------------------
 
@@ -1091,7 +1201,7 @@ class Engine:
         One schema for both cache backends: scheduler progress, per-request
         records (``requests``), TTFT distribution, preemption counters, and
         the fabric/transport block; the paged backend adds its pool keys
-        (same names the legacy ``PagedServer`` reported). docs/engine.md
+        (same names the legacy paged server reported). docs/engine.md
         documents every key.
         """
         done = [e for e in self._entries_everywhere() if e.req.done]
@@ -1121,6 +1231,14 @@ class Engine:
             "requests": self._request_records(),
             **self._transport_metrics(),
         }
+        if self._graphs or self._graphs_done:
+            out["graphs"] = {
+                "active": len(self._graphs),
+                "completed": len(self._graphs_done),
+                "node_invocations": self.graph_invocations,
+                "runs": [run.metrics()
+                         for run in self._graphs + self._graphs_done],
+            }
         if self.cache_kind == "paged":
             out.update({
                 "paged_kernel": self.paged_kernel,

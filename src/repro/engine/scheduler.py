@@ -25,7 +25,7 @@ Policies are host-side and never traced — swapping one changes *order*,
 never math, so greedy outputs per request stay bitwise identical to an
 unloaded run under every policy (tests/test_engine.py).
 
-``FIFOPolicy`` reproduces the legacy ``Server``/``PagedServer`` behavior
+``FIFOPolicy`` reproduces the legacy pre-engine servers' behavior
 bitwise: strict submission order with head-of-line blocking (while the
 head cannot afford its blocks, nobody jumps the queue) and
 youngest-admitted victim selection.
@@ -104,7 +104,7 @@ class _PolicyBase:
 
 class FIFOPolicy(_PolicyBase):
     """Strict submission order with head-of-line blocking — bitwise
-    preserves the legacy ``Server``/``PagedServer`` schedule, preemption
+    preserves the legacy pre-engine servers' schedule, preemption
     included."""
 
     name = "fifo"

@@ -13,6 +13,10 @@ Public surface::
     fabric.moe_transport(mode="auto")          # collective fast path
     fabric.lease("warm", arrays, ttl_calls=8)  # rFaaS-style lease
     fabric.metrics()                           # the telemetry surface
+
+Served DAGs of fabric functions live in ``repro.fabric.graph``
+(GraphSpec/GraphRun, lease-backed edges, draft/verify speculation —
+docs/graph.md).
 """
 from repro.fabric.fabric import Fabric  # noqa: F401
 from repro.fabric.leases import Lease, LeasePool  # noqa: F401

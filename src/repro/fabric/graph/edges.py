@@ -1,0 +1,152 @@
+"""Graph-edge wire format — intermediate tensors over mailbox frames.
+
+When the router places two adjacent graph nodes on different replicas,
+the edge value crosses the fabric exactly like a migration ticket does
+(``cluster.handoff``): packed into a train of active-message frames in
+the paper's mailbox format and validated word-by-word on arrival, so a
+dropped, reordered, or corrupted edge is a loud decode error the
+router's retry loop can catch — never a silently wrong tensor feeding
+the downstream node. On arrival the value is installed as a fabric
+lease (``graph/<gid>/<node>``), which is what makes re-consumption free
+and placement affinity (``TransportEstimate.affinity_bytes``) real.
+
+Layout mirrors the handoff train: an 8-byte length prefix over JSON
+metadata (edge name, dtype, shape) + the raw array bytes, chunked into
+``payload_words`` words per frame; ``elem_id`` is the chunk index,
+``seq_no`` the train length, ``FLAG_INJECTED`` set always — an edge
+tensor *is* injected state.
+"""
+from __future__ import annotations
+
+import json
+import struct
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.message import (FLAG_INJECTED, HDR_ELEM_ID, HDR_FLAGS,
+                                HDR_FUNC_ID, HDR_PAYLOAD_WORDS, HDR_SEQ_NO,
+                                HDR_SRC_RANK, HDR_STATE_WORDS, FrameSpec,
+                                frame_valid, pack_frame)
+
+__all__ = ["GRAPH_FUNC_ID", "EDGE_SPEC", "edge_nbytes", "encode_edge",
+           "decode_edge"]
+
+# func_id of the graph-edge handler in the cluster's frame lane — beside
+# the migration handler (0x7C), far above the dense per-lane jam ids.
+GRAPH_FUNC_ID = 0x7D
+
+# Same 4 KiB geometry as HANDOFF_SPEC: edge values (k candidate tokens,
+# small logit rows) almost always fit one frame.
+EDGE_SPEC = FrameSpec(got_slots=4, state_words=0, payload_words=1008)
+
+_PREFIX = struct.Struct("<II")          # (meta_bytes, data_bytes)
+
+
+def _as_array(value) -> np.ndarray:
+    arr = np.asarray(value)
+    if arr.dtype == object:
+        raise TypeError(
+            f"graph edges carry numeric tensors; got dtype=object "
+            f"({type(value).__name__})")
+    return np.ascontiguousarray(arr)
+
+
+def edge_nbytes(value) -> int:
+    """Wire bytes of an edge value — the affinity axis's unit."""
+    return int(_as_array(value).nbytes)
+
+
+def encode_edge(name: str, value) -> List[np.ndarray]:
+    """Pack one edge value into an ordered train of mailbox frames."""
+    arr = _as_array(value)
+    meta = json.dumps({
+        "name": name,
+        "dtype": str(arr.dtype),
+        "shape": list(arr.shape),
+    }).encode("utf-8")
+    data = arr.tobytes()
+    blob = _PREFIX.pack(len(meta), len(data)) + meta + data
+    pad = -len(blob) % 4
+    words = np.frombuffer(blob + b"\x00" * pad, dtype="<i4")
+
+    pw = EDGE_SPEC.payload_words
+    n_frames = max(1, -(-len(words) // pw))
+    frames = []
+    for i in range(n_frames):
+        chunk = words[i * pw:(i + 1) * pw]
+        if len(chunk) < pw:
+            chunk = np.concatenate(
+                [chunk, np.zeros(pw - len(chunk), np.int32)])
+        frames.append(np.asarray(pack_frame(
+            EDGE_SPEC, func_id=GRAPH_FUNC_ID, elem_id=i,
+            seq_no=n_frames, flags=FLAG_INJECTED,
+            payload_words=np.ascontiguousarray(chunk))))
+    return frames
+
+
+def decode_edge(frames: Sequence[np.ndarray]) -> Tuple[str, np.ndarray]:
+    """Validate + reassemble a frame train back into (name, value)."""
+    if not frames:
+        raise ValueError("empty edge train: no frames to decode")
+    offs = EDGE_SPEC.offsets()
+    o_usr = offs["usr"]
+    pw = EDGE_SPEC.payload_words
+    chunks = []
+    for i, frame in enumerate(frames):
+        arr = np.asarray(frame)
+        if arr.shape != (EDGE_SPEC.total_words,):
+            raise ValueError(
+                f"edge frame {i}: shape {arr.shape}, expected "
+                f"({EDGE_SPEC.total_words},)")
+        if not bool(frame_valid(EDGE_SPEC, arr)):
+            raise ValueError(
+                f"edge frame {i}: bad magic or SIG checksum (corrupt or "
+                f"torn frame — refusing the edge value)")
+        if int(arr[HDR_FUNC_ID]) != GRAPH_FUNC_ID:
+            raise ValueError(
+                f"edge frame {i}: func_id={int(arr[HDR_FUNC_ID])} is not "
+                f"the graph-edge handler ({GRAPH_FUNC_ID})")
+        if int(arr[HDR_ELEM_ID]) != i:
+            raise ValueError(
+                f"edge frame {i}: elem_id={int(arr[HDR_ELEM_ID])} — the "
+                f"train is reordered or missing a frame")
+        if int(arr[HDR_SEQ_NO]) != len(frames):
+            raise ValueError(
+                f"edge frame {i}: train length {int(arr[HDR_SEQ_NO])} != "
+                f"{len(frames)} frames received (truncated edge)")
+        if int(arr[HDR_PAYLOAD_WORDS]) != pw:
+            raise ValueError(
+                f"edge frame {i}: payload_words="
+                f"{int(arr[HDR_PAYLOAD_WORDS])} != spec {pw}")
+        if int(arr[HDR_STATE_WORDS]) != EDGE_SPEC.state_words:
+            raise ValueError(
+                f"edge frame {i}: state_words={int(arr[HDR_STATE_WORDS])} "
+                f"!= spec {EDGE_SPEC.state_words}")
+        if int(arr[HDR_SRC_RANK]) != 0:
+            raise ValueError(
+                f"edge frame {i}: src_rank={int(arr[HDR_SRC_RANK])} (edge "
+                f"trains ride the in-process lane: rank 0)")
+        if int(arr[HDR_FLAGS]) != FLAG_INJECTED:
+            raise ValueError(
+                f"edge frame {i}: flags {int(arr[HDR_FLAGS]):#x} (edge "
+                f"tensors always ride FLAG_INJECTED)")
+        if np.any(arr[offs["got"]:offs["state"]] != 0):
+            raise ValueError(
+                f"edge frame {i}: non-zero GOT words (corrupt frame)")
+        if np.any(arr[offs["sig"] + 2:] != 0):
+            raise ValueError(
+                f"edge frame {i}: non-zero alignment padding "
+                f"(corrupt frame)")
+        chunks.append(arr[o_usr:o_usr + pw])
+    blob = np.concatenate(chunks).astype("<i4").tobytes()
+    meta_len, data_len = _PREFIX.unpack_from(blob)
+    if _PREFIX.size + meta_len + data_len > len(blob):
+        raise ValueError(
+            f"edge declares {meta_len}+{data_len} payload bytes but the "
+            f"train carries only {len(blob) - _PREFIX.size}")
+    meta = json.loads(blob[_PREFIX.size:_PREFIX.size + meta_len])
+    off = _PREFIX.size + meta_len
+    value = np.frombuffer(blob[off:off + data_len],
+                          dtype=meta["dtype"]).reshape(meta["shape"])
+    return meta["name"], value

@@ -1,1 +1,6 @@
-"""Distributed runtime: sharding rules, fault-tolerant trainer, server."""
+"""Distributed runtime: sharding rules, fault-tolerant trainer, serve steps.
+
+(The serving classes live in ``repro.engine``; the old
+``runtime/server.py`` shims are gone — docs/engine.md has the migration
+table.)
+"""

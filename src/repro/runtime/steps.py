@@ -368,7 +368,8 @@ def make_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh,
 def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
                           slots: int, chunk: int, num_blocks: int,
                           block_size: int, max_blocks_per_seq: int,
-                          kernel: str = "auto") -> StepBundle:
+                          kernel: str = "auto",
+                          emit: str = "last") -> StepBundle:
     """One step through the paged pool for ``slots`` request rows.
 
     fn(params, cache, tokens (slots, chunk), block_tables
@@ -377,6 +378,17 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
     each row's last *valid* column; rows mid-prefill get a token the
     scheduler ignores. The same compiled fn serves decode rows (n_valid=1),
     chunked-prefill rows (n_valid up to chunk), and idle rows (n_valid=0).
+
+    ``emit="all"`` is the speculative-decoding *verify* wiring
+    (fabric.graph): the step instead returns the greedy argmax at **every**
+    chunk column, shape ``(slots, chunk)`` — column ``i`` is the target's
+    next-token choice given the row's resident prefix plus the fed tokens
+    through column ``i``. Verifying k drafted tokens is then one call of
+    the existing chunked-prefill shape (``n_valid = k + 1``): compare
+    column ``i`` against draft token ``i + 1``. The per-position math is
+    identical to ``emit="last"`` (same forward, same kernel, same cache
+    writes) — only the argmax reduction widens — which is what makes
+    speculation bitwise output-neutral against target-only decode.
 
     ``kernel`` selects the paged-attention path (``"pallas"``: the
     stash-resident block-table kernel; ``"ref"``: gather-then-dense;
@@ -394,6 +406,8 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
     steal expert capacity from real tokens (docs/fabric.md).
     """
     assert not cfg.is_encoder, "encoder-only arch has no decode step"
+    if emit not in ("last", "all"):
+        raise ValueError(f"emit must be 'last' or 'all', got {emit!r}")
     rules, params_shapes, axes, pspecs, pshard = sharding_ctx(cfg, run, mesh)
     paged_kernel = paged_attention_lib.resolve_kernel(
         kernel, n_devices=mesh.devices.size)
@@ -417,6 +431,10 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
             cfg, params, tokens, cache=cache, paged=layout,
             paged_kernel=kernel_fn,
             moe_transport=transport, constrain=constrain)
+        if emit == "all":
+            # verify wiring: greedy choice at every fed position
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return next_tok, new_cache                        # (slots, chunk)
         last = jnp.maximum(n_valid - 1, 0)
         last_logits = jnp.take_along_axis(
             logits, last[:, None, None], axis=1)[:, 0]        # (slots, V)
@@ -444,11 +462,12 @@ def make_paged_serve_step(cfg: ModelConfig, run: RunConfig, mesh: Mesh, *,
         in_shardings=in_sh,
         out_shardings=(rep, cache_shard),
         abstract_inputs=abstract,
-        meta=dict(rules=rules, pspecs=pspecs, axes=axes, kind="paged_decode",
+        meta=dict(rules=rules, pspecs=pspecs, axes=axes,
+                  kind="paged_decode" if emit == "last" else "paged_verify",
                   cache=cache_shapes, transport_log=transport_log,
                   fabric=fabric, block_size=block_size,
                   num_blocks=num_blocks, chunk=chunk, slots=slots,
-                  paged_kernel=paged_kernel),
+                  paged_kernel=paged_kernel, emit=emit),
     )
 
 

@@ -1,13 +1,17 @@
-"""Engine API tests (ISSUE 5): legacy parity, scheduler policies,
-streaming, unified metrics, and the deprecation contract.
+"""Engine API tests (ISSUE 5): schedule determinism, scheduler
+policies, streaming, and unified metrics.
 
-Parity ground rules: under ``FIFOPolicy`` the engine must reproduce the
-legacy ``Server``/``PagedServer`` *schedule* — admission order, tick
-counts, preemption counts — and emit bitwise-identical greedy tokens,
-including through preemption-and-recompute, on single- and multi-device
-meshes ((1,4) and (2,2) over the conftest's 4 simulated CPU devices).
-Reordering policies (priority/SJF) must change admission order without
-changing any request's tokens (scheduling decides *when*, never *what*).
+Determinism ground rules: under ``FIFOPolicy`` two independently
+constructed engines serving the same workload must produce the *same
+schedule* — admission order, tick counts, preemption counts — and emit
+bitwise-identical greedy tokens, including through
+preemption-and-recompute, on single- and multi-device meshes ((1,4) and
+(2,2) over the conftest's 4 simulated CPU devices). Reordering policies
+(priority/SJF) must change admission order without changing any
+request's tokens (scheduling decides *when*, never *what*). The legacy
+``Server``/``PagedServer`` shims these rules were first written against
+are gone (docs/engine.md has the migration table); the determinism
+tests are their permanent replacement.
 """
 import dataclasses
 
@@ -23,7 +27,6 @@ from repro.configs.registry import get_smoke
 from repro.engine import (FIFOPolicy, PriorityPolicy, SJFPolicy, Engine,
                           Request, SchedulerState, resolve_policy)
 from repro.models import model as model_lib
-from repro.runtime.server import PagedServer, Server
 
 
 @pytest.fixture(scope="module")
@@ -93,9 +96,11 @@ def _schedule_fingerprint(server_like):
 
 @pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
 def test_paged_engine_matches_legacy_fifo_with_preemption(dp, tp):
-    """Engine(cache='paged') under FIFO == legacy PagedServer bitwise —
-    same tokens, same admission order, same tick/preemption counts — on
-    multi-device meshes, with the preemption path exercised."""
+    """Two independent Engine(cache='paged') instances under FIFO agree
+    bitwise — same tokens, same admission order, same tick/preemption
+    counts — on multi-device meshes, with the preemption path
+    exercised. (Formerly the legacy-PagedServer parity criterion; the
+    shim is gone, determinism against a twin is the invariant.)"""
     cfg = get_smoke("llama3.2-1b")
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
@@ -110,7 +115,8 @@ def test_paged_engine_matches_legacy_fifo_with_preemption(dp, tp):
             eng.submit(Request(rid, p, max_new_tokens=14))
         eng.run_until_drained()
 
-        legacy = PagedServer(cfg, run, mesh, **kw)
+        legacy = Engine(cfg, run, mesh, cache="paged", scheduler="fifo",
+                        **kw)
         legacy.load_params(eng.params)
         for rid, p in enumerate(prompts):
             legacy.submit(Request(rid, p, max_new_tokens=14))
@@ -121,8 +127,9 @@ def test_paged_engine_matches_legacy_fifo_with_preemption(dp, tp):
 
 @pytest.mark.parametrize("dp,tp", [(1, 4), (2, 2)])
 def test_slots_engine_matches_legacy_fifo(dp, tp):
-    """Engine(cache='slots') under FIFO == legacy Server bitwise on
-    multi-device meshes (two admission waves over 2 slots)."""
+    """Two independent Engine(cache='slots') instances under FIFO agree
+    bitwise on multi-device meshes (two admission waves over 2
+    slots)."""
     cfg = get_smoke("llama3.2-1b")
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
@@ -137,7 +144,8 @@ def test_slots_engine_matches_legacy_fifo(dp, tp):
             eng.submit(Request(rid, p, max_new_tokens=4))
         done_e = eng.run_until_drained()
 
-        legacy = Server(cfg, run, mesh, slots=2, max_len=32)
+        legacy = Engine(cfg, run, mesh, cache="slots", slots=2,
+                        max_len=32)
         legacy.load_params(eng.params)
         for rid, p in enumerate(prompts):
             legacy.submit(Request(rid, p, max_new_tokens=4))
@@ -457,24 +465,15 @@ def test_request_arrival_tick_priority_and_ttft_records(setup):
 
 
 # ---------------------------------------------------------------------------
-# deprecation contract (the pytest.ini exemptions, proven to fire)
+# deprecation contract: the PR-5 shims are GONE, not just deprecated
 # ---------------------------------------------------------------------------
 
-def test_server_shim_warns(setup):
-    cfg, run, mesh, _ = setup
-    with pytest.warns(DeprecationWarning,
-                      match="repro.runtime.server.Server is deprecated"):
-        with mesh:
-            Server(cfg, run, mesh, slots=1, max_len=32)
-
-
-def test_paged_server_shim_warns(setup):
-    cfg, run, mesh, _ = setup
-    with pytest.warns(DeprecationWarning,
-                      match="repro.runtime.server.PagedServer is deprecated"):
-        with mesh:
-            PagedServer(cfg, run, mesh, slots=1, max_len=32, num_blocks=8,
-                        block_size=4)
+def test_server_shims_removed():
+    """``repro.runtime.server`` was deleted once every caller had moved
+    to ``repro.engine`` — importing it must fail loudly, not resurrect a
+    second serving surface."""
+    with pytest.raises(ModuleNotFoundError):
+        import repro.runtime.server  # noqa: F401
 
 
 def test_engine_rejects_bad_cache_kind(setup):

@@ -1,0 +1,671 @@
+"""``repro.fabric.graph`` tests (ISSUE 10): spec validation properties,
+edge wire format, served DAGs, and the draft/verify speculation graph.
+
+Ground rules:
+
+* every malformed graph is rejected at ``GraphSpec.build`` / bind time
+  with an error naming the offending node or edge — **never** at
+  trace/serve time (the seeded random-DAG property suite drives this
+  with generated graphs plus targeted mutations);
+* speculation is **bitwise output-neutral**: the draft→verify graph must
+  emit exactly the target-only greedy tokens for k ∈ {1, 2, 4}, through
+  mid-graph preemption and forced failover of the verify node
+  (``repro.faults`` both ways: an injected ``FaultPlan`` kill and a
+  mid-call death raised from the engine's chaos seam);
+* node placement is locality-aware: the verify node lands where its
+  draft node's output lease and its own KV lease live, even when that
+  replica is the more loaded one (the Seriema-style affinity axis,
+  logged per decision in ``TransportEstimate.affinity_bytes``).
+"""
+import dataclasses
+import random
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.configs.base import SHAPES, RunConfig, ShardingConfig
+from repro.configs.registry import get_smoke
+from repro.cluster import Replica, Router
+from repro.engine import Engine, Request
+from repro.fabric.graph import (EDGE_SPEC, DecodeSession, GraphRun,
+                                GraphSpec, GraphValidationError, NgramDraft,
+                                Node, SpeculativeDecoder, TensorSpec,
+                                decode_edge, draft_verify_spec,
+                                edge_nbytes, encode_edge)
+from repro.faults import FaultInjector, FaultPlan
+from repro.faults.errors import EngineFailedError
+
+# ---------------------------------------------------------------------------
+# seeded random-DAG generator (the property-suite workhorse; the container
+# has no hypothesis, so shrinking is traded for deterministic seeds)
+# ---------------------------------------------------------------------------
+
+N_PROPERTY_CASES = 25
+
+
+def _sum_fn(*args):
+    return int(sum(int(a) for a in args))
+
+
+def _random_dag(rng: random.Random):
+    """A random valid DAG: every node consumes a non-empty subset of the
+    names declared before it (graph inputs or earlier nodes)."""
+    n_inputs = rng.randint(1, 3)
+    n_nodes = rng.randint(1, 6)
+    inputs = tuple(f"in{i}" for i in range(n_inputs))
+    avail = list(inputs)
+    nodes = []
+    for i in range(n_nodes):
+        k = rng.randint(1, min(3, len(avail)))
+        srcs = tuple(rng.sample(avail, k))
+        name = f"n{i}"
+        nodes.append(Node(name, _sum_fn, inputs=srcs))
+        avail.append(name)
+    outputs = (nodes[-1].name,)
+    return inputs, nodes, outputs
+
+
+def _reference_eval(inputs, nodes, values):
+    vals = dict(values)
+    for node in nodes:
+        vals[node.name] = _sum_fn(*(vals[s] for s in node.inputs))
+    return vals
+
+
+@pytest.mark.parametrize("seed", range(N_PROPERTY_CASES))
+def test_property_random_dags_build_and_run(seed):
+    """Every generated valid DAG builds, topo-sorts consistently (each
+    node after all of its producers), and a host-side run computes the
+    same values as naive declaration-order evaluation."""
+    rng = random.Random(seed)
+    inputs, nodes, outputs = _random_dag(rng)
+    spec = GraphSpec.build(f"rand{seed}", nodes, inputs=inputs,
+                           outputs=outputs)
+    pos = {name: i for i, name in enumerate(spec.order)}
+    by_name = spec.node_map
+    for node in nodes:
+        for src in node.inputs:
+            if src in by_name:
+                assert pos[src] < pos[node.name], (src, node.name)
+    values = {inp: rng.randint(0, 100) for inp in inputs}
+    run = GraphRun(spec, values)
+    run.advance()
+    want = _reference_eval(inputs, nodes, values)
+    assert run.result() == {out: want[out] for out in outputs}
+    assert run.done and run.round == 1
+    assert len(run.invocations) == len(nodes)
+
+
+@pytest.mark.parametrize("seed", range(N_PROPERTY_CASES))
+def test_property_cycle_injected_into_random_dag_rejected(seed):
+    """Rewiring any random DAG so an early node consumes a later one
+    must be rejected with the cycle spelled out."""
+    rng = random.Random(1000 + seed)
+    inputs, nodes, outputs = _random_dag(rng)
+    if len(nodes) < 2:
+        nodes.append(Node("extra", _sum_fn, inputs=(nodes[0].name,)))
+    # close a guaranteed 2-cycle between the first and last nodes
+    first, last = nodes[0], nodes[-1]
+    nodes[0] = dataclasses.replace(first,
+                                   inputs=first.inputs + (last.name,))
+    if first.name not in last.inputs:
+        nodes[-1] = dataclasses.replace(
+            nodes[-1], inputs=nodes[-1].inputs + (first.name,))
+    with pytest.raises(GraphValidationError, match="cycle"):
+        GraphSpec.build(f"cyc{seed}", nodes, inputs=inputs,
+                        outputs=outputs)
+
+
+@pytest.mark.parametrize("seed", range(N_PROPERTY_CASES))
+def test_property_dangling_edge_rejected_by_name(seed):
+    """Renaming one consumed edge to a ghost must fail naming BOTH ends
+    of the dangling edge."""
+    rng = random.Random(2000 + seed)
+    inputs, nodes, outputs = _random_dag(rng)
+    victim_i = rng.randrange(len(nodes))
+    victim = nodes[victim_i]
+    ghost = f"ghost{seed}"
+    new_inputs = (ghost,) + victim.inputs[1:]
+    nodes[victim_i] = dataclasses.replace(victim, inputs=new_inputs)
+    with pytest.raises(GraphValidationError) as err:
+        GraphSpec.build(f"dang{seed}", nodes, inputs=inputs,
+                        outputs=outputs)
+    assert ghost in str(err.value) and victim.name in str(err.value)
+    assert "dangling edge" in str(err.value)
+
+
+@pytest.mark.parametrize("seed", range(N_PROPERTY_CASES))
+def test_property_duplicate_node_name_rejected(seed):
+    rng = random.Random(3000 + seed)
+    inputs, nodes, outputs = _random_dag(rng)
+    dupe = dataclasses.replace(nodes[rng.randrange(len(nodes))])
+    with pytest.raises(GraphValidationError,
+                       match=f"duplicate node name {dupe.name!r}"):
+        GraphSpec.build(f"dup{seed}", nodes + [dupe], inputs=inputs,
+                        outputs=outputs)
+
+
+@pytest.mark.parametrize("seed", range(N_PROPERTY_CASES))
+def test_property_shape_mismatched_edge_rejected(seed):
+    """Declaring incompatible specs on any node→node edge must fail at
+    build time, naming the edge and both contracts."""
+    rng = random.Random(4000 + seed)
+    inputs, nodes, outputs = _random_dag(rng)
+    # find (or make) a node→node edge
+    by_name = {n.name: i for i, n in enumerate(nodes)}
+    edge = next(((s, n) for n in nodes for s in n.inputs if s in by_name),
+                None)
+    if edge is None:
+        nodes.append(Node("tail", _sum_fn, inputs=(nodes[0].name,)))
+        edge = (nodes[0].name, nodes[-1])
+    src, consumer = edge
+    ci = by_name.get(consumer.name, len(nodes) - 1)
+    si = by_name[src]
+    nodes[si] = dataclasses.replace(nodes[si],
+                                    out_spec=TensorSpec((4,), "int32"))
+    bad = rng.choice([TensorSpec((5,), "int32"),
+                      TensorSpec((4,), "float32"),
+                      TensorSpec((4, 1), "int32")])
+    nodes[ci] = dataclasses.replace(nodes[ci], in_specs={src: bad})
+    with pytest.raises(GraphValidationError) as err:
+        GraphSpec.build(f"mis{seed}", nodes, inputs=inputs,
+                        outputs=outputs)
+    msg = str(err.value)
+    assert f"{src!r}->{consumer.name!r}" in msg
+    assert "int32[4]" in msg and bad.describe() in msg
+
+
+def test_missing_input_rejected_before_any_node_runs():
+    """A missing graph input fails at bind time naming the consuming
+    nodes — node fns must never have fired."""
+    fired = []
+    nodes = [Node("a", lambda x: fired.append("a") or 1, inputs=("p",)),
+             Node("b", lambda x: fired.append("b") or 2, inputs=("a",))]
+    spec = GraphSpec.build("g", nodes, inputs=("p",), outputs=("b",))
+    with pytest.raises(GraphValidationError,
+                       match=r"missing input 'p' \(consumed by nodes "
+                             r"\['a'\]\)"):
+        GraphRun(spec, {})
+    with pytest.raises(GraphValidationError, match="unknown inputs"):
+        GraphRun(spec, {"p": 1, "zzz": 2})
+    assert fired == []
+
+
+def test_input_edge_spec_checked_at_bind_time():
+    spec = GraphSpec.build(
+        "g", [Node("a", _sum_fn, inputs=("p",),
+                   in_specs={"p": TensorSpec((None,), "int32")})],
+        inputs=("p",), outputs=("a",))
+    with pytest.raises(GraphValidationError, match="'p'->'a'"):
+        GraphRun(spec, {"p": np.zeros((3,), np.float32)})
+    GraphRun(spec, {"p": np.zeros((3,), np.int32)})   # ok
+
+
+def test_targeted_build_rejections():
+    """The full rejection catalogue, each error naming its offender."""
+    a = Node("a", _sum_fn, inputs=("p",))
+    with pytest.raises(GraphValidationError, match="has no nodes"):
+        GraphSpec.build("g", [], inputs=("p",))
+    with pytest.raises(GraphValidationError, match="duplicate graph inputs"):
+        GraphSpec.build("g", [a], inputs=("p", "p"))
+    with pytest.raises(GraphValidationError, match="shadows the graph input"):
+        GraphSpec.build("g", [Node("p", _sum_fn, inputs=("p",))],
+                        inputs=("p",))
+    with pytest.raises(GraphValidationError, match="placement 'remote'"):
+        GraphSpec.build("g", [dataclasses.replace(a, placement="remote")],
+                        inputs=("p",))
+    with pytest.raises(GraphValidationError, match="fn must be a callable"):
+        GraphSpec.build("g", [Node("a", 42, inputs=("p",))], inputs=("p",))
+    with pytest.raises(GraphValidationError, match="consumes itself"):
+        GraphSpec.build("g", [Node("a", _sum_fn, inputs=("a",))],
+                        inputs=("p",))
+    with pytest.raises(GraphValidationError,
+                       match="output 'zzz' names neither"):
+        GraphSpec.build("g", [a], inputs=("p",), outputs=("zzz",))
+    with pytest.raises(GraphValidationError,
+                       match="in_spec for 'q', which is not one of"):
+        GraphSpec.build(
+            "g", [dataclasses.replace(
+                a, in_specs={"q": TensorSpec((1,), "int32")})],
+            inputs=("p",))
+
+
+def test_cycle_error_prints_the_cycle():
+    nodes = [Node("a", _sum_fn, inputs=("b",)),
+             Node("b", _sum_fn, inputs=("a",))]
+    with pytest.raises(GraphValidationError, match="a -> b -> a|b -> a -> b"):
+        GraphSpec.build("g", nodes)
+
+
+# ---------------------------------------------------------------------------
+# edge wire format (cross-replica graph edges ride mailbox frame trains)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("value", [
+    np.arange(7, dtype=np.int32),
+    np.linspace(0, 1, 33, dtype=np.float32).reshape(3, 11),
+    np.array([], dtype=np.int32),
+])
+def test_edge_roundtrip(value):
+    frames = encode_edge("graph/0/draft", value)
+    name, got = decode_edge(frames)
+    assert name == "graph/0/draft"
+    assert got.dtype == value.dtype and got.shape == value.shape
+    np.testing.assert_array_equal(got, value)
+    assert edge_nbytes(value) == value.nbytes
+
+
+def test_edge_large_value_spans_frames():
+    value = np.arange(5000, dtype=np.int32)       # > one frame's payload
+    frames = encode_edge("e", value)
+    assert len(frames) > 1
+    _, got = decode_edge(frames)
+    np.testing.assert_array_equal(got, value)
+
+
+def test_edge_corruption_detected():
+    value = np.arange(64, dtype=np.int32)
+    frames = [np.array(f) for f in encode_edge("e", value)]
+    usr = EDGE_SPEC.offsets()["usr"]
+    bad = [f.copy() for f in frames]
+    bad[0][usr + 5] ^= 0xFF                       # flip one payload word
+    with pytest.raises(ValueError, match="magic or SIG checksum"):
+        decode_edge(bad)
+    bad = [f.copy() for f in frames]
+    bad[0][0] = 0                                 # clobber the header magic
+    with pytest.raises(ValueError, match="magic or SIG checksum"):
+        decode_edge(bad)
+    with pytest.raises(ValueError, match="empty edge train"):
+        decode_edge([])
+    two = encode_edge("big", np.arange(5000, dtype=np.int32))
+    with pytest.raises(ValueError, match="train length|truncated"):
+        decode_edge(two[:-1])                     # drop the last frame
+
+
+# ---------------------------------------------------------------------------
+# engine fixtures (module-scoped: compile once) + greedy baselines
+# ---------------------------------------------------------------------------
+
+ENG_KW = dict(cache="paged", slots=3, max_len=48, num_blocks=24,
+              block_size=4, chunk=6)                  # chunk=6 => k<=5
+MAX_NEW = 10
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return compat.make_mesh((1, 1), ("data", "model"))
+
+
+def _mk_engine(arch, mesh, engine_id, params=None):
+    cfg = get_smoke(arch)
+    run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
+                    sharding=ShardingConfig(fsdp_params=False,
+                                            seq_axis=None))
+    with mesh:
+        eng = Engine(cfg, run, mesh, engine_id=engine_id, **ENG_KW)
+        if params is not None:
+            eng.load_params(params)
+        else:
+            eng.load_params()
+    return cfg, eng
+
+
+@pytest.fixture(scope="module")
+def fleet(mesh):
+    """Three granite-class targets (t1/t2 behind routers, ref for
+    baselines) sharing one weight tree, plus a llama draft engine."""
+    cfg, ref = _mk_engine("granite-20b", mesh, "ref")
+    _, t1 = _mk_engine("granite-20b", mesh, "t1", params=ref.params)
+    _, t2 = _mk_engine("granite-20b", mesh, "t2", params=ref.params)
+    dcfg, d1 = _mk_engine("llama3.2-1b", mesh, "d1")
+    baselines = {}
+    return dict(cfg=cfg, dcfg=dcfg, ref=ref, t1=t1, t2=t2, d1=d1,
+                mesh=mesh, baselines=baselines)
+
+
+def _prompt(fleet, seed=0, n=6):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, fleet["cfg"].vocab_size, size=(n,)).astype(
+        np.int32)
+
+
+def _baseline(fleet, prompt, max_new=MAX_NEW):
+    """Target-only greedy decode on the reference engine (cached)."""
+    key = (tuple(int(t) for t in prompt), max_new)
+    if key not in fleet["baselines"]:
+        ref = fleet["ref"]
+        with fleet["mesh"]:
+            h = ref.submit(Request(rid=9000 + len(fleet["baselines"]),
+                                   prompt=list(prompt),
+                                   max_new_tokens=max_new))
+            fleet["baselines"][key] = list(h.tokens())
+    return fleet["baselines"][key]
+
+
+def _fresh(*engines):
+    for eng in engines:
+        eng.restart()
+
+
+# ---------------------------------------------------------------------------
+# served DAGs through Engine.submit_graph
+# ---------------------------------------------------------------------------
+
+def test_generic_dag_served_by_engine(fleet):
+    """A plain (non-speculative) numpy DAG runs as engine-admitted node
+    invocations and lands in the unified metrics schema."""
+    eng = fleet["t1"]
+    _fresh(eng)
+    spec = GraphSpec.build(
+        "pipeline",
+        [Node("scale", lambda p: p * 2, inputs=("prompt",)),
+         Node("shift", lambda s: s + 1, inputs=("scale",)),
+         Node("reduce", lambda a, b: {"total": int(a.sum() + b.sum()),
+                                      "toks": [int(b[0])]},
+              inputs=("scale", "shift"), emits="toks")],
+        inputs=("prompt",), outputs=("reduce", "shift"))
+    prompt = np.arange(4, dtype=np.int32)
+    handle = eng.submit_graph(spec, {"prompt": prompt})
+    assert eng.pending()
+    out = handle.result()
+    assert out["reduce"]["total"] == int((prompt * 2).sum()
+                                         + (prompt * 2 + 1).sum())
+    np.testing.assert_array_equal(out["shift"], prompt * 2 + 1)
+    assert list(handle.tokens()) == [1]           # 2*0+1, streamed
+    g = eng.metrics()["graphs"]
+    assert g["completed"] >= 1 and g["node_invocations"] >= 3
+    run = next(r for r in g["runs"] if r["gid"] == handle.gid)
+    assert run["done"] and run["rounds"] == 1
+    assert [i["node"] for i in run["invocations"]] == ["scale", "shift",
+                                                       "reduce"]
+
+
+def test_draft_verify_spec_is_a_valid_two_node_graph():
+    spec = draft_verify_spec(draft_fn=lambda p: None,
+                             verify_fn=lambda p, d: None)
+    assert spec.order == ("draft", "verify")
+    assert spec.edges() == [("prompt", "draft"), ("prompt", "verify"),
+                            ("draft", "verify")]
+    # the draft→verify edge contract is declared on both ends
+    assert spec.node_map["draft"].out_spec.describe() == "int32[?]"
+    assert spec.node_map["verify"].in_specs["draft"].describe() == "int32[?]"
+
+
+def test_ngram_draft_proposes_exactly_k():
+    d = NgramDraft(max_ngram=3)
+    known = [1, 2, 3, 1, 2]
+    for k in (1, 2, 4):
+        cands = d.propose(known, k)
+        assert len(cands) == k
+    assert d.propose(known, 2)[0] == 3            # suffix [1,2] → 3
+    assert d.propose([7], 3) == [7, 7, 7]         # nothing to match: pad
+
+
+# ---------------------------------------------------------------------------
+# speculation exactness (the acceptance bar): bitwise vs target-only
+# greedy decode, k ∈ {1, 2, 4}, preemption and failover included
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_speculation_bitwise_exact_ngram(fleet, k):
+    eng = fleet["t1"]
+    _fresh(eng)
+    prompt = _prompt(fleet)
+    base = _baseline(fleet, prompt)
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(target=eng, k=k)
+        got = list(dec.submit(prompt, MAX_NEW).tokens())
+    assert got == base
+    stats = dec.tasks[0].stats.as_dict()
+    assert stats["emitted"] == MAX_NEW
+    assert stats["proposed"] == stats["rounds"] * k
+    # every verify step emits >= 1 token, so never worse than baseline
+    assert stats["target_steps_per_token"] <= 1.0
+
+
+def test_speculation_bitwise_exact_model_draft(fleet):
+    """llama3.2-1b (its own weights, its own session) drafting for the
+    granite-class target — cross-model, still bitwise."""
+    eng, d1 = fleet["t1"], fleet["d1"]
+    _fresh(eng, d1)
+    prompt = _prompt(fleet, seed=1)
+    base = _baseline(fleet, prompt)
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(target=eng, draft=d1, k=2)
+        got = list(dec.submit(prompt, MAX_NEW).tokens())
+    assert got == base
+    assert dec.tasks[0].stats.draft_steps > 0
+
+
+def test_speculation_exact_through_midgraph_preemption(fleet):
+    """Evicting the verify session's blocks mid-run (the engine's
+    preemption primitive) forces a chunked re-prefill; the stream must
+    stay bitwise."""
+    eng = fleet["t1"]
+    _fresh(eng)
+    prompt = _prompt(fleet, seed=2)
+    base = _baseline(fleet, prompt)
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(target=eng, k=2)
+        handle = dec.submit(prompt, MAX_NEW)
+        got = []
+        for tok in handle.tokens():
+            got.append(tok)
+            if len(got) == 3:
+                dec.tasks[0].verify_sess.preempt()        # state.evict
+    assert got == base
+
+
+def test_decode_session_rollback_is_positionally_exact(fleet):
+    """accept() must rewind pos so rejected speculative rows are
+    recomputed: after accepting fewer tokens than were fed, the next
+    verify still matches the target's greedy continuation."""
+    eng = fleet["t1"]
+    _fresh(eng)
+    prompt = _prompt(fleet, seed=3)
+    base = _baseline(fleet, prompt, 4)
+    with fleet["mesh"]:
+        sess = DecodeSession(eng, [int(t) for t in prompt])
+        sess.ensure_ready()
+        # feed garbage candidates: verify must reject them and hand back
+        # the target's own greedy tokens one bonus at a time
+        out = []
+        while len(out) < 4:
+            bad = [(int(out[-1]) if out else 0) + 1] * 2
+            a, bonus = sess.verify([b % fleet["cfg"].vocab_size
+                                    for b in bad])
+            take = ([b % fleet["cfg"].vocab_size for b in bad][:a]
+                    + [bonus])
+            out.extend(take)
+        sess.release()
+    assert out[:4] == base
+
+
+def test_k_larger_than_chunk_rejected(fleet):
+    with pytest.raises(ValueError, match="verify chunk"):
+        SpeculativeDecoder(target=fleet["t1"], k=ENG_KW["chunk"])
+
+
+# ---------------------------------------------------------------------------
+# router tier: affinity locality, warm edges, failover
+# ---------------------------------------------------------------------------
+
+def test_router_locality_verify_sticks_with_draft_lease(fleet):
+    """The regression ISSUE 10 satellite 1 demands: once round 1 lands
+    the verify node (and its KV lease + the draft edge lease) on t1,
+    later rounds must KEEP it there even when t1 is the busier replica —
+    without the affinity axis the load key would bounce it to idle t2,
+    evicting warm state every round."""
+    t1, t2 = fleet["t1"], fleet["t2"]
+    _fresh(t1, t2)
+    prompt = _prompt(fleet, seed=4)
+    base = _baseline(fleet, prompt)
+    router = Router([Replica(t1, model="target"),
+                     Replica(t2, model="target")])
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(router=router, target_model="target", k=2)
+        handle = dec.submit(prompt, MAX_NEW)
+        got = []
+        loaded = False
+        for tok in handle.tokens():
+            got.append(tok)
+            if len(got) == 3 and not loaded:
+                # pile background work onto the replica holding the leases
+                first = next(p["engine_id"]
+                             for p in router.node_placements
+                             if p["node"] == "verify")
+                assert first == "t1"              # engine_id tiebreak
+                t1.submit(Request(rid=777, prompt=list(prompt),
+                                  max_new_tokens=8))
+                loaded = True
+    assert got == base
+    recs = [p for p in router.node_placements if p["node"] == "verify"]
+    assert {p["engine_id"] for p in recs} == {"t1"}, recs
+    # the stickiness was load-defying: later decisions saw t1 busy
+    assert any(p["load"]["queue_depth"] + p["load"]["active"] > 0
+               for p in recs[3:]), recs
+    # warm rounds score affinity 0 and every decision logs the axis
+    assert recs[-1]["affinity_bytes"] == 0
+    assert all("affinity=" in p["estimate"] for p in recs)
+
+
+def test_router_self_speculation_consumes_draft_edge_warm(fleet):
+    """draft_model == target_model: the drafter is a target replica, so
+    affinity lands verify co-resident and the draft edge is consumed as
+    a warm lease — zero frames shipped; acceptance is 1.0 by
+    construction (the target drafts for itself) which is what makes the
+    steps-per-token win visible end to end."""
+    t1, t2 = fleet["t1"], fleet["t2"]
+    _fresh(t1, t2)
+    prompt = _prompt(fleet, seed=5)
+    base = _baseline(fleet, prompt)
+    router = Router([Replica(t1, model="target"),
+                     Replica(t2, model="target")])
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(router=router, target_model="target",
+                                 draft_model="target", k=2)
+        got = list(dec.submit(prompt, MAX_NEW).tokens())
+    assert got == base
+    stats = dec.tasks[0].stats.as_dict()
+    assert stats["acceptance_rate"] == 1.0
+    assert stats["target_steps_per_token"] < 1.0 / 1.3
+    rm = router.metrics()["router"]
+    assert rm["edge_local_hits"] > 0              # consumed warm
+    assert rm["edge_frames"] == 0                 # nothing shipped
+    graphs = router.metrics()["graphs"]
+    assert graphs["completed"] == 1 and graphs["node_invocations"] > 0
+
+
+def test_router_cross_model_edges_ride_frames(fleet):
+    """Distinct draft/target models can never be co-resident, so every
+    draft→verify edge must ship as validated mailbox frames."""
+    t1, d1 = fleet["t1"], fleet["d1"]
+    _fresh(t1, d1)
+    prompt = _prompt(fleet, seed=6)
+    base = _baseline(fleet, prompt)
+    router = Router([Replica(t1, model="target"),
+                     Replica(d1, model="draft")])
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(router=router, target_model="target",
+                                 draft_model="draft", k=2)
+        got = list(dec.submit(prompt, MAX_NEW).tokens())
+    assert got == base
+    rm = router.metrics()["router"]
+    assert rm["edge_frames"] > 0
+    assert rm["edge_bytes"] == rm["edge_frames"] * EDGE_SPEC.total_bytes
+    assert rm["edge_local_hits"] == 0
+
+
+def test_router_failover_via_fault_plan_kill(fleet):
+    """``repro.faults`` kills the replica hosting the verify node at a
+    scheduled tick; the node must be re-placed on the survivor, its
+    session rebuilt from the known tokens, and the stream stay
+    bitwise."""
+    t1, t2 = fleet["t1"], fleet["t2"]
+    _fresh(t1, t2)
+    prompt = _prompt(fleet, seed=7)
+    base = _baseline(fleet, prompt)
+    router = Router([Replica(t1, model="target"),
+                     Replica(t2, model="target")])
+    FaultInjector(FaultPlan(kill_at={"t1": 4})).install(router)
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(router=router, target_model="target", k=2)
+        got = list(dec.submit(prompt, MAX_NEW).tokens())
+    assert got == base
+    stats = dec.tasks[0].stats
+    assert stats.verify_rebuilds >= 1
+    moved = [p["engine_id"] for p in router.node_placements
+             if p["node"] == "verify"]
+    assert set(moved) == {"t1", "t2"}, moved
+    assert moved[0] == "t1" and moved[-1] == "t2"
+    assert router.metrics()["faults"]["injected"]["by_kind"]["kills"] == 1
+    t1.restart()                                  # revive for later tests
+
+
+def test_router_failover_on_midcall_death(fleet):
+    """The harder path: the replica dies *inside* the verify invocation
+    (raised from the engine's chaos seam between placement resolution
+    and step execution). The node-level retry must catch the
+    EngineFailedError, mark the replica failed, re-place, rebuild, and
+    keep the stream bitwise."""
+    t1, t2 = fleet["t1"], fleet["t2"]
+    _fresh(t1, t2)
+    prompt = _prompt(fleet, seed=8)
+    base = _baseline(fleet, prompt)
+    router = Router([Replica(t1, model="target"),
+                     Replica(t2, model="target")])
+    calls = {"n": 0}
+
+    def arm(eng):
+        def chaos(step_name):
+            if step_name == "engine.paged_verify":
+                calls["n"] += 1
+                if calls["n"] == 4:
+                    eng.fail("chaos: died mid verify step")
+                    raise EngineFailedError(eng.engine_id,
+                                            "chaos: died mid verify step")
+        eng.fault_hook = chaos
+
+    try:
+        with fleet["mesh"]:
+            dec = SpeculativeDecoder(router=router, target_model="target",
+                                     k=2)
+            handle = dec.submit(prompt, MAX_NEW)
+            for e in (t1, t2):
+                arm(e)
+            got = list(handle.tokens())
+    finally:
+        for e in (t1, t2):
+            e.fault_hook = None
+    assert got == base
+    stats = dec.tasks[0].stats
+    assert stats.failovers >= 1 and stats.verify_rebuilds >= 1
+    t1.restart()
+
+
+def test_engine_mode_metrics_schema(fleet):
+    """The unified-metrics satellite: graph runs and the verify step
+    surface through ``Engine.metrics()`` alongside everything else."""
+    eng = fleet["t1"]
+    _fresh(eng)
+    prompt = _prompt(fleet, seed=9)
+    with fleet["mesh"]:
+        dec = SpeculativeDecoder(target=eng, k=2)
+        list(dec.submit(prompt, 4).tokens())
+    m = eng.metrics()
+    g = m["graphs"]
+    assert set(g) == {"active", "completed", "node_invocations", "runs"}
+    assert g["active"] == 0 and g["completed"] >= 1
+    run = g["runs"][-1]
+    assert {"gid", "graph", "rounds", "done", "node_invocations",
+            "invocations"} <= set(run)
+    inv = run["invocations"][-1]
+    assert {"round", "node", "placement", "status", "engine_id",
+            "detail"} == set(inv)
+    assert inv["status"] == "ok" and inv["engine_id"] == "t1"
+    # the verify step registered on the SAME fabric as the serve steps
+    assert "engine.paged_verify" in m["fabric"]["functions"]
+    spec_m = dec.metrics()
+    assert spec_m["mode"] == "engine" and spec_m["draft"] == "ngram"
+    assert spec_m["requests"][0]["target_steps_per_token"] <= 1.0

@@ -1,4 +1,4 @@
-"""Paged serving scheduler tests (smoke model, CPU).
+"""Paged serving scheduler tests (smoke model, CPU) — Engine(cache="paged").
 
 Invariants (ISSUE 2 satellite): no block leaks across request lifecycles,
 FIFO admission under pressure, and preempted requests finishing with tokens
@@ -17,7 +17,7 @@ from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
 from repro.models import model as model_lib
-from repro.runtime.server import PagedServer, Request, Server
+from repro.engine import Engine, Request
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +41,7 @@ def _mk_server(setup, **kw):
     args = dict(slots=3, max_len=32, num_blocks=16, block_size=4, chunk=4)
     args.update(kw)
     with mesh:
-        s = PagedServer(cfg, run, mesh, **args)
+        s = Engine(cfg, run, mesh, cache="paged", **args)
         s.load_params(params)
     return s
 
@@ -137,7 +137,7 @@ def test_preempted_requests_match_unloaded_run(setup):
 
 def test_matches_fixed_slot_server_on_exact_wave(setup):
     """Equal-length single-wave workload: the fixed-slot batcher is exact, so
-    both servers must produce identical tokens."""
+    both backends must produce identical tokens."""
     cfg, run, mesh, params = setup
     rng = np.random.default_rng(4)
     prompts = [rng.integers(0, cfg.vocab_size, size=(6,)).astype(np.int32)
@@ -148,7 +148,8 @@ def test_matches_fixed_slot_server_on_exact_wave(setup):
             paged.submit(Request(rid, p, max_new_tokens=5))
         done_p = paged.run_until_drained()
 
-        contig = Server(cfg, run, mesh, slots=3, max_len=32)
+        contig = Engine(cfg, run, mesh, cache="slots", slots=3,
+                        max_len=32)
         contig.load_params(params)
         for rid, p in enumerate(prompts):
             contig.submit(Request(rid, p, max_new_tokens=5))
@@ -195,8 +196,8 @@ def test_moe_arch_served_paged_matches_reference(mesh11_module):
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
     with mesh11_module:
-        server = PagedServer(cfg, run, mesh11_module, slots=3, max_len=32,
-                             num_blocks=12, block_size=4, chunk=4)
+        server = Engine(cfg, run, mesh11_module, cache="paged", slots=3,
+                        max_len=32, num_blocks=12, block_size=4, chunk=4)
         server.load_params()
         rng = np.random.default_rng(6)
         prompts = _prompts(cfg, 3, rng, lo=5, hi=10)
@@ -271,16 +272,16 @@ def test_rejects_non_gqa_arch(setup):
     run_mla = dataclasses.replace(run, model=mla_cfg)
     with pytest.raises(ValueError, match="paged serving supports"):
         with mesh:
-            PagedServer(mla_cfg, run_mla, mesh, slots=2, max_len=32,
-                        num_blocks=8, block_size=4)
+            Engine(mla_cfg, run_mla, mesh, cache="paged", slots=2,
+                   max_len=32, num_blocks=8, block_size=4)
 
 
 def test_pool_too_small_for_one_request_rejected(setup):
     cfg, run, mesh, _ = setup
     with pytest.raises(ValueError, match="cannot hold"):
         with mesh:
-            PagedServer(cfg, run, mesh, slots=2, max_len=64,
-                        num_blocks=4, block_size=4)
+            Engine(cfg, run, mesh, cache="paged", slots=2, max_len=64,
+                   num_blocks=4, block_size=4)
 
 
 def test_request_exceeding_max_len_rejected_at_submit(setup):

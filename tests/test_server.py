@@ -1,4 +1,4 @@
-"""Batched serving runtime tests (smoke model, CPU)."""
+"""Fixed-slot serving tests (smoke model, CPU) — Engine(cache="slots")."""
 import dataclasses
 
 import jax
@@ -9,7 +9,7 @@ from repro import compat
 from repro.configs.base import SHAPES, RunConfig, ShardingConfig
 from repro.configs.registry import get_smoke
 from repro.models import model as model_lib
-from repro.runtime.server import Request, Server
+from repro.engine import Engine, Request
 
 
 @pytest.fixture(scope="module")
@@ -18,7 +18,8 @@ def server(mesh11_module):
     run = RunConfig(model=cfg, shape=SHAPES["decode_32k"],
                     sharding=ShardingConfig(fsdp_params=False, seq_axis=None))
     with mesh11_module:
-        s = Server(cfg, run, mesh11_module, slots=2, max_len=32)
+        s = Engine(cfg, run, mesh11_module, cache="slots", slots=2,
+                   max_len=32)
         s.load_params()
         yield s
 
@@ -56,7 +57,7 @@ def test_continuous_batching_overlaps(server):
 
 
 def test_greedy_decode_matches_model(server):
-    """Server greedy output == hand-rolled forward+argmax for one request."""
+    """Engine greedy output == hand-rolled forward+argmax for one request."""
     cfg = server.cfg
     rng = np.random.default_rng(2)
     prompt = rng.integers(0, cfg.vocab_size, size=(5,)).astype(np.int32)
